@@ -1,0 +1,29 @@
+"""Paper Fig. 2 — cost-accuracy frontier: Overlap@5 vs coverage for every
+method (Col-Bandit operating points = alpha_ef sweep)."""
+from __future__ import annotations
+
+from benchmarks.common import (bench_dataset, frontier_bandit,
+                               frontier_budget)
+
+
+def run(n_docs: int = 384, n_queries: int = 12, k: int = 5) -> dict:
+    ds = bench_dataset(n_docs, n_queries)
+    curves = {
+        "col-bandit": frontier_bandit(ds, k=k),
+        "col-bandit-tpu": frontier_bandit(ds, k=k, method="batched"),
+        "doc-uniform": frontier_budget(ds, k=k, method="uniform"),
+        "doc-topmargin": frontier_budget(ds, k=k, method="topmargin"),
+    }
+    print(f"\n=== Fig 2: cost-accuracy trade-off (Overlap@{k} vs coverage) ===")
+    for name, pts in curves.items():
+        print(f"  {name}:")
+        for p in pts:
+            knob = p.get("alpha_ef", p.get("budget"))
+            print(f"    knob={knob:6.2f} coverage={100*p['coverage']:5.1f}% "
+                  f"overlap={p['overlap']:.3f} "
+                  f"flops_saving={p['flops_saving']:.2f}x")
+    return curves
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Beyond-paper: generalized Col-Bandit on the recsys retrieval_cand shape.
+
+The paper's machinery needs only a sum-decomposable score with bounded
+components; FM candidate scoring decomposes over context fields
+(core/generalized.py). We run finite-population Top-K identification over
+1 query x N candidates and report coverage/overlap vs exact scoring —
+the direct analogue of Table 1 for the recsys family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RecsysConfig
+from repro.core.baselines import exact_topk
+from repro.core.generalized import (component_support,
+                                    fm_pair_components,
+                                    topk_bandit_generalized)
+from repro.core.metrics import overlap_at_k
+from repro.models import recsys as R
+
+
+def run(n_candidates: int = 4096, n_fields: int = 16, dim: int = 10,
+        k: int = 10, seeds=(0, 1, 2, 3)) -> dict:
+    out = {"points": []}
+    print("\n=== Generalized bandit: FM retrieval_cand "
+          f"({n_candidates} candidates, {n_fields} context fields) ===")
+    for alpha in (0.1, 0.3, 1.0):
+        covs, ovs = [], []
+        for seed in seeds:
+            rng = np.random.default_rng(seed)
+            ctx = jnp.asarray(rng.standard_normal((n_fields, dim)) * 0.3,
+                              jnp.float32)
+            cands = jnp.asarray(rng.standard_normal((n_candidates, dim)) * 0.3,
+                                jnp.float32)
+            comps = fm_pair_components(ctx, cands)     # (N, F)
+            exact, _ = exact_topk(comps, k=k)
+            res = topk_bandit_generalized(
+                comps, jax.random.key(seed), k=k, alpha_ef=alpha,
+                block_docs=64, block_tokens=2)
+            covs.append(float(res.coverage))
+            ovs.append(float(overlap_at_k(res.topk, exact)))
+        pt = {"alpha_ef": alpha, "coverage": float(np.mean(covs)),
+              "overlap": float(np.mean(ovs))}
+        out["points"].append(pt)
+        print(f"  alpha={alpha:4.1f}: coverage={100*pt['coverage']:5.1f}% "
+              f"overlap@{k}={pt['overlap']:.3f} "
+              f"(compute saving {1/max(pt['coverage'],1e-9):.1f}x)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

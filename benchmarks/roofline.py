@@ -1,0 +1,184 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Roofline analysis (EXPERIMENTS.md §Roofline).
+
+XLA's HloCostAnalysis counts while-loop bodies ONCE, so the full-depth
+dry-run lowering (rolled scans) undercounts FLOPs/bytes/collectives by
+~n_layers x n_microbatches. This pass therefore:
+
+  1. lowers each LM cell TWICE at reduced depth with every scan UNROLLED
+     (repro/models/scan_util.py),
+  2. linear-fits cost(L) = base + slope*L per metric and extrapolates to
+     full depth (train cells are lowered at one-microbatch batch size and
+     scaled by the microbatch count, plus an analytic optimizer term),
+  3. GNN cells are lowered fully unrolled (4 layers — cheap), recsys /
+     retrieval cells have no loops and are measured directly.
+
+Terms (per chip, TPU v5e): compute = FLOPs / 197e12; memory = bytes / 819e9;
+collective = collective-bytes / 50e9. The dominant term is the bottleneck;
+MODEL_FLOPS / HLO_FLOPS is the useful-compute fraction.
+
+  PYTHONPATH=src python -m benchmarks.roofline --out results/roofline.json
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch import hlo_analysis as H
+from repro.launch.dryrun import HBM_BW, ICI_BW, PAPER_ARCHS, PEAK_FLOPS
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, _dp_total
+from repro.models import scan_util
+
+
+def _measure(arch, shape_name, mesh, *, depth=0, batch=0, micro=0,
+             unroll=True, param_mode="zero3"):
+    """Lower one (possibly reduced) cell and pull cost numbers."""
+    scan_util.set_unroll(unroll)
+    try:
+        cell = build_cell(arch, shape_name, mesh, depth=depth, batch=batch,
+                          micro=micro, param_mode=param_mode)
+        with mesh:
+            compiled = jax.jit(
+                cell.fn, in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate_argnums,
+            ).lower(*cell.args).compile()
+        cost = H.flops_and_bytes(compiled)
+        coll = H.collective_bytes(compiled.as_text())
+        return {"flops": cost["hlo_flops"], "bytes": cost["hlo_bytes"],
+                "coll": float(coll.get("total", 0))}, cell
+    finally:
+        scan_util.set_unroll(False)
+
+
+def _fit(c_lo, c_hi, d_lo, d_hi, d_full):
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        slope = (c_hi[k] - c_lo[k]) / max(d_hi - d_lo, 1)
+        out[k] = max(c_lo[k] + slope * (d_full - d_lo), 0.0)
+    return out
+
+
+def roofline_cell(arch, shape_name, mesh):
+    cfg = get_config(arch)
+    shape = next(s for s in cfg.shapes if s.name == shape_name)
+
+    if cfg.family == "lm":
+        d_lo, d_hi = 2, 4
+        L = cfg.n_layers
+        if shape.kind == "train":
+            dp = _dp_total(mesh)
+            m_full = max(1, shape.global_batch // dp)
+            b_red = shape.global_batch // m_full
+            c_lo, cell = _measure(arch, shape_name, mesh, depth=d_lo,
+                                  batch=b_red, micro=1)
+            c_hi, _ = _measure(arch, shape_name, mesh, depth=d_hi,
+                               batch=b_red, micro=1)
+            per_micro = _fit(c_lo, c_hi, d_lo, d_hi, L)
+            n_chips = int(np.prod(list(mesh.shape.values())))
+            n_params = cfg.param_count()
+            # analytic optimizer term (elementwise; once per step, all params)
+            opt_flops = 12.0 * n_params / n_chips
+            opt_bytes = 28.0 * n_params / n_chips
+            est = {k: m_full * per_micro[k] for k in per_micro}
+            est["flops"] += opt_flops
+            est["bytes"] += opt_bytes
+            note = f"fit L∈({d_lo},{d_hi})→{L}, x{m_full} micro + opt"
+        else:
+            c_lo, cell = _measure(arch, shape_name, mesh, depth=d_lo)
+            c_hi, _ = _measure(arch, shape_name, mesh, depth=d_hi)
+            est = _fit(c_lo, c_hi, d_lo, d_hi, L)
+            note = f"fit L∈({d_lo},{d_hi})→{L}"
+        cell_full = build_cell(arch, shape_name, mesh)   # for model_flops
+        model_flops = cell_full.model_flops
+    elif cfg.family == "gnn":
+        est, cell = _measure(arch, shape_name, mesh, unroll=True)
+        model_flops = cell.model_flops
+        note = "fully unrolled (4 layers)"
+    elif cfg.family == "retrieval":
+        # the serving steps chunk queries with lax.map (counted once by
+        # HloCostAnalysis): measure ONE chunk (B<=512, loop-free) and scale
+        # linearly — compute/bytes/scorecard-collectives are all ~B.
+        B = shape.batch
+        b_meas = min(B, 512)
+        est, cell = _measure(arch, shape_name, mesh, unroll=True,
+                             batch=b_meas)
+        scale = B / b_meas
+        est = {k: v * scale for k, v in est.items()}
+        cell_full = build_cell(arch, shape_name, mesh)
+        model_flops = cell_full.model_flops
+        note = f"measured at B={b_meas}, scaled x{scale:.0f}"
+    else:
+        est, cell = _measure(arch, shape_name, mesh, unroll=True)
+        model_flops = cell.model_flops
+        note = "loop-free; measured directly"
+
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    compute_s = est["flops"] / PEAK_FLOPS
+    memory_s = est["bytes"] / HBM_BW
+    collective_s = est["coll"] / ICI_BW
+    bound = max((("compute", compute_s), ("memory", memory_s),
+                 ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    step_s = max(compute_s, memory_s, collective_s)
+    mf_chip = model_flops / n_chips
+    return {
+        "arch": arch, "shape": shape_name, "mesh": dict(mesh.shape),
+        "hlo_flops": est["flops"], "hlo_bytes": est["bytes"],
+        "collective_bytes": est["coll"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "bottleneck": bound,
+        "model_flops_per_chip": mf_chip,
+        "useful_flops_frac": mf_chip / est["flops"] if est["flops"] else 0.0,
+        "mfu_bound": (mf_chip / PEAK_FLOPS) / step_s if step_s else 0.0,
+        "note": note,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=False)   # roofline is single-pod
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS) + PAPER_ARCHS
+
+    records = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [args.shape] if args.shape else [s.name for s in cfg.shapes]
+        for shape_name in shapes:
+            try:
+                rec = roofline_cell(arch, shape_name, mesh)
+                records.append(rec)
+                print(f"[{arch:22s} {shape_name:15s}] "
+                      f"T_c={rec['compute_s']*1e3:9.2f}ms "
+                      f"T_m={rec['memory_s']*1e3:9.2f}ms "
+                      f"T_coll={rec['collective_s']*1e3:9.2f}ms "
+                      f"-> {rec['bottleneck']:10s} "
+                      f"useful={rec['useful_flops_frac']*100:5.1f}% "
+                      f"mfu_bound={rec['mfu_bound']*100:5.1f}%")
+            except Exception as e:
+                import traceback
+                traceback.print_exc(limit=3)
+                print(f"[FAIL {arch} {shape_name}] {e}")
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

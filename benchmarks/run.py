@@ -1,0 +1,73 @@
+"""Benchmark entry point: one harness per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run --only table1
+  PYTHONPATH=src python -m benchmarks.run --quick      # smaller corpus
+
+The roofline/dry-run analyses need 512 placeholder devices and live in
+separate entry points:
+  PYTHONPATH=src python -m repro.launch.dryrun --both --out results/dryrun.json
+  PYTHONPATH=src python -m benchmarks.roofline --out results/roofline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+
+def _to_jsonable(obj):
+    if isinstance(obj, dict):
+        return {str(k): _to_jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_to_jsonable(v) for v in obj]
+    if isinstance(obj, (np.floating, np.integer)):
+        return float(obj)
+    return obj
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["table1", "table2", "fig2", "fig4", "fig5",
+                             "generalized"])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="results/bench.json")
+    args = ap.parse_args(argv)
+
+    n_docs = 192 if args.quick else 384
+    n_q = 6 if args.quick else 12
+
+    from benchmarks import (fig2_tradeoff, fig4_exploration, fig5_ann_bounds,
+                            generalized_recsys, table1_efficiency,
+                            table2_effectiveness)
+    benches = {
+        "table1": lambda: table1_efficiency.run(n_docs, n_q),
+        "table2": lambda: table2_effectiveness.run(n_docs, n_q),
+        "fig2": lambda: fig2_tradeoff.run(n_docs, n_q),
+        "fig4": lambda: fig4_exploration.run(min(n_docs, 256), min(n_q, 8)),
+        "fig5": lambda: fig5_ann_bounds.run(min(n_docs, 256), min(n_q, 8)),
+        "generalized": lambda: generalized_recsys.run(),
+    }
+    wanted = [args.only] if args.only else list(benches)
+
+    results = {}
+    for name in wanted:
+        t0 = time.time()
+        print(f"\n######## {name} ########")
+        results[name] = benches[name]()
+        print(f"[{name} done in {time.time()-t0:.1f}s]")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(_to_jsonable(results), f, indent=1, default=str)
+    print(f"\nwrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

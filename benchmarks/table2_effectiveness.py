@@ -1,0 +1,48 @@
+"""Paper Table 2 — retrieval effectiveness (Recall/nDCG/MRR@5) at matched
+coverage levels, vs. the full-reranking reference."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_dataset, frontier_bandit, frontier_budget
+from repro.retrieval.pipeline import evaluate_dataset
+
+
+def _closest(points, cov):
+    return min(points, key=lambda p: abs(p["coverage"] - cov))
+
+
+def run(n_docs: int = 384, n_queries: int = 12) -> dict:
+    ds = bench_dataset(n_docs, n_queries)
+    k = 5
+    full = evaluate_dataset(ds, method="exact", k=k)
+    bandit = frontier_bandit(ds, k=k)
+    uni = frontier_budget(ds, k=k, method="uniform")
+    top = frontier_budget(ds, k=k, method="topmargin")
+
+    print("\n=== Table 2: retrieval effectiveness at matched coverage ===")
+    print(f"{'method':22s} {'coverage':>9s} {'Recall@5':>9s} "
+          f"{'nDCG@5':>8s} {'MRR@5':>8s}")
+    print(f"{'Full ColBERT':22s} {'100.0%':>9s} {full['recall']:9.3f} "
+          f"{full['ndcg']:8.3f} {full['mrr']:8.3f}")
+    rows = {"full": full}
+    for cov in (0.2, 0.4):
+        p = _closest(bandit, cov)
+        print(f"{'Col-Bandit':22s} {100*p['coverage']:8.1f}% "
+              f"{p['recall']:9.3f} {p['ndcg']:8.3f} {p['mrr']:8.3f}")
+        rows[f"bandit@{cov}"] = p
+    for name, pts in (("Doc-TopMargin", top), ("Doc-Uniform", uni)):
+        p = _closest(pts, 0.4)
+        print(f"{name:22s} {100*p['coverage']:8.1f}% "
+              f"{p['recall']:9.3f} {p['ndcg']:8.3f} {p['mrr']:8.3f}")
+        rows[f"{name}@0.4"] = p
+
+    b40 = _closest(bandit, 0.4)
+    print("\nRelative retention at ~40% coverage (vs Full):")
+    for m in ("recall", "ndcg", "mrr"):
+        print(f"  {m}: {100 * b40[m] / max(full[m], 1e-9):5.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,130 @@
+"""Checkpointing: sharded-layout-agnostic save/restore + async writer.
+
+Format: one ``.npz`` per step (leaf path -> array) + ``meta.json``. Restore
+targets an EXAMPLE pytree (shapes/structure), so checkpoints reshard freely:
+a state saved under mesh A is loaded and re-placed under mesh B by the
+caller's jit/device_put — this is the elastic-rescale path exercised in
+tests/test_fault.py. On multi-host deployments each process saves its
+addressable shards under ``shard{proc}`` (same format); this container is
+single-process so there is exactly one shard file.
+
+The async writer snapshots to host memory synchronously (cheap) and writes
+to disk on a background thread — training never blocks on the filesystem.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+import time
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+Params = Any
+_CKPT_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten(tree: Params):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(root: str, step: int, state: Params,
+                    extra: Optional[dict] = None) -> str:
+    """Synchronous save. Returns the checkpoint directory."""
+    d = os.path.join(root, f"step_{step:08d}")
+    tmp = d + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays = _flatten(state)
+    np.savez(os.path.join(tmp, "shard0.npz"), **arrays)
+    meta = {"step": step, "time": time.time(), "extra": extra or {},
+            "n_leaves": len(arrays)}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    os.replace(tmp, d)            # atomic publish
+    return d
+
+
+def latest_checkpoint(root: str) -> Optional[Tuple[int, str]]:
+    if not os.path.isdir(root):
+        return None
+    best = None
+    for name in os.listdir(root):
+        m = _CKPT_RE.match(name)
+        if m:
+            step = int(m.group(1))
+            if best is None or step > best[0]:
+                best = (step, os.path.join(root, name))
+    return best
+
+
+def restore_checkpoint(path: str, example: Params) -> Tuple[Params, dict]:
+    """Restore into the structure of ``example`` (shapes must match)."""
+    with np.load(os.path.join(path, "shard0.npz")) as data:
+        arrays = {k: data[k] for k in data.files}
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(example)
+    leaves = []
+    for p, leaf in flat:
+        key = jax.tree_util.keystr(p)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(example), leaves), meta
+
+
+class AsyncCheckpointer:
+    """Snapshot-on-call, write-on-thread checkpointer."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, state: Params, extra: Optional[dict] = None):
+        self.wait()
+        # device->host snapshot happens here, synchronously (consistent view)
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+
+        def work():
+            try:
+                save_checkpoint(self.root, step, host_state, extra)
+                self._gc()
+            except BaseException as e:      # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        if not os.path.isdir(self.root):
+            return
+        steps = sorted(int(m.group(1)) for n in os.listdir(self.root)
+                       if (m := _CKPT_RE.match(n)))
+        for s in steps[:-self.keep]:
+            d = os.path.join(self.root, f"step_{s:08d}")
+            for f in os.listdir(d):
+                os.remove(os.path.join(d, f))
+            os.rmdir(d)

@@ -1,0 +1,67 @@
+"""Architecture registry: ``--arch <id>`` -> config object.
+
+Assigned pool (10 archs) + the paper's own retrieval configs.
+"""
+from __future__ import annotations
+
+from repro.configs.base import (
+    BanditConfig,
+    GNN_SHAPES,
+    GNNConfig,
+    LM_SHAPES,
+    LMConfig,
+    RECSYS_SHAPES,
+    RecsysConfig,
+    RETRIEVAL_SHAPES,
+    RetrievalConfig,
+    ShapeSpec,
+    criteo_like_vocab,
+)
+from repro.configs.mixtral_8x22b import CONFIG as MIXTRAL_8X22B
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as MOONSHOT_V1_16B_A3B
+from repro.configs.internlm2_20b import CONFIG as INTERNLM2_20B
+from repro.configs.gemma2_27b import CONFIG as GEMMA2_27B
+from repro.configs.qwen2_5_3b import CONFIG as QWEN2_5_3B
+from repro.configs.pna import CONFIG as PNA
+from repro.configs.autoint import CONFIG as AUTOINT
+from repro.configs.sasrec import CONFIG as SASREC
+from repro.configs.din import CONFIG as DIN
+from repro.configs.fm import CONFIG as FM
+from repro.configs.colbert_repro import TEXT_CONFIG as COLBERT_TEXT
+from repro.configs.colbert_repro import MM_CONFIG as COLBERT_MM
+
+REGISTRY = {
+    "mixtral-8x22b": MIXTRAL_8X22B,
+    "moonshot-v1-16b-a3b": MOONSHOT_V1_16B_A3B,
+    "internlm2-20b": INTERNLM2_20B,
+    "gemma2-27b": GEMMA2_27B,
+    "qwen2.5-3b": QWEN2_5_3B,
+    "pna": PNA,
+    "autoint": AUTOINT,
+    "sasrec": SASREC,
+    "din": DIN,
+    "fm": FM,
+    # the paper's own workload
+    "colbert-text": COLBERT_TEXT,
+    "colbert-mm": COLBERT_MM,
+}
+
+ASSIGNED_ARCHS = [
+    "mixtral-8x22b", "moonshot-v1-16b-a3b", "internlm2-20b", "gemma2-27b",
+    "qwen2.5-3b", "pna", "autoint", "sasrec", "din", "fm",
+]
+
+
+def get_config(arch: str):
+    if arch not in REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[arch]
+
+
+def all_cells(archs=None):
+    """Enumerate every (arch, shape) cell."""
+    archs = archs or ASSIGNED_ARCHS
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in cfg.shapes:
+            yield arch, cfg, shape

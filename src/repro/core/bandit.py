@@ -1,0 +1,182 @@
+"""Col-Bandit, faithful sequential LUCB (paper Algorithm 1).
+
+One (document, token) MaxSim cell is revealed per iteration, exactly as
+written in the paper; this is the correctness oracle and the paper-faithful
+baseline recorded in EXPERIMENTS.md. The TPU-adapted block-synchronous
+variant lives in ``repro.core.batched``.
+
+The "environment" is a precomputed MaxSim matrix ``h_full`` (N, T): revealing
+cell (i, t) returns ``h_full[i, t]`` and costs one atomic unit (Sec. 2.1,
+"Atomic Cost"). FLOP accounting against real document lengths is layered on
+top by the caller (``repro.retrieval.pipeline``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BanditConfig
+from repro.core import bounds as B
+from repro.core.state import BanditState, init_state, reveal_cell, reveal_mask
+
+_NEG = jnp.float32(-3e38)
+_POS = jnp.float32(3e38)
+
+
+class BanditResult(NamedTuple):
+    topk: jax.Array        # (K,) i32 — returned document indices
+    coverage: jax.Array    # scalar f32 — Eq. 6 over valid docs
+    reveals: jax.Array     # scalar i32 — |Omega|
+    rounds: jax.Array      # scalar i32 — LUCB iterations
+    separated: jax.Array   # scalar bool — stopped via LCB >= UCB (vs budget)
+    s_hat: jax.Array       # (N,) f32 — final score estimates
+    revealed: jax.Array    # (N, T) bool — final observation set
+
+
+def _topk_mask(scores: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Boolean membership mask of the current Top-K by score (stable ties)."""
+    _, idx = jax.lax.top_k(scores, k)
+    mask = jnp.zeros(scores.shape, jnp.bool_).at[idx].set(True)
+    return mask, idx
+
+
+def _select_arms(iv: B.Intervals, topk_mask: jax.Array,
+                 valid: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Weakest winner i+ and strongest loser i- (Sec. 4.3)."""
+    i_plus = jnp.argmin(jnp.where(topk_mask & valid, iv.lcb, _POS))
+    i_minus = jnp.argmax(jnp.where(~topk_mask & valid, iv.ucb, _NEG))
+    return i_plus, i_minus
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "delta", "alpha_ef", "epsilon", "radius_c",
+                     "warmup_fraction", "max_reveals", "init_one_per_doc",
+                     "bias_kappa"),
+)
+def run_bandit(
+    h_full: jax.Array,            # (N, T) oracle MaxSim matrix
+    a: jax.Array,                 # (N, T) lower support per cell
+    b: jax.Array,                 # (N, T) upper support per cell
+    key: jax.Array,
+    *,
+    k: int,
+    delta: float = 0.01,
+    alpha_ef: float = 0.3,
+    epsilon: float = 0.1,
+    radius_c: float = 1.0,
+    bias_kappa: float = 0.0,
+    warmup_fraction: float = 0.0,
+    max_reveals: int = -1,
+    init_one_per_doc: bool = True,
+    doc_mask: Optional[jax.Array] = None,   # (N,) bool — valid candidates
+    prereveal: Optional[jax.Array] = None,  # (N, T) bool — free initial cells
+) -> BanditResult:
+    """Algorithm 1. Returns the estimated Top-K set and the cost paid."""
+    N, T = h_full.shape
+    if doc_mask is None:
+        doc_mask = jnp.ones((N,), jnp.bool_)
+    budget = max_reveals if max_reveals > 0 else N * T
+    # Invalid (padding) docs: pin support to zero & mark fully revealed so
+    # they are never selected and contribute nothing.
+    a = jnp.where(doc_mask[:, None], a, 0.0).astype(jnp.float32)
+    b = jnp.where(doc_mask[:, None], b, 0.0).astype(jnp.float32)
+    h_full = jnp.where(doc_mask[:, None], h_full, 0.0)
+
+    key, k_init, k_warm = jax.random.split(key, 3)
+    state = init_state(N, T, key)
+    state = state._replace(revealed=state.revealed | ~doc_mask[:, None])
+
+    # -- Exploration init (Sec. 4.1) --------------------------------------
+    if prereveal is not None:
+        # e.g. cells whose exact value stage-1 ANN already computed
+        # (beyond-paper `prereveal_ann`): revealed at zero marginal cost.
+        state = reveal_mask(state, h_full, prereveal & doc_mask[:, None])
+    if init_one_per_doc:
+        # footnote 2: one uniformly random cell per document.
+        t0 = jax.random.randint(k_init, (N,), 0, T)
+        mask0 = (jnp.arange(T)[None, :] == t0[:, None]) & doc_mask[:, None]
+        state = reveal_mask(state, h_full, mask0)
+    if warmup_fraction > 0.0:
+        # static warm-up: gamma_init * N * T cells uniformly w/o replacement.
+        m = int(-(-warmup_fraction * N * T // 1))  # ceil
+        flat = jax.random.permutation(k_warm, N * T)[:m]
+        warm = jnp.zeros((N * T,), jnp.bool_).at[flat].set(True)
+        warm = warm.reshape(N, T) & doc_mask[:, None]
+        state = reveal_mask(state, h_full, warm)
+
+    iv_kwargs = dict(T=T, N=N, delta=delta, alpha_ef=alpha_ef, c=radius_c,
+                     bias_kappa=bias_kappa)
+
+    def get_intervals(st: BanditState) -> B.Intervals:
+        iv = B.intervals(st.n, st.total, st.total_sq, st.revealed, a, b,
+                         **iv_kwargs)
+        # Padding docs: push out of every selection.
+        s_hat = jnp.where(doc_mask, iv.s_hat, _NEG)
+        lcb = jnp.where(doc_mask, iv.lcb, _NEG)
+        ucb = jnp.where(doc_mask, iv.ucb, _NEG)
+        return iv._replace(s_hat=s_hat, lcb=lcb, ucb=ucb)
+
+    def separated(iv: B.Intervals) -> jax.Array:
+        tk, _ = _topk_mask(iv.s_hat, k)
+        i_p, i_m = _select_arms(iv, tk, doc_mask)
+        return iv.lcb[i_p] >= iv.ucb[i_m]
+
+    def cond(st: BanditState) -> jax.Array:
+        n_rev = jnp.sum(st.revealed & doc_mask[:, None])
+        return (~st.done) & (n_rev < budget)
+
+    def body(st: BanditState) -> BanditState:
+        iv = get_intervals(st)
+        tk_mask, _ = _topk_mask(iv.s_hat, k)                 # line 4
+        i_plus, i_minus = _select_arms(iv, tk_mask, doc_mask)  # lines 5-6
+        stop = iv.lcb[i_plus] >= iv.ucb[i_minus]             # line 7
+
+        # line 10: the more ambiguous of the two (fall back to the one that
+        # still has unrevealed cells — a fully-observed row has width 0).
+        w_plus = iv.ucb[i_plus] - iv.lcb[i_plus]
+        w_minus = iv.ucb[i_minus] - iv.lcb[i_minus]
+        full_p = st.n[i_plus] >= T
+        full_m = st.n[i_minus] >= T
+        w_plus = jnp.where(full_p, _NEG, w_plus)
+        w_minus = jnp.where(full_m, _NEG, w_minus)
+        i_star = jnp.where(w_plus >= w_minus, i_plus, i_minus)
+        both_full = full_p & full_m
+
+        # lines 11-16: epsilon-greedy token choice within the row.
+        key, k_eps, k_tok = jax.random.split(st.key, 3)
+        unrev = ~st.revealed[i_star]
+        width = jnp.where(unrev, b[i_star] - a[i_star], _NEG)
+        t_exploit = jnp.argmax(width)                        # Max-Width
+        gumbel = jax.random.gumbel(k_tok, (T,))
+        t_explore = jnp.argmax(jnp.where(unrev, gumbel, _NEG))
+        explore = jax.random.uniform(k_eps) < epsilon
+        t_star = jnp.where(explore, t_explore, t_exploit)
+
+        def do_stop(s: BanditState) -> BanditState:
+            return s._replace(key=key, rounds=s.rounds + 1, done=True)
+
+        def do_reveal(s: BanditState) -> BanditState:
+            nxt = reveal_cell(s, h_full, i_star, t_star)     # lines 17-20
+            return nxt._replace(key=key, rounds=s.rounds + 1, done=both_full)
+
+        return jax.lax.cond(stop, do_stop, do_reveal, st)
+
+    state = jax.lax.while_loop(cond, body, state)
+
+    iv = get_intervals(state)
+    _, topk_idx = jax.lax.top_k(iv.s_hat, k)
+    n_rev = jnp.sum(state.revealed & doc_mask[:, None])
+    n_cells = jnp.maximum(jnp.sum(doc_mask) * T, 1)
+    return BanditResult(
+        topk=topk_idx,
+        coverage=n_rev.astype(jnp.float32) / n_cells.astype(jnp.float32),
+        reveals=n_rev.astype(jnp.int32),
+        rounds=state.rounds,
+        separated=separated(iv),
+        s_hat=iv.s_hat,
+        revealed=state.revealed & doc_mask[:, None],
+    )

@@ -1,0 +1,80 @@
+"""Non-adaptive reveal baselines (paper App. A.3) + exact scoring.
+
+Doc-Uniform   (Algorithm 2): per row, reveal ceil(gamma*T) cells uniformly
+              at random without replacement; rank by the partial sums.
+Doc-TopMargin (Algorithm 3): per row, reveal the ceil(gamma*T) cells with the
+              largest support width (b - a); rank by the partial sums.
+Exact         : full scoring — the non-pruned reference (100% coverage).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_NEG = jnp.float32(-3e38)
+
+
+class BaselineResult(NamedTuple):
+    topk: jax.Array       # (K,)
+    coverage: jax.Array   # scalar f32
+    scores: jax.Array     # (N,) partial-sum scores
+    revealed: jax.Array   # (N, T) bool
+
+
+def _finish(scores: jax.Array, revealed: jax.Array, k: int,
+            doc_mask: jax.Array) -> BaselineResult:
+    scores = jnp.where(doc_mask, scores, _NEG)
+    _, topk = jax.lax.top_k(scores, k)
+    n_rev = jnp.sum(revealed & doc_mask[:, None])
+    n_cells = jnp.maximum(jnp.sum(doc_mask) * revealed.shape[1], 1)
+    cov = n_rev.astype(jnp.float32) / n_cells.astype(jnp.float32)
+    return BaselineResult(topk=topk, coverage=cov, scores=scores,
+                          revealed=revealed & doc_mask[:, None])
+
+
+@functools.partial(jax.jit, static_argnames=("k", "budget"))
+def doc_uniform(h_full: jax.Array, key: jax.Array, *, k: int, budget: int,
+                doc_mask: Optional[jax.Array] = None) -> BaselineResult:
+    """Algorithm 2 with per-row budget B = ``budget`` cells."""
+    N, T = h_full.shape
+    if doc_mask is None:
+        doc_mask = jnp.ones((N,), jnp.bool_)
+    budget = max(1, min(budget, T))
+    # Rank a per-row random permutation; take the first `budget` positions.
+    noise = jax.random.uniform(key, (N, T))
+    order = jnp.argsort(noise, axis=-1)
+    ranks = jnp.argsort(order, axis=-1)
+    revealed = ranks < budget
+    scores = jnp.sum(jnp.where(revealed, h_full, 0.0), axis=-1)
+    return _finish(scores, revealed, k, doc_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "budget"))
+def doc_top_margin(h_full: jax.Array, a: jax.Array, b: jax.Array, *, k: int,
+                   budget: int,
+                   doc_mask: Optional[jax.Array] = None) -> BaselineResult:
+    """Algorithm 3: reveal the top-B cells per row by support width b-a."""
+    N, T = h_full.shape
+    if doc_mask is None:
+        doc_mask = jnp.ones((N,), jnp.bool_)
+    budget = max(1, min(budget, T))
+    width = (b - a).astype(jnp.float32)
+    ranks = jnp.argsort(jnp.argsort(-width, axis=-1), axis=-1)
+    revealed = ranks < budget
+    scores = jnp.sum(jnp.where(revealed, h_full, 0.0), axis=-1)
+    return _finish(scores, revealed, k, doc_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def exact_topk(h_full: jax.Array, *, k: int,
+               doc_mask: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Full ColBERT scoring (Eq. 2/3): S_i = sum_t H_it, then top-K."""
+    N, T = h_full.shape
+    if doc_mask is None:
+        doc_mask = jnp.ones((N,), jnp.bool_)
+    scores = jnp.where(doc_mask, jnp.sum(h_full, axis=-1), _NEG)
+    _, topk = jax.lax.top_k(scores, k)
+    return topk, scores

@@ -1,0 +1,55 @@
+"""Evaluation metrics (paper Sec. 5.1).
+
+Overlap@K (Eq. 16) measures ranking fidelity vs. full scoring; Recall@K,
+MRR@K, nDCG@K measure end-task retrieval effectiveness against relevance
+labels. All are pure-jnp and vmap-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def overlap_at_k(topk_hat: jax.Array, topk_star: jax.Array) -> jax.Array:
+    """Eq. 16: |T_K_star ∩ T_K_hat| / K (index sets, order-insensitive)."""
+    eq = topk_hat[:, None] == topk_star[None, :]
+    return jnp.sum(eq.any(axis=-1).astype(jnp.float32)) / topk_hat.shape[0]
+
+
+def recall_at_k(topk: jax.Array, relevant: jax.Array) -> jax.Array:
+    """relevant: (N,) bool per candidate. Recall = hits@K / total relevant."""
+    hits = jnp.sum(relevant[topk].astype(jnp.float32))
+    total = jnp.maximum(jnp.sum(relevant.astype(jnp.float32)), 1.0)
+    return hits / total
+
+
+def mrr_at_k(topk: jax.Array, relevant: jax.Array) -> jax.Array:
+    """Reciprocal rank of the first relevant hit within the top-K list."""
+    rel = relevant[topk].astype(jnp.float32)              # (K,) in rank order
+    ranks = jnp.arange(1, topk.shape[0] + 1, dtype=jnp.float32)
+    rr = rel / ranks
+    first = jnp.argmax(rel)                               # first hit position
+    any_hit = jnp.any(rel > 0)
+    return jnp.where(any_hit, rr[first], 0.0)
+
+
+def ndcg_at_k(topk: jax.Array, relevant: jax.Array) -> jax.Array:
+    """Binary-gain nDCG@K against an ideal ranking of the relevant set."""
+    k = topk.shape[0]
+    rel = relevant[topk].astype(jnp.float32)
+    discounts = 1.0 / jnp.log2(jnp.arange(2, k + 2, dtype=jnp.float32))
+    dcg = jnp.sum(rel * discounts)
+    n_rel = jnp.sum(relevant.astype(jnp.int32))
+    ideal_hits = (jnp.arange(k) < n_rel).astype(jnp.float32)
+    idcg = jnp.maximum(jnp.sum(ideal_hits * discounts), 1e-9)
+    return dcg / idcg
+
+
+def all_metrics(topk_hat: jax.Array, topk_star: jax.Array,
+                relevant: jax.Array) -> dict:
+    return {
+        "overlap": overlap_at_k(topk_hat, topk_star),
+        "recall": recall_at_k(topk_hat, relevant),
+        "mrr": mrr_at_k(topk_hat, relevant),
+        "ndcg": ndcg_at_k(topk_hat, relevant),
+    }

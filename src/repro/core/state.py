@@ -1,0 +1,72 @@
+"""Bandit state pytree + reveal/update primitives shared by the sequential
+(faithful) and block-synchronous (TPU) Col-Bandit variants."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BanditState(NamedTuple):
+    values: jax.Array      # (N, T) f32 — revealed MaxSim values (0 if unrevealed)
+    revealed: jax.Array    # (N, T) bool — the observation set Omega
+    n: jax.Array           # (N,) i32 — |O_i|
+    total: jax.Array       # (N,) f32 — sum of revealed values per row
+    total_sq: jax.Array    # (N,) f32 — sum of squares
+    key: jax.Array         # PRNG key
+    rounds: jax.Array      # i32 — loop iterations executed
+    done: jax.Array        # bool — stop flag
+
+
+def init_state(n_docs: int, n_tokens: int, key: jax.Array) -> BanditState:
+    return BanditState(
+        values=jnp.zeros((n_docs, n_tokens), jnp.float32),
+        revealed=jnp.zeros((n_docs, n_tokens), jnp.bool_),
+        n=jnp.zeros((n_docs,), jnp.int32),
+        total=jnp.zeros((n_docs,), jnp.float32),
+        total_sq=jnp.zeros((n_docs,), jnp.float32),
+        key=key,
+        rounds=jnp.zeros((), jnp.int32),
+        done=jnp.zeros((), jnp.bool_),
+    )
+
+
+def reveal_cell(state: BanditState, h_full: jax.Array, i: jax.Array,
+                t: jax.Array) -> BanditState:
+    """Reveal one cell (i, t) from the oracle matrix. No-op if already seen."""
+    was = state.revealed[i, t]
+    val = h_full[i, t].astype(jnp.float32)
+    new = jnp.logical_not(was)
+    newf = new.astype(jnp.float32)
+    return state._replace(
+        values=state.values.at[i, t].set(jnp.where(new, val, state.values[i, t])),
+        revealed=state.revealed.at[i, t].set(True),
+        n=state.n.at[i].add(new.astype(jnp.int32)),
+        total=state.total.at[i].add(newf * val),
+        total_sq=state.total_sq.at[i].add(newf * val * val),
+    )
+
+
+def reveal_mask(state: BanditState, h_full: jax.Array,
+                mask: jax.Array) -> BanditState:
+    """Reveal every cell where ``mask`` is True (vectorized, idempotent)."""
+    new = mask & ~state.revealed
+    newf = new.astype(jnp.float32)
+    vals = h_full.astype(jnp.float32)
+    return state._replace(
+        values=jnp.where(new, vals, state.values),
+        revealed=state.revealed | new,
+        n=state.n + jnp.sum(new, axis=-1).astype(jnp.int32),
+        total=state.total + jnp.sum(newf * vals, axis=-1),
+        total_sq=state.total_sq + jnp.sum(newf * vals * vals, axis=-1),
+    )
+
+
+def coverage(state: BanditState, doc_mask: jax.Array | None = None) -> jax.Array:
+    """Eq. 6 — fraction of the (valid) matrix revealed."""
+    if doc_mask is None:
+        return jnp.mean(state.revealed.astype(jnp.float32))
+    rev = jnp.sum(jnp.where(doc_mask[:, None], state.revealed, False))
+    tot = jnp.sum(doc_mask) * state.revealed.shape[1]
+    return rev.astype(jnp.float32) / jnp.maximum(tot.astype(jnp.float32), 1.0)

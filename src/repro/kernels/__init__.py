@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the MaxSim hot spot (Eq. 4) + oracles.
+
+maxsim        — dense exact-reranking kernel (full H matrix)
+masked_maxsim — tile-granular pruning (pl.when skips MXU work per tile)
+gather_maxsim — irregular reveal sets for the block-synchronous bandit
+ref           — pure-jnp oracles; ops — padded/jitted public wrappers
+"""
+from repro.kernels.ops import (gather_maxsim_op, masked_maxsim_op, maxsim_op,
+                               maxsim_scores_op)
+
+__all__ = ["gather_maxsim_op", "masked_maxsim_op", "maxsim_op",
+           "maxsim_scores_op"]

@@ -1,0 +1,80 @@
+"""Gathered MaxSim Pallas kernel — the block-synchronous bandit's reveal op.
+
+Each round the bandit selects B ambiguous documents and G tokens per
+document; the reveal computes exactly those B*G cells:
+
+    out[b, g] = max_j <E[doc_idx[b], j], Q[tok_idx[b, g]]>
+
+The doc/query gathers happen at the XLA level (cheap dynamic-slice / take on
+small N); the kernel then runs a dense batched (B, L, M) x (B, G, M)
+matmul-max with L tiled through VMEM. FLOPs = B * G * L * M * 2 exactly —
+the bandit's savings are realized 1:1, with zero tile waste from irregular
+reveal patterns.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -3e38  # python float: jnp constants would be captured as kernel consts
+
+
+def _gather_maxsim_kernel(e_ref, m_ref, q_ref, out_ref, acc_ref, *,
+                          n_l_blocks):
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, _NEG)
+
+    e = e_ref[...].astype(jnp.float32)     # (BB, BL, M)
+    q = q_ref[...].astype(jnp.float32)     # (BB, G, M)
+    mask = m_ref[...]                      # (BB, BL)
+    # batched (BB): (BL, M) . (G, M) -> (BL, G)
+    sims = jax.lax.dot_general(
+        e, q, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    sims = jnp.where(mask[:, :, None], sims, _NEG)
+    acc_ref[...] = jnp.maximum(acc_ref[...], jnp.max(sims, axis=1))
+
+    @pl.when(l == n_l_blocks - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_l",
+                                             "interpret"))
+def gather_maxsim(doc_embs: jax.Array, doc_tok_mask: jax.Array,
+                  queries: jax.Array, doc_idx: jax.Array, tok_idx: jax.Array,
+                  *, block_b: int = 8, block_l: int = 256,
+                  interpret: bool = False) -> jax.Array:
+    """out (B, G) — MaxSim values for the selected cells."""
+    B, G = tok_idx.shape
+    L, M = doc_embs.shape[1], doc_embs.shape[2]
+    e = jnp.take(doc_embs, doc_idx, axis=0)            # (B, L, M)
+    m = jnp.take(doc_tok_mask, doc_idx, axis=0)        # (B, L)
+    q = jnp.take(queries, tok_idx, axis=0)             # (B, G, M)
+
+    bb = min(block_b, B)
+    bl = min(block_l, L)
+    assert B % bb == 0 and L % bl == 0, (B, L, bb, bl)
+    n_l_blocks = L // bl
+
+    grid = (B // bb, n_l_blocks)
+    return pl.pallas_call(
+        functools.partial(_gather_maxsim_kernel, n_l_blocks=n_l_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bl, M), lambda i, l: (i, l, 0)),
+            pl.BlockSpec((bb, bl), lambda i, l: (i, l)),
+            pl.BlockSpec((bb, G, M), lambda i, l: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, G), lambda i, l: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, G), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bb, G), jnp.float32)],
+        interpret=interpret,
+    )(e, m, q)

@@ -1,0 +1,84 @@
+"""Tile-masked MaxSim Pallas kernel — Col-Bandit's pruning made physical.
+
+The bandit decides which (doc, query-token) tiles are worth computing; this
+kernel SKIPS the MXU work for every inactive tile via ``pl.when`` — compute
+is saved at tile granularity, not just masked out. Inactive output tiles are
+written as exact 0 on the first L step so the output is fully defined.
+
+tile_mask has shape (N/BN, T/BT): one bool per output tile. The static-budget
+baselines (Doc-TopMargin with tile-aligned reveals) and the bulk reranking
+path use this; the round-based bandit uses the gather kernel instead
+(``gather_maxsim``) because its reveal sets are irregular.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -3e38  # python float: jnp constants would be captured as kernel consts
+
+
+def _masked_maxsim_kernel(mask_ref, e_ref, m_ref, q_ref, out_ref, acc_ref, *,
+                          n_l_blocks):
+    l = pl.program_id(2)
+    active = mask_ref[0, 0]
+
+    @pl.when(jnp.logical_not(active) & (l == 0))
+    def _skip():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(active)
+    def _compute():
+        @pl.when(l == 0)
+        def _init():
+            acc_ref[...] = jnp.full_like(acc_ref, _NEG)
+
+        e = e_ref[...].astype(jnp.float32)
+        q = q_ref[...].astype(jnp.float32)
+        tok_mask = m_ref[...]
+        sims = jax.lax.dot_general(
+            e, q, (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        sims = jnp.where(tok_mask[:, :, None], sims, _NEG)
+        acc_ref[...] = jnp.maximum(acc_ref[...], jnp.max(sims, axis=1))
+
+        @pl.when(l == n_l_blocks - 1)
+        def _done():
+            out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_t", "block_l",
+                                             "interpret"))
+def masked_maxsim(doc_embs: jax.Array, doc_tok_mask: jax.Array,
+                  queries: jax.Array, tile_mask: jax.Array, *,
+                  block_n: int = 8, block_t: int = 0, block_l: int = 256,
+                  interpret: bool = False) -> jax.Array:
+    N, L, M = doc_embs.shape
+    T = queries.shape[0]
+    bn = min(block_n, N)
+    bt = block_t if block_t > 0 else T
+    bt = min(bt, T)
+    bl = min(block_l, L)
+    assert N % bn == 0 and T % bt == 0 and L % bl == 0
+    assert tile_mask.shape == (N // bn, T // bt), (tile_mask.shape, N // bn, T // bt)
+    n_l_blocks = L // bl
+
+    grid = (N // bn, T // bt, n_l_blocks)
+    return pl.pallas_call(
+        functools.partial(_masked_maxsim_kernel, n_l_blocks=n_l_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, l: (i, j)),
+            pl.BlockSpec((bn, bl, M), lambda i, j, l: (i, l, 0)),
+            pl.BlockSpec((bn, bl), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bt, M), lambda i, j, l: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bt), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, T), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn, bt), jnp.float32)],
+        interpret=interpret,
+    )(tile_mask, doc_embs, doc_tok_mask, queries)

@@ -1,0 +1,82 @@
+"""Dense MaxSim Pallas TPU kernel — the exact-reranking hot spot (Eq. 4).
+
+For every (doc i, query token t): H[i, t] = max_j <e_ij, q_t>.
+
+Tiling (VMEM-resident, MXU-aligned):
+  grid = (N/BN, T/BT, L/BL); the L axis is the innermost (sequential) grid
+  dimension so a running max over document tokens lives in a VMEM scratch
+  tile of shape (BN, BT) and the output block is written once, on the last
+  L step. Embedding dim M is kept whole (128 in every assigned config — one
+  MXU lane tile).
+
+  per-step compute: (BN, BL, M) x (BT, M) -> dot_general batched over BN
+  -> (BN, BL, BT) similarities -> masked max over BL -> running max.
+
+VMEM at defaults (BN=8, BT=128, BL=256, M=128, f32):
+  E tile 1.0 MiB + Q tile 64 KiB + sims 1.0 MiB + scratch 4 KiB  << 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -3e38  # python float: jnp constants would be captured as kernel consts
+
+
+def _maxsim_kernel(e_ref, m_ref, q_ref, out_ref, acc_ref, *, n_l_blocks):
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, _NEG)
+
+    e = e_ref[...].astype(jnp.float32)          # (BN, BL, M)
+    q = q_ref[...].astype(jnp.float32)          # (BT, M)
+    mask = m_ref[...]                           # (BN, BL)
+    # (BN, BL, M) . (BT, M) -> (BN, BL, BT)
+    sims = jax.lax.dot_general(
+        e, q, (((2,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    sims = jnp.where(mask[:, :, None], sims, _NEG)
+    acc_ref[...] = jnp.maximum(acc_ref[...], jnp.max(sims, axis=1))
+
+    @pl.when(l == n_l_blocks - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_t", "block_l",
+                                             "interpret"))
+def maxsim(doc_embs: jax.Array, doc_tok_mask: jax.Array, queries: jax.Array,
+           *, block_n: int = 8, block_t: int = 0, block_l: int = 256,
+           interpret: bool = False) -> jax.Array:
+    """Dense MaxSim matrix H (N, T). Shapes must be pre-padded so that
+    BN | N, BT | T, BL | L (``repro.kernels.ops.maxsim_op`` handles padding).
+    """
+    N, L, M = doc_embs.shape
+    T = queries.shape[0]
+    bn = min(block_n, N)
+    bt = block_t if block_t > 0 else T
+    bt = min(bt, T)
+    bl = min(block_l, L)
+    assert N % bn == 0 and T % bt == 0 and L % bl == 0, (N, T, L, bn, bt, bl)
+    n_l_blocks = L // bl
+
+    grid = (N // bn, T // bt, n_l_blocks)
+    return pl.pallas_call(
+        functools.partial(_maxsim_kernel, n_l_blocks=n_l_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bl, M), lambda i, j, l: (i, l, 0)),
+            pl.BlockSpec((bn, bl), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bt, M), lambda i, j, l: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bt), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, T), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn, bt), jnp.float32)],
+        interpret=interpret,
+    )(doc_embs, doc_tok_mask, queries)

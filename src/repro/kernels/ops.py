@@ -1,0 +1,108 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handles (a) padding to tile multiples, (b) platform dispatch: real Pallas on
+TPU, ``interpret=True`` on CPU (executes the kernel body in Python — used to
+validate kernels in this container), and pure-jnp reference as the escape
+hatch (``REPRO_KERNEL_IMPL=ref``).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.maxsim import maxsim
+from repro.kernels.masked_maxsim import masked_maxsim
+from repro.kernels.gather_maxsim import gather_maxsim
+
+
+def _impl() -> str:
+    env = os.environ.get("REPRO_KERNEL_IMPL", "auto")
+    if env != "auto":
+        return env
+    platform = jax.default_backend()
+    return "pallas" if platform == "tpu" else "interpret"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def maxsim_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
+              queries: jax.Array, *, block_n: int = 8, block_t: int = 0,
+              block_l: int = 256) -> jax.Array:
+    """Dense MaxSim matrix H (N, T) — pads, dispatches, slices back."""
+    impl = _impl()
+    if impl == "ref":
+        return ref.maxsim_ref(doc_embs, doc_tok_mask, queries)
+    N, L, M = doc_embs.shape
+    T = queries.shape[0]
+    bn = min(block_n, max(N, 1))
+    bl = min(block_l, max(L, 1))
+    e = _pad_to(_pad_to(doc_embs, 0, bn), 1, bl)
+    m = _pad_to(_pad_to(doc_tok_mask, 0, bn), 1, bl)  # pads False => masked
+    bt = block_t if block_t > 0 else queries.shape[0]
+    q = _pad_to(queries, 0, bt)
+    h = maxsim(e, m, q, block_n=bn, block_t=bt, block_l=bl,
+               interpret=(impl == "interpret"))
+    return h[:N, :T]
+
+
+def masked_maxsim_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
+                     queries: jax.Array, tile_mask: jax.Array, *,
+                     block_n: int = 8, block_t: int = 8,
+                     block_l: int = 256) -> jax.Array:
+    impl = _impl()
+    if impl == "ref":
+        return ref.masked_maxsim_ref(doc_embs, doc_tok_mask, queries,
+                                     tile_mask, block_n, block_t)
+    N, L, M = doc_embs.shape
+    T = queries.shape[0]
+    bn, bt, bl = block_n, block_t, min(block_l, max(L, 1))
+    e = _pad_to(_pad_to(doc_embs, 0, bn), 1, bl)
+    m = _pad_to(_pad_to(doc_tok_mask, 0, bn), 1, bl)
+    q = _pad_to(queries, 0, bt)
+    # Grow tile_mask to the padded grid (padded tiles stay inactive).
+    gi, gj = e.shape[0] // bn, q.shape[0] // bt
+    tm = jnp.zeros((gi, gj), jnp.bool_).at[
+        :tile_mask.shape[0], :tile_mask.shape[1]].set(tile_mask)
+    h = masked_maxsim(e, m, q, tm, block_n=bn, block_t=bt, block_l=bl,
+                      interpret=(impl == "interpret"))
+    return h[:N, :T]
+
+
+def gather_maxsim_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
+                     queries: jax.Array, doc_idx: jax.Array,
+                     tok_idx: jax.Array, *, block_b: int = 8,
+                     block_l: int = 256) -> jax.Array:
+    impl = _impl()
+    if impl == "ref":
+        return ref.gather_maxsim_ref(doc_embs, doc_tok_mask, queries,
+                                     doc_idx, tok_idx)
+    B, G = tok_idx.shape
+    L = doc_embs.shape[1]
+    bb = min(block_b, max(B, 1))
+    bl = min(block_l, max(L, 1))
+    e = _pad_to(doc_embs, 1, bl)
+    m = _pad_to(doc_tok_mask, 1, bl)
+    pad_b = (-B) % bb
+    di = jnp.pad(doc_idx, (0, pad_b))
+    ti = jnp.pad(tok_idx, ((0, pad_b), (0, 0)))
+    out = gather_maxsim(e, m, queries, di, ti, block_b=bb, block_l=bl,
+                        interpret=(impl == "interpret"))
+    return out[:B]
+
+
+def maxsim_scores_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
+                     queries: jax.Array, **kw) -> jax.Array:
+    """Full late-interaction scores S (N,) = sum_t H[:, t]."""
+    return jnp.sum(maxsim_op(doc_embs, doc_tok_mask, queries, **kw), axis=-1)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (per-kernel
+shape/dtype sweeps in tests/test_kernels_*.py) and the fallback path used on
+platforms without Pallas support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = jnp.float32(-3e38)
+
+
+def maxsim_ref(doc_embs: jax.Array, doc_tok_mask: jax.Array,
+               queries: jax.Array) -> jax.Array:
+    """Dense MaxSim matrix (Eq. 4).
+
+    doc_embs:     (N, L, M)  document token embeddings (padded)
+    doc_tok_mask: (N, L)     True for real tokens
+    queries:      (T, M)     query token embeddings
+    returns H:    (N, T) f32 — H[i, t] = max_j <e_ij, q_t> over valid j
+    """
+    sims = jnp.einsum("nlm,tm->nlt", doc_embs.astype(jnp.float32),
+                      queries.astype(jnp.float32))
+    sims = jnp.where(doc_tok_mask[:, :, None], sims, _NEG)
+    return jnp.max(sims, axis=1)
+
+
+def maxsim_scores_ref(doc_embs: jax.Array, doc_tok_mask: jax.Array,
+                      queries: jax.Array) -> jax.Array:
+    """Full late-interaction scores (Eq. 2): S_i = sum_t H[i, t]."""
+    return jnp.sum(maxsim_ref(doc_embs, doc_tok_mask, queries), axis=-1)
+
+
+def masked_maxsim_ref(doc_embs: jax.Array, doc_tok_mask: jax.Array,
+                      queries: jax.Array, tile_mask: jax.Array,
+                      block_n: int, block_t: int) -> jax.Array:
+    """Tile-masked MaxSim: H computed only where the (doc-block, tok-block)
+    tile is active; inactive tiles are exactly 0.
+
+    tile_mask: (N // block_n, T // block_t) bool.
+    """
+    h = maxsim_ref(doc_embs, doc_tok_mask, queries)
+    full = jnp.repeat(jnp.repeat(tile_mask, block_n, axis=0), block_t, axis=1)
+    return jnp.where(full, h, 0.0)
+
+
+def gather_maxsim_ref(doc_embs: jax.Array, doc_tok_mask: jax.Array,
+                      queries: jax.Array, doc_idx: jax.Array,
+                      tok_idx: jax.Array) -> jax.Array:
+    """Gathered MaxSim for the block-synchronous bandit: compute
+    H[doc_idx[b], tok_idx[b, g]] for the selected (doc, token) cells only.
+
+    doc_idx: (B,) int32; tok_idx: (B, G) int32 -> out (B, G) f32.
+    """
+    e = doc_embs[doc_idx].astype(jnp.float32)            # (B, L, M)
+    m = doc_tok_mask[doc_idx]                            # (B, L)
+    q = queries[tok_idx].astype(jnp.float32)             # (B, G, M)
+    sims = jnp.einsum("blm,bgm->blg", e, q)
+    sims = jnp.where(m[:, :, None], sims, _NEG)
+    return jnp.max(sims, axis=1)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_mask: jax.Array, scale: float,
+                         softcap: float | None = None) -> jax.Array:
+    """Single-step decode attention oracle.
+
+    q: (B, H, D); k, v: (B, S, H, D); kv_mask: (B, S) -> out (B, H, D).
+    """
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(kv_mask[:, None, :], logits, _NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", w, v.astype(jnp.float32))

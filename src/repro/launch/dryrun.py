@@ -1,0 +1,148 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile EVERY (architecture x input-shape)
+cell on the production meshes and record memory/cost/collective analyses.
+
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --out results/dryrun.json
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count on first init): 512 host placeholder devices back the
+(2, 16, 16) production mesh on this CPU-only container. Lowering uses
+ShapeDtypeStructs only — nothing is allocated at full size.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+PAPER_ARCHS = ["colbert-text", "colbert-mm"]
+
+
+def run_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True):
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.args)
+        compiled = lowered.compile()
+    mem = H.memory_stats(compiled)
+    cost = H.flops_and_bytes(compiled)
+    coll = H.collective_bytes(compiled.as_text())
+    t1 = time.time()
+
+    # roofline terms (per-chip seconds): cost_analysis is per-device in
+    # SPMD mode (the HLO module is the per-device program)
+    compute_s = cost["hlo_flops"] / PEAK_FLOPS
+    memory_s = cost["hlo_bytes"] / HBM_BW
+    collective_s = coll.get("total", 0) / ICI_BW
+    model_flops_chip = cell.model_flops / n_chips
+    rec = {
+        "arch": arch, "shape": shape_name, "kind": cell.kind,
+        "mesh": dict(mesh.shape), "n_chips": n_chips,
+        "note": cell.note,
+        "model_flops_per_chip": model_flops_chip,
+        **cost,
+        "collective_bytes": coll,
+        "memory": mem,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": max(
+            (("compute", compute_s), ("memory", memory_s),
+             ("collective", collective_s)), key=lambda kv: kv[1])[0],
+        "useful_flops_frac": (model_flops_chip / cost["hlo_flops"]
+                              if cost["hlo_flops"] else 0.0),
+        "compile_s": t1 - t0,
+    }
+    if verbose:
+        mm = mem.get("temp_size_in_bytes", 0) / 2**30
+        aa = mem.get("argument_size_in_bytes", 0) / 2**30
+        print(f"  [OK] {arch:22s} {shape_name:15s} "
+              f"args={aa:7.2f}GiB temp={mm:7.2f}GiB "
+              f"T_c={compute_s*1e3:9.3f}ms T_m={memory_s*1e3:9.3f}ms "
+              f"T_coll={collective_s*1e3:9.3f}ms -> {rec['bottleneck']:10s} "
+              f"useful={rec['useful_flops_frac']*100:5.1f}% "
+              f"({t1-t0:.0f}s compile)")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="one arch id (default: all assigned + paper)")
+    ap.add_argument("--shape", default=None, help="one shape name")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the (2,16,16) 512-chip mesh")
+    ap.add_argument("--both", action="store_true",
+                    help="run single-pod AND multi-pod")
+    ap.add_argument("--out", default=None, help="write JSON records here")
+    ap.add_argument("--skip-paper", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    if not args.arch and not args.skip_paper:
+        archs += PAPER_ARCHS
+
+    meshes = []
+    if args.both:
+        meshes = [("single-pod", make_production_mesh(multi_pod=False)),
+                  ("multi-pod", make_production_mesh(multi_pod=True))]
+    else:
+        name = "multi-pod" if args.multi_pod else "single-pod"
+        meshes = [(name, make_production_mesh(multi_pod=args.multi_pod))]
+
+    records, failures = [], []
+    for mesh_name, mesh in meshes:
+        print(f"=== {mesh_name}: mesh {dict(mesh.shape)} "
+              f"({int(np.prod(list(mesh.shape.values())))} chips) ===")
+        for arch in archs:
+            cfg = get_config(arch)
+            shapes = ([args.shape] if args.shape
+                      else [s.name for s in cfg.shapes])
+            for shape_name in shapes:
+                try:
+                    rec = run_cell(arch, shape_name, mesh)
+                    rec["mesh_name"] = mesh_name
+                    records.append(rec)
+                except Exception as e:
+                    failures.append((mesh_name, arch, shape_name, str(e)))
+                    print(f"  [FAIL] {arch} {shape_name}: {e}")
+                    traceback.print_exc(limit=3)
+
+    print(f"\n{len(records)} cells compiled, {len(failures)} failures")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"records": records,
+                       "failures": failures,
+                       "constants": {"peak_flops": PEAK_FLOPS,
+                                     "hbm_bw": HBM_BW, "ici_bw": ICI_BW}},
+                      f, indent=1)
+        print(f"wrote {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS for 512 host devices
+before any jax import; tests/benches see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e production mesh: 16x16 = 256 chips per pod; the multi-pod
+    variant stacks 2 pods on a leading 'pod' axis (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_devices: int = 0, *, axes=("data", "model")):
+    """Small debug mesh over whatever devices exist (tests/examples)."""
+    n = n_devices or len(jax.devices())
+    if len(axes) == 2:
+        # favor model axis when n allows
+        model = 1
+        for m in (8, 4, 2, 1):
+            if n % m == 0:
+                model = m
+                break
+        return jax.make_mesh((n // model, model), axes)
+    return jax.make_mesh((n,), axes)

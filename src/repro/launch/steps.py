@@ -1,0 +1,523 @@
+"""Per-(arch x shape) cell programs for the multi-pod dry-run.
+
+``build_cell(arch, shape_name, mesh)`` returns a CellProgram holding:
+  * the step callable (train_step / prefill_step / serve_step / scoring),
+  * abstract inputs (ShapeDtypeStruct — never allocated),
+  * in/out shardings for the mesh,
+  * analytic MODEL_FLOPS (6*N*D train / 2*N*D forward; MoE uses N_active),
+so launch/dryrun.py can mechanically ``jit(...).lower(...).compile()`` every
+cell and benchmarks/roofline.py can derive the three roofline terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import (GNNConfig, LMConfig, RecsysConfig,
+                                RetrievalConfig, ShapeSpec)
+from repro.dist import sharding as SH
+from repro.models import recsys as R
+from repro.models.gnn import GraphBatch, init_pna
+from repro.models.transformer import init_cache, init_lm, forward_prefill
+from repro.serve.engine import serve_step
+from repro.train.optimizer import adamw, cosine_schedule
+from repro.train.train_step import (TrainState, make_gnn_train_step,
+                                    make_lm_train_step,
+                                    make_recsys_train_step,
+                                    recsys_score_candidates, recsys_serve)
+
+SDS = jax.ShapeDtypeStruct
+
+
+class CellProgram(NamedTuple):
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: Tuple[Any, ...]            # abstract ShapeDtypeStructs
+    in_shardings: Any
+    out_shardings: Any
+    model_flops: float
+    note: str = ""
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def _sds_like(tree):
+    return jax.tree.map(lambda x: SDS(x.shape, x.dtype), tree)
+
+
+def _pad_mult(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _n_devices(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))
+
+
+def _dp_total(mesh: Mesh) -> int:
+    n = 1
+    for a in SH.fsdp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+def lm_model_flops(cfg: LMConfig, shape: ShapeSpec) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        # + attention quadratic term (per layer 2*2*S^2*q_dim, window-capped)
+        attn = 0.0
+        for _, (n_l, s_att) in _stack_windows(cfg, shape.seq_len).items():
+            attn += (shape.global_batch * n_l
+                     * 2 * 2 * shape.seq_len * min(s_att, shape.seq_len)
+                     * cfg.q_dim * 0.5)
+        return 2.0 * n_active * tokens + attn
+    # decode: one token per sequence + attention over the cache
+    attn = 0.0
+    for _, (n_l, s_att) in _stack_windows(cfg, shape.seq_len).items():
+        attn += (shape.global_batch * n_l * 2 * 2
+                 * min(s_att, shape.seq_len) * cfg.q_dim)
+    return 2.0 * n_active * shape.global_batch + attn
+
+
+def _stack_windows(cfg: LMConfig, max_seq: int) -> Dict[str, Tuple[int, int]]:
+    w = cfg.sliding_window or 0
+    if cfg.local_global_alternating:
+        n_pairs = cfg.n_layers // 2
+        return {"local": (n_pairs, w or max_seq), "global": (n_pairs, max_seq)}
+    return {"all": (cfg.n_layers, w if w else max_seq)}
+
+
+def gnn_model_flops(cfg: GNNConfig, n_nodes: int, n_edges: int,
+                    d_feat: int, train: bool = True) -> float:
+    d = cfg.d_hidden
+    n_agg = len(cfg.aggregators) * len(cfg.scalers)
+    per_layer = (n_edges * 2 * d * d * 2               # two msg matmuls
+                 + n_nodes * 2 * (1 + n_agg) * d * d)  # update matmul
+    fwd = (n_nodes * 2 * d_feat * d                    # encode
+           + cfg.n_layers * per_layer
+           + n_nodes * 2 * d * cfg.n_classes)
+    return (3.0 if train else 1.0) * fwd
+
+
+def recsys_model_flops(cfg: RecsysConfig, shape: ShapeSpec) -> float:
+    B = shape.batch if shape.n_candidates == 0 else shape.n_candidates
+    D = cfg.embed_dim
+    if cfg.interaction == "fm-2way":
+        # retrieval_cand uses the FM algebraic shortcut: O(N*D), F-free
+        fwd = (B * D * 4 if shape.n_candidates > 0
+               else B * cfg.n_sparse * D * 4)
+    elif cfg.interaction == "self-attn":
+        F, H, A = cfg.n_sparse, cfg.n_heads, cfg.d_attn
+        per = 2 * F * (D * H * A * 4 + F * H * A * 2)
+        fwd = B * cfg.n_attn_layers * per + B * 2 * F * H * A
+    elif cfg.interaction == "target-attn":
+        S = cfg.seq_len
+        attn = S * (4 * D * cfg.attn_mlp[0] + cfg.attn_mlp[0] * cfg.attn_mlp[1]
+                    + cfg.attn_mlp[1]) * 2
+        mlp = (3 * D * cfg.mlp[0] + cfg.mlp[0] * cfg.mlp[1] + cfg.mlp[1]) * 2
+        fwd = B * (attn + mlp)
+    else:  # sasrec
+        S = cfg.seq_len
+        per_block = 2 * S * (4 * D * D) + 2 * S * S * D * 2
+        n_seq = shape.batch if shape.n_candidates == 0 else 1
+        fwd = n_seq * cfg.n_blocks * per_block + B * 2 * D
+    return (3.0 if shape.kind == "train" else 1.0) * fwd
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(cfg: LMConfig, shape: ShapeSpec, mesh: Mesh,
+             micro: int = 0, param_mode: str = "zero3",
+             flash_decode: bool = False) -> CellProgram:
+    dtype = jnp.bfloat16
+    dp_total = _dp_total(mesh)
+    rules = SH.lm_param_rules(mesh, mode=param_mode)
+    key = jax.random.key(0)
+
+    params_abs = jax.eval_shape(lambda: init_lm(key, cfg, dtype=dtype))
+    p_specs = SH.specs_from_rules(params_abs, rules)
+    p_shard = _named(mesh, p_specs)
+
+    if shape.kind == "train":
+        opt = adamw(cosine_schedule(3e-4, 100, 10_000))
+        m_abs = jax.tree.map(lambda p: SDS(p.shape, jnp.float32), params_abs)
+        from repro.train.optimizer import AdamWState
+        state_abs = TrainState(
+            params=params_abs,
+            opt=AdamWState(step=SDS((), jnp.int32), m=m_abs, v=m_abs))
+        opt_specs = SH.specs_from_rules(params_abs, SH.lm_opt_rules(mesh))
+        state_specs = TrainState(
+            params=p_specs,
+            opt=AdamWState(step=P(), m=opt_specs, v=opt_specs))
+        state_shard = _named(mesh, state_specs)
+
+        B, S = shape.global_batch, shape.seq_len
+        if param_mode == "dp_all":
+            dp_total = _n_devices(mesh)
+        n_micro = micro if micro else max(1, B // dp_total)
+        # chunked attention keeps per-layer logits ~(q_chunk x S) in remat;
+        # MoE archs get tighter chunks (dispatch buffers add pressure)
+        qc = (1024 if cfg.moe else 2048) if S > 2048 else 0
+        cfg_t = dataclasses.replace(cfg, attn_q_chunk=qc)
+        step = make_lm_train_step(cfg_t, opt, num_microbatches=n_micro,
+                                  chunk_tokens=4096 if cfg.moe else 8192)
+        batch_abs = {"tokens": SDS((B, S), jnp.int32),
+                     "targets": SDS((B, S), jnp.int32)}
+        bs = (P(tuple(mesh.axis_names), None) if param_mode == "dp_all"
+              else SH.lm_batch_spec(mesh))
+        b_spec = {"tokens": bs, "targets": bs}
+        out_shard = (state_shard,
+                     {"loss": NamedSharding(mesh, P()),
+                      "grad_norm": NamedSharding(mesh, P())})
+        return CellProgram(
+            arch=cfg.name, shape=shape.name, kind="train", fn=step,
+            args=(state_abs, batch_abs),
+            in_shardings=(state_shard, _named(mesh, b_spec)),
+            out_shardings=out_shard,
+            model_flops=lm_model_flops(cfg, shape),
+            note=f"microbatches={n_micro}",
+            donate_argnums=(0,))
+
+    if shape.kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+        cfg_p = dataclasses.replace(cfg, attn_q_chunk=2048 if S >= 16384 else 0)
+
+        def prefill_step(params, tokens):
+            return forward_prefill(params, cfg_p, tokens, max_seq=S,
+                                   cache_dtype=jnp.bfloat16)
+
+        cache_abs = jax.eval_shape(
+            lambda: init_cache(cfg, B, S, jnp.bfloat16))
+        c_specs = {name: type(stack)(**SH.lm_cache_specs(mesh, B))
+                   for name, stack in cache_abs.items()}
+        out_shard = (NamedSharding(mesh, P(SH.fsdp_axes(mesh), None)),
+                     _named(mesh, c_specs))
+        return CellProgram(
+            arch=cfg.name, shape=shape.name, kind="prefill", fn=prefill_step,
+            args=(params_abs, SDS((B, S), jnp.int32)),
+            in_shardings=(p_shard,
+                          NamedSharding(mesh, SH.lm_batch_spec(mesh))),
+            out_shardings=out_shard,
+            model_flops=lm_model_flops(cfg, shape),
+            note=f"q_chunk={cfg_p.attn_q_chunk}")
+
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    cache_abs = jax.eval_shape(lambda: init_cache(cfg, B, S, jnp.bfloat16))
+    c_specs = {name: type(stack)(**SH.lm_cache_specs(mesh, B))
+               for name, stack in cache_abs.items()}
+    # pin the per-layer cache slices inside the scan to the cache layout
+    # (without this GSPMD rematerializes them un-sharded; see DESIGN.md)
+    from repro.dist import act_sharding
+    slice_specs = SH.lm_cache_specs(mesh, B)
+    act_sharding.set_extra("cache_kv", P(*tuple(slice_specs["k"])[1:]))
+    act_sharding.set_extra("cache_pos", slice_specs["pos"])
+    from repro.dist import flash_decode as FD
+    if flash_decode:
+        # §Perf H2: explicit shard_map split-K decode attention
+        seq_part = tuple(slice_specs["k"])[2]
+        batch_part = tuple(slice_specs["k"])[1]
+        FD.configure(mesh, batch_part, seq_part)
+    else:
+        FD.configure(None, None, None)
+    c_shard = _named(mesh, c_specs)
+    tok_spec = (NamedSharding(mesh, P(SH.fsdp_axes(mesh)))
+                if B > 1 else NamedSharding(mesh, P()))
+
+    def decode_step(params, token, position, cache):
+        return serve_step(params, cfg, token, position, cache)
+
+    logits_shard = (NamedSharding(mesh, P(SH.fsdp_axes(mesh), "model"))
+                    if B > 1 else NamedSharding(mesh, P(None, "model")))
+    return CellProgram(
+        arch=cfg.name, shape=shape.name, kind="decode", fn=decode_step,
+        args=(params_abs, SDS((B,), jnp.int32), SDS((), jnp.int32),
+              cache_abs),
+        in_shardings=(p_shard, tok_spec, NamedSharding(mesh, P()), c_shard),
+        out_shardings=(logits_shard, c_shard),
+        model_flops=lm_model_flops(cfg, shape),
+        donate_argnums=(3,),
+        note=f"kv_cache={ {k: v.k.shape for k, v in cache_abs.items()} }")
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_cell(cfg: GNNConfig, shape: ShapeSpec, mesh: Mesh) -> CellProgram:
+    n_dev = _n_devices(mesh)
+    key = jax.random.key(0)
+
+    if shape.name == "minibatch_lg":
+        f1, f2 = shape.fanout
+        n_nodes = shape.batch_nodes * (1 + f1 + f1 * f2)
+        n_edges = shape.batch_nodes * (f1 + f1 * f2)
+        d_feat = shape.d_feat
+        note = f"sampled subgraph {n_nodes} nodes / {n_edges} edges"
+    elif shape.name == "molecule":
+        n_nodes = shape.graph_batch * shape.n_nodes
+        n_edges = shape.graph_batch * shape.n_edges
+        d_feat = shape.d_feat
+        note = f"block-diag batch of {shape.graph_batch} molecules"
+    else:
+        n_nodes, n_edges, d_feat = shape.n_nodes, shape.n_edges, shape.d_feat
+        note = "full graph"
+    # dst-partition contract (models/gnn.py): +25% slack for range skew
+    n_edges_p = _pad_mult(int(n_edges * 1.25), n_dev)
+    n_nodes_p = _pad_mult(n_nodes, n_dev)
+
+    params_abs = jax.eval_shape(lambda: init_pna(key, cfg, d_feat))
+    p_specs = SH.specs_from_rules(params_abs, SH.gnn_param_rules(mesh))
+
+    opt = adamw(cosine_schedule(1e-3, 100, 10_000))
+    from repro.train.optimizer import AdamWState
+    m_abs = jax.tree.map(lambda p: SDS(p.shape, jnp.float32), params_abs)
+    state_abs = TrainState(params=params_abs,
+                           opt=AdamWState(step=SDS((), jnp.int32),
+                                          m=m_abs, v=m_abs))
+    state_specs = TrainState(params=p_specs,
+                             opt=AdamWState(step=P(), m=p_specs, v=p_specs))
+
+    every = tuple(mesh.axis_names)
+    batch_abs = GraphBatch(
+        feats=SDS((n_nodes_p, d_feat), jnp.float32),
+        senders=SDS((n_edges_p,), jnp.int32),
+        receivers=SDS((n_edges_p,), jnp.int32),
+        edge_mask=SDS((n_edges_p,), jnp.bool_),
+        node_mask=SDS((n_nodes_p,), jnp.bool_),
+        labels=SDS((n_nodes_p,), jnp.int32))
+    b_specs = GraphBatch(feats=P(), senders=P(every), receivers=P(every),
+                         edge_mask=P(every), node_mask=P(), labels=P())
+
+    from repro.models.gnn import pna_loss_sharded
+
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda prm: pna_loss_sharded(prm, cfg, batch, mesh))(state.params)
+        new_p, new_opt, gnorm = opt.update(grads, state.opt, state.params)
+        return TrainState(new_p, new_opt), {"loss": loss, "grad_norm": gnorm}
+    return CellProgram(
+        arch=cfg.name, shape=shape.name, kind="train", fn=step,
+        args=(state_abs, batch_abs),
+        in_shardings=(_named(mesh, state_specs), _named(mesh, b_specs)),
+        out_shardings=(_named(mesh, state_specs),
+                       {"loss": NamedSharding(mesh, P()),
+                        "grad_norm": NamedSharding(mesh, P())}),
+        model_flops=gnn_model_flops(cfg, n_nodes, n_edges, d_feat),
+        note=note, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_init(cfg: RecsysConfig, key):
+    if cfg.interaction == "fm-2way":
+        return R.init_fm(key, cfg)
+    if cfg.interaction == "self-attn":
+        return R.init_autoint(key, cfg)
+    if cfg.interaction == "target-attn":
+        return R.init_din(key, cfg)
+    return R.init_sasrec(key, cfg)
+
+
+def _recsys_batch_abs(cfg: RecsysConfig, shape: ShapeSpec, mesh: Mesh):
+    """(abstract batch, batch specs) for forward/train shapes."""
+    B = shape.batch
+    dp = SH.fsdp_axes(mesh)
+    if cfg.interaction in ("fm-2way", "self-attn"):
+        batch = {"ids": SDS((B, cfg.n_sparse), jnp.int32)}
+        specs = {"ids": P(dp, None)}
+    else:
+        batch = {"hist_ids": SDS((B, cfg.seq_len), jnp.int32),
+                 "hist_mask": SDS((B, cfg.seq_len), jnp.bool_),
+                 "target_ids": SDS((B,), jnp.int32)}
+        specs = {"hist_ids": P(dp, None), "hist_mask": P(dp, None),
+                 "target_ids": P(dp)}
+    if shape.kind == "train":
+        batch["labels"] = SDS((B,), jnp.float32)
+        specs["labels"] = P(dp)
+    return batch, specs
+
+
+def _recsys_cell(cfg: RecsysConfig, shape: ShapeSpec, mesh: Mesh) -> CellProgram:
+    key = jax.random.key(0)
+    params_abs = jax.eval_shape(lambda: _recsys_init(cfg, key))
+    p_specs = SH.specs_from_rules(params_abs, SH.recsys_param_rules(mesh))
+    p_shard = _named(mesh, p_specs)
+    every = tuple(mesh.axis_names)
+    n_dev = _n_devices(mesh)
+
+    if shape.kind == "train":
+        opt = adamw(cosine_schedule(1e-3, 100, 10_000))
+        from repro.train.optimizer import AdamWState
+        m_abs = jax.tree.map(lambda p: SDS(p.shape, jnp.float32), params_abs)
+        state_abs = TrainState(params=params_abs,
+                               opt=AdamWState(step=SDS((), jnp.int32),
+                                              m=m_abs, v=m_abs))
+        state_specs = TrainState(params=p_specs,
+                                 opt=AdamWState(step=P(), m=p_specs,
+                                                v=p_specs))
+        batch_abs, b_specs = _recsys_batch_abs(cfg, shape, mesh)
+        step = make_recsys_train_step(cfg, opt)
+        return CellProgram(
+            arch=cfg.name, shape=shape.name, kind="train", fn=step,
+            args=(state_abs, batch_abs),
+            in_shardings=(_named(mesh, state_specs), _named(mesh, b_specs)),
+            out_shardings=(_named(mesh, state_specs),
+                           {"loss": NamedSharding(mesh, P()),
+                            "grad_norm": NamedSharding(mesh, P())}),
+            model_flops=recsys_model_flops(cfg, shape),
+            donate_argnums=(0,))
+
+    if shape.n_candidates > 0:
+        # retrieval_cand: 1 query vs ~1M candidates
+        N = _pad_mult(shape.n_candidates, n_dev)
+        if cfg.interaction in ("fm-2way", "self-attn"):
+            batch_abs = {"context_ids": SDS((cfg.n_sparse - 1,), jnp.int32),
+                         "cand_ids": SDS((N,), jnp.int32)}
+            b_specs = {"context_ids": P(), "cand_ids": P(every)}
+        else:
+            batch_abs = {"hist_ids": SDS((cfg.seq_len,), jnp.int32),
+                         "hist_mask": SDS((cfg.seq_len,), jnp.bool_),
+                         "cand_ids": SDS((N,), jnp.int32)}
+            b_specs = {"hist_ids": P(), "hist_mask": P(),
+                       "cand_ids": P(every)}
+
+        def score_step(params, batch):
+            if cfg.interaction == "self-attn":
+                return R.autoint_score_candidates(
+                    params, cfg, batch["context_ids"], batch["cand_ids"],
+                    chunk=N)
+            if cfg.interaction == "target-attn":
+                return R.din_score_candidates(
+                    params, cfg, batch["hist_ids"], batch["hist_mask"],
+                    batch["cand_ids"], chunk=N)
+            return recsys_score_candidates(params, cfg, batch)
+
+        return CellProgram(
+            arch=cfg.name, shape=shape.name, kind="serve", fn=score_step,
+            args=(params_abs, batch_abs),
+            in_shardings=(p_shard, _named(mesh, b_specs)),
+            out_shardings=NamedSharding(mesh, P(every)),
+            model_flops=recsys_model_flops(cfg, shape),
+            note=f"candidates padded {shape.n_candidates} -> {N}")
+
+    # plain serving (serve_p99 / serve_bulk)
+    batch_abs, b_specs = _recsys_batch_abs(cfg, shape, mesh)
+
+    def serve(params, batch):
+        return recsys_serve(params, cfg, batch)
+
+    return CellProgram(
+        arch=cfg.name, shape=shape.name, kind="serve", fn=serve,
+        args=(params_abs, batch_abs),
+        in_shardings=(p_shard, _named(mesh, b_specs)),
+        out_shardings=NamedSharding(mesh, P(SH.fsdp_axes(mesh))),
+        model_flops=recsys_model_flops(cfg, shape))
+
+
+# ---------------------------------------------------------------------------
+# Retrieval (paper) cells
+# ---------------------------------------------------------------------------
+
+def _retrieval_cell(cfg: RetrievalConfig, shape: ShapeSpec,
+                    mesh: Mesh) -> CellProgram:
+    from repro.retrieval.service import (make_rerank_bandit_step,
+                                         make_rerank_dense_step)
+    n_dev = _n_devices(mesh)
+    every = tuple(mesh.axis_names)
+    B, N = shape.batch, shape.n_candidates
+    L, M, T = cfg.doc_tokens, cfg.dim, cfg.query_tokens
+    C = _pad_mult(cfg.corpus_docs, n_dev)
+
+    if shape.name.startswith("rerank_bandit"):
+        step, in_specs, out_specs = make_rerank_bandit_step(
+            mesh, topk=10, max_rounds=max(4, (N * T) // (16 * 8) // 2))
+        args = (SDS((B, N, L, M), jnp.bfloat16),   # gathered candidate docs
+                SDS((B, N, L), jnp.bool_),
+                SDS((B, T, M), jnp.bfloat16),
+                SDS((B, N), jnp.int32),
+                SDS((B, N, T), jnp.float32),
+                SDS((B, N, T), jnp.float32))
+        return CellProgram(
+            arch=cfg.name, shape=shape.name, kind="serve", fn=step,
+            args=args,
+            in_shardings=_named(mesh, in_specs),
+            out_shardings=_named(mesh, out_specs),
+            model_flops=B * N * T * L * M * 2 * 0.3,  # at ~30% coverage
+            note="block-synchronous Col-Bandit, adaptive rounds")
+
+    step = make_rerank_dense_step(mesh, topk=10)
+    n_loc = max(1, -(-N * 4 // n_dev))   # 4x headroom for routing skew
+    args = (SDS((C, L, M), jnp.bfloat16),
+            SDS((C, L), jnp.bool_),
+            SDS((B, T, M), jnp.bfloat16),
+            SDS((B, n_dev, n_loc), jnp.int32))
+    in_specs = (P(every, None, None), P(every, None), P(None, None, None),
+                P(None, every, None))
+    return CellProgram(
+        arch=cfg.name, shape=shape.name, kind="serve", fn=step,
+        args=args,
+        in_shardings=_named(mesh, in_specs),
+        out_shardings=(NamedSharding(mesh, P(None, None)),
+                       NamedSharding(mesh, P(None, None))),
+        model_flops=B * N * T * L * M * 2,
+        note=f"corpus {C} docs sharded {n_dev}-way, {n_loc} cand slots/shard")
+
+
+# ---------------------------------------------------------------------------
+# entry
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               depth: int = 0, batch: int = 0, micro: int = 0,
+               param_mode: str = "zero3",
+               flash_decode: bool = False) -> CellProgram:
+    """depth/batch/micro overrides serve the roofline pass: reduced-depth
+    UNROLLED lowerings whose cost numbers extrapolate linearly to full
+    depth (launch/scan_util.py explains why rolled scans can't be used)."""
+    from repro.dist import act_sharding
+    act_sharding.set_mesh(mesh)
+    if param_mode == "dp_all":
+        act_sharding.set_axes(tuple(mesh.axis_names), None)
+    cfg = get_config(arch)
+    shape = next(s for s in cfg.shapes if s.name == shape_name)
+    if depth and cfg.family == "lm":
+        cfg = dataclasses.replace(cfg, n_layers=depth)
+    if batch and cfg.family == "lm":
+        shape = dataclasses.replace(shape, global_batch=batch)
+    if batch and cfg.family == "retrieval":
+        shape = dataclasses.replace(shape, batch=batch)
+    if cfg.family == "lm":
+        return _lm_cell(cfg, shape, mesh, micro=micro, param_mode=param_mode,
+                        flash_decode=flash_decode)
+    if cfg.family == "gnn":
+        return _gnn_cell(cfg, shape, mesh)
+    if cfg.family == "recsys":
+        return _recsys_cell(cfg, shape, mesh)
+    if cfg.family == "retrieval":
+        return _retrieval_cell(cfg, shape, mesh)
+    raise ValueError(cfg.family)

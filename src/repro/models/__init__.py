@@ -1,0 +1,1 @@
+"""Model zoo: transformer LMs, ColBERT head, PNA GNN, recsys models."""

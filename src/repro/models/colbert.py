@@ -1,0 +1,35 @@
+"""Late-interaction (ColBERT-style) encoder head over an LM backbone.
+
+This is the paper-integration point for the assigned LM archs: any of the 5
+transformer backbones + a linear projection to li_dim (=128, matching
+ColBERTv2 / Jina-ColBERT-v2 / Granite Vision) + L2 normalization produces
+the token embeddings that the Col-Bandit reranker consumes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models.layers import dense_init
+from repro.models.transformer import forward_hidden
+
+Params = Dict[str, Any]
+
+
+def init_li_head(key: jax.Array, cfg: LMConfig, dtype=jnp.float32) -> Params:
+    return {"proj": dense_init(key, cfg.d_model, cfg.li_dim, dtype)}
+
+
+def encode_tokens(lm_params: Params, head: Params, cfg: LMConfig,
+                  tokens: jax.Array, mask: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, S) + validity mask -> (B, S, li_dim) L2-normalized token
+    embeddings (masked positions are zeroed)."""
+    hidden = forward_hidden(lm_params, cfg, tokens)      # (B, S, D)
+    emb = hidden @ head["proj"]                          # (B, S, li_dim)
+    emb = emb / jnp.maximum(
+        jnp.linalg.norm(emb.astype(jnp.float32), axis=-1, keepdims=True),
+        1e-9).astype(emb.dtype)
+    return jnp.where(mask[:, :, None], emb, 0.0), mask

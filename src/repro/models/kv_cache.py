@@ -1,0 +1,90 @@
+"""KV caches for decode: full-length and ring-buffer (sliding-window).
+
+A cache stack holds (k, v, pos) for a group of layers with identical shape:
+  k, v: (n_layers_in_stack, B, S_cache, H_kv, D_head)
+  pos:  (B, S_cache) int32 — absolute position held in each slot (-1 empty)
+
+Sliding-window layers use S_cache = window with ring addressing
+slot = position % window; full-attention layers use S_cache = max_seq.
+Positions are stored explicitly so prefill layouts, ring wrap-around and
+validity all fall out of one mask: valid = pos >= 0 (and the window/causal
+mask handles recency).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CacheStack(NamedTuple):
+    k: jax.Array     # (n, B, S_cache, Hkv, Dh)
+    v: jax.Array
+    pos: jax.Array   # (B, S_cache) i32, shared across the stack's layers
+
+
+Cache = Dict[str, CacheStack]
+
+
+def init_stack(n_layers: int, batch: int, s_cache: int, n_kv_heads: int,
+               d_head: int, dtype=jnp.bfloat16) -> CacheStack:
+    return CacheStack(
+        k=jnp.zeros((n_layers, batch, s_cache, n_kv_heads, d_head), dtype),
+        v=jnp.zeros((n_layers, batch, s_cache, n_kv_heads, d_head), dtype),
+        pos=jnp.full((batch, s_cache), -1, jnp.int32),
+    )
+
+
+def decode_slot(position: jax.Array, s_cache: int) -> jax.Array:
+    """Ring slot for an absolute position (identity when cache is full-seq)."""
+    return jnp.mod(position, s_cache)
+
+
+def write_token(stack_k: jax.Array, stack_v: jax.Array, pos_arr: jax.Array,
+                k_new: jax.Array, v_new: jax.Array,
+                position: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Write one decode token into a single layer's (B, S, H, D) cache slices.
+    k_new/v_new: (B, 1, H, D); position: scalar i32 (same for the batch).
+
+    Implemented as a masked SELECT over the slot axis rather than
+    dynamic_update_slice: a dynamic index into a sharded dimension forces
+    GSPMD into involuntary full rematerialization (it replicates the whole
+    cache — observed 100+ GiB/chip on long_500k), while the elementwise
+    select keeps every shard local. XLA aliases the output with the donated
+    input buffer, so no extra copy materializes."""
+    s_cache = stack_k.shape[1]
+    slot = decode_slot(position, s_cache)
+    slot_mask = jnp.arange(s_cache) == slot                  # (S,)
+    k = jnp.where(slot_mask[None, :, None, None], k_new.astype(stack_k.dtype),
+                  stack_k)
+    v = jnp.where(slot_mask[None, :, None, None], v_new.astype(stack_v.dtype),
+                  stack_v)
+    pos = jnp.where(slot_mask[None, :], position.astype(jnp.int32), pos_arr)
+    return k, v, pos
+
+
+def prefill_write(k_seq: jax.Array, v_seq: jax.Array, positions: jax.Array,
+                  s_cache: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Turn per-layer prefill K/V (B, S, H, D) into a cache of size s_cache.
+
+    Full cache (s_cache >= S): pad to the right.
+    Ring cache  (s_cache <  S): keep the last s_cache tokens at their ring
+    slots (older tokens are outside the window by construction).
+    """
+    B, S, H, D = k_seq.shape
+    if s_cache >= S:
+        pad = s_cache - S
+        k = jnp.pad(k_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v_seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.pad(positions.astype(jnp.int32), ((0, 0), (0, pad)),
+                      constant_values=-1)
+        return k, v, pos
+    k_tail = k_seq[:, S - s_cache:]
+    v_tail = v_seq[:, S - s_cache:]
+    p_tail = positions[:, S - s_cache:].astype(jnp.int32)
+    slots = jnp.mod(p_tail[0], s_cache)                      # (s_cache,)
+    k = jnp.zeros((B, s_cache, H, D), k_seq.dtype).at[:, slots].set(k_tail)
+    v = jnp.zeros((B, s_cache, H, D), v_seq.dtype).at[:, slots].set(v_tail)
+    pos = jnp.full((B, s_cache), -1, jnp.int32).at[:, slots].set(p_tail)
+    return k, v, pos

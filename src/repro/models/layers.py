@@ -1,0 +1,233 @@
+"""Shared neural building blocks (pure-functional, params = nested dicts).
+
+Covers every attention flavor in the assigned LM pool: GQA, sliding-window
+(Mixtral), local/global alternating + softcaps (Gemma-2), QKV bias (Qwen2.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from repro.models.scan_util import scan as _scan
+from repro.dist.act_sharding import constrain as _cst
+
+Params = Dict[str, Any]
+_NEG = jnp.float32(-1e30)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, d_in: int, d_out: int,
+               dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(jnp.float32(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int,
+               dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+            "dice": jax.nn.sigmoid}[name]
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key: jax.Array, d_model: int, n_heads: int,
+                   n_kv_heads: int, d_head: int, qkv_bias: bool,
+                   dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * d_head, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * d_head, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * d_head, dtype),
+        "wo": dense_init(ks[3], n_heads * d_head, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * d_head,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * d_head,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * d_head,), dtype)
+    return p
+
+
+def _attn_mask(q_pos: jax.Array, kv_pos: jax.Array,
+               window: jax.Array) -> jax.Array:
+    """Causal + optional sliding window, built from positions (no O(S^2)
+    materialized constants; XLA fuses the iota comparisons into the softmax).
+    q_pos: (B, Sq); kv_pos: (B, Skv); window: scalar (<=0 => full causal)."""
+    causal = kv_pos[:, None, :] <= q_pos[:, :, None]          # (B, Sq, Skv)
+    dist = q_pos[:, :, None] - kv_pos[:, None, :]
+    in_window = jnp.where(window > 0, dist < window, True)
+    return causal & in_window
+
+
+def attention(
+    p: Params,
+    x: jax.Array,                   # (B, S, D)
+    positions: jax.Array,           # (B, S)
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    d_head: int,
+    rope_theta: float,
+    window: jax.Array,              # scalar i32; <=0 => full
+    attn_softcap: Optional[float] = None,
+    kv_override: Optional[Tuple[jax.Array, jax.Array, jax.Array, jax.Array]] = None,
+    q_chunk: int = 0,
+) -> jax.Array:
+    """Causal (optionally windowed) GQA self-attention.
+
+    kv_override = (k, v, kv_pos, kv_valid) lets the decode path attend over a
+    cache instead of the in-sequence K/V; shapes (B, Skv, Hkv, Dh), (B, Skv).
+
+    q_chunk > 0 processes queries in sequential chunks (lax.scan) so the
+    (S, Skv) logits never materialize whole — the memory-efficient path for
+    32k prefill (keys stay resident; peak logits = q_chunk x Skv).
+    """
+    B, S, D = x.shape
+    q = _cst(x @ p["wq"], "dp", None, "tp")   # heads -> TP
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, n_heads, d_head)
+    q = apply_rope(q, positions, rope_theta)
+
+    if kv_override is None:
+        k = x @ p["wk"]
+        v = x @ p["wv"]
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        k = apply_rope(k.reshape(B, S, n_kv_heads, d_head), positions,
+                       rope_theta)
+        v = v.reshape(B, S, n_kv_heads, d_head)
+        kv_pos, kv_valid = positions, jnp.ones((B, S), jnp.bool_)
+    else:
+        k, v, kv_pos, kv_valid = kv_override
+
+    groups = n_heads // n_kv_heads
+    scale = 1.0 / jnp.sqrt(jnp.float32(d_head))
+
+    def attend(q_blk: jax.Array, pos_blk: jax.Array) -> jax.Array:
+        """q_blk (B, Sq, H, Dh), pos_blk (B, Sq) -> (B, Sq, H*Dh)."""
+        Sq = q_blk.shape[1]
+        qg = q_blk.reshape(B, Sq, n_kv_heads, groups, d_head)
+        logits = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        # Optional §Perf constraint ("cache_logits"): pins decode logits to
+        # the KV-seq sharding so the softmax runs DISTRIBUTED (flash-decoding
+        # split-K: tiny max/sum all-reduces) instead of GSPMD all-gathering
+        # K/V per layer. No-op unless registered by the launch layer.
+        from repro.dist.act_sharding import constrain_named as _cn
+        logits = _cn(logits, "cache_logits")
+        logits = softcap(logits, attn_softcap)
+        mask = _attn_mask(pos_blk, kv_pos, window) & kv_valid[:, None, :]
+        logits = jnp.where(mask[:, None, None, :, :], logits, _NEG)
+        w = jax.nn.softmax(logits, axis=-1)
+        w = _cn(w, "cache_logits")
+        out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+        return out.reshape(B, Sq, n_heads * d_head).astype(x.dtype)
+
+    k = _cst(k, "dp", None, None, None)   # KV heads replicated across TP
+    v = _cst(v, "dp", None, None, None)
+    if q_chunk and S > q_chunk and S % q_chunk == 0:
+        n_chunks = S // q_chunk
+        q_cs = q.reshape(B, n_chunks, q_chunk, n_heads, d_head
+                         ).transpose(1, 0, 2, 3, 4)
+        pos_cs = positions.reshape(B, n_chunks, q_chunk).transpose(1, 0, 2)
+        _, outs = _scan(
+            lambda _, xs: (None, attend(xs[0], xs[1])), None, (q_cs, pos_cs))
+        out = outs.transpose(1, 0, 2, 3).reshape(B, S, n_heads * d_head)
+    else:
+        out = attend(q, positions)
+    return _cst(out @ p["wo"], "dp", None, None)
+
+
+# ---------------------------------------------------------------------------
+# MLP (GLU family)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int,
+             dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def mlp(p: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    h = _cst(act_fn(act)(x @ p["w_gate"]) * (x @ p["w_up"]),
+             "dp", None, "tp")
+    return _cst(h @ p["w_down"], "dp", None, None)
+
+
+def init_dense(key: jax.Array, d_in: int, d_out: int, bias: bool = True,
+               dtype=jnp.float32) -> Params:
+    p = {"w": dense_init(key, d_in, d_out, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    return y + p["b"] if "b" in p else y

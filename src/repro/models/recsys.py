@@ -1,0 +1,341 @@
+"""RecSys model zoo: FM, AutoInt, DIN, SASRec.
+
+The hot path is the huge sparse embedding lookup. JAX has no native
+EmbeddingBag — it is implemented here as ``jnp.take`` + ``segment_sum``
+(single-hot fields collapse to a plain gather). All field tables live in ONE
+concatenated (total_rows, dim) tensor with static per-field offsets so the
+lookup is a single gather and the table row-shards cleanly over the mesh
+('model' [+'pod'] axes; see repro/dist/sharding.py for the shard_map lookup
+that avoids GSPMD all-gathering the table).
+
+``*_score_candidates`` implement the retrieval_cand shape (1 query vs 10^6
+items) as batched dot/forward — and expose sum-decomposable component
+matrices for the generalized Col-Bandit (core/generalized.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RecsysConfig
+from repro.models.layers import dense, dense_init, init_dense, layer_norm
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag substrate
+# ---------------------------------------------------------------------------
+
+def field_offsets(vocab_sizes: Tuple[int, ...]) -> np.ndarray:
+    """Static row offset of each field's sub-table in the fused table."""
+    return np.concatenate([[0], np.cumsum(np.asarray(vocab_sizes))[:-1]])
+
+
+def init_fused_table(key: jax.Array, vocab_sizes: Tuple[int, ...], dim: int,
+                     dtype=jnp.float32, pad_rows_to: int = 4096) -> jax.Array:
+    """Rows padded to a multiple of `pad_rows_to` so the table row-shards
+    over any mesh axis combination (512 devices max)."""
+    total = int(np.sum(np.asarray(vocab_sizes)))
+    total = -(-total // pad_rows_to) * pad_rows_to
+    return (jax.random.normal(key, (total, dim), jnp.float32) * 0.05
+            ).astype(dtype)
+
+
+def embedding_lookup(table: jax.Array, ids: jax.Array,
+                     offsets: np.ndarray) -> jax.Array:
+    """Single-hot per-field lookup. ids: (B, F) local per-field indices ->
+    (B, F, dim). The fused-table gather is the EmbeddingBag fast path."""
+    global_ids = ids + jnp.asarray(offsets, ids.dtype)[None, :]
+    return jnp.take(table, global_ids, axis=0)
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array, bag_ids: jax.Array,
+                  n_bags: int, weights: Optional[jax.Array] = None,
+                  mode: str = "sum") -> jax.Array:
+    """Multi-hot EmbeddingBag: ids (nnz,) global rows, bag_ids (nnz,) ->
+    (n_bags, dim) via gather + segment reduce (the torch-parity op JAX
+    lacks natively)."""
+    rows = jnp.take(table, ids, axis=0)                    # (nnz, dim)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    summed = jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
+    if mode == "sum":
+        return summed
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(bag_ids, rows.dtype),
+                                  bag_ids, num_segments=n_bags)
+        return summed / jnp.maximum(cnt, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, bag_ids, num_segments=n_bags)
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# FM  [Rendle ICDM'10]
+# ---------------------------------------------------------------------------
+
+def init_fm(key: jax.Array, cfg: RecsysConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "table": init_fused_table(ks[0], cfg.vocab_sizes, cfg.embed_dim, dtype),
+        "linear": init_fused_table(ks[1], cfg.vocab_sizes, 1, dtype),
+        "bias": jnp.zeros((), dtype),
+    }
+
+
+def fm_forward(params: Params, cfg: RecsysConfig, ids: jax.Array) -> jax.Array:
+    """ids (B, F) -> logit (B,). Pairwise term via the O(nk) sum-square
+    trick: sum_{i<j} <v_i, v_j> = 0.5 * ((sum v)^2 - sum v^2)."""
+    offs = field_offsets(cfg.vocab_sizes)
+    v = embedding_lookup(params["table"], ids, offs)        # (B, F, D)
+    lin = embedding_lookup(params["linear"], ids, offs)[..., 0]  # (B, F)
+    s = jnp.sum(v, axis=1)                                  # (B, D)
+    s2 = jnp.sum(v * v, axis=1)                             # (B, D)
+    pair = 0.5 * jnp.sum(s * s - s2, axis=-1)               # (B,)
+    return params["bias"] + jnp.sum(lin, axis=-1) + pair
+
+
+def fm_score_candidates(params: Params, cfg: RecsysConfig,
+                        context_ids: jax.Array,
+                        cand_ids: jax.Array) -> jax.Array:
+    """retrieval_cand: fixed context fields (F-1 ids), candidate fills the
+    last field. score(i) = const + lin_i + <v_i, sum_f v_f> (FM algebra) —
+    O(N*D) instead of O(N*F*D)."""
+    offs = field_offsets(cfg.vocab_sizes)
+    ctx = embedding_lookup(params["table"], context_ids[None, :],
+                           offs[:-1])[0]                    # (F-1, D)
+    ctx_sum = jnp.sum(ctx, axis=0)                          # (D,)
+    cand_rows = cand_ids + int(offs[-1])
+    v_c = jnp.take(params["table"], cand_rows, axis=0)      # (N, D)
+    lin_c = jnp.take(params["linear"], cand_rows, axis=0)[:, 0]
+    inter = v_c @ ctx_sum
+    return lin_c + inter                                    # + const (rank-free)
+
+
+def fm_candidate_components(params: Params, cfg: RecsysConfig,
+                            context_ids: jax.Array,
+                            cand_ids: jax.Array) -> jax.Array:
+    """(N, F) component matrix for the generalized bandit: column f is the
+    candidate x context-field-f interaction (+ linear term in col 0)."""
+    offs = field_offsets(cfg.vocab_sizes)
+    ctx = embedding_lookup(params["table"], context_ids[None, :],
+                           offs[:-1])[0]                    # (F-1, D)
+    cand_rows = cand_ids + int(offs[-1])
+    v_c = jnp.take(params["table"], cand_rows, axis=0)      # (N, D)
+    lin_c = jnp.take(params["linear"], cand_rows, axis=0)   # (N, 1)
+    inter = v_c @ ctx.T                                     # (N, F-1)
+    return jnp.concatenate([lin_c, inter], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# AutoInt  [arXiv:1810.11921]
+# ---------------------------------------------------------------------------
+
+def init_autoint(key: jax.Array, cfg: RecsysConfig,
+                 dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 2 + 4 * cfg.n_attn_layers)
+    layers = []
+    d_in = cfg.embed_dim
+    for i in range(cfg.n_attn_layers):
+        layers.append({
+            "wq": dense_init(ks[2 + 4 * i], d_in, cfg.d_attn * cfg.n_heads, dtype),
+            "wk": dense_init(ks[3 + 4 * i], d_in, cfg.d_attn * cfg.n_heads, dtype),
+            "wv": dense_init(ks[4 + 4 * i], d_in, cfg.d_attn * cfg.n_heads, dtype),
+            "w_res": dense_init(ks[5 + 4 * i], d_in, cfg.d_attn * cfg.n_heads, dtype),
+        })
+        d_in = cfg.d_attn * cfg.n_heads
+    return {
+        "table": init_fused_table(ks[0], cfg.vocab_sizes, cfg.embed_dim, dtype),
+        "layers": layers,
+        "out": init_dense(ks[1], d_in * cfg.n_sparse, 1, dtype=dtype),
+    }
+
+
+def _interacting_layer(p: Params, x: jax.Array, n_heads: int,
+                       d_attn: int) -> jax.Array:
+    """Multi-head self-attention over the FIELD axis (B, F, d)."""
+    B, F, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, F, n_heads, d_attn)
+    k = (x @ p["wk"]).reshape(B, F, n_heads, d_attn)
+    v = (x @ p["wv"]).reshape(B, F, n_heads, d_attn)
+    logits = jnp.einsum("bfhd,bghd->bhfg", q, k) / jnp.sqrt(jnp.float32(d_attn))
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhfg,bghd->bfhd", w, v).reshape(B, F, n_heads * d_attn)
+    return jax.nn.relu(out + x @ p["w_res"])
+
+
+def autoint_forward(params: Params, cfg: RecsysConfig,
+                    ids: jax.Array) -> jax.Array:
+    offs = field_offsets(cfg.vocab_sizes)
+    x = embedding_lookup(params["table"], ids, offs)        # (B, F, D)
+    for lp in params["layers"]:
+        x = _interacting_layer(lp, x, cfg.n_heads, cfg.d_attn)
+    flat = x.reshape(x.shape[0], -1)
+    return dense(params["out"], flat)[:, 0]
+
+
+def autoint_score_candidates(params: Params, cfg: RecsysConfig,
+                             context_ids: jax.Array,
+                             cand_ids: jax.Array,
+                             chunk: int = 8192) -> jax.Array:
+    """Score N candidates sharing fixed context fields: full forward with the
+    candidate substituted into the last field, chunked over candidates."""
+    n = cand_ids.shape[0]
+
+    def score_chunk(c_ids):
+        ids = jnp.concatenate(
+            [jnp.broadcast_to(context_ids[None, :], (c_ids.shape[0],
+                                                     context_ids.shape[0])),
+             c_ids[:, None]], axis=-1)
+        return autoint_forward(params, cfg, ids)
+
+    if n <= chunk:
+        return score_chunk(cand_ids)
+    n_chunks = -(-n // chunk)
+    padded = jnp.pad(cand_ids, (0, n_chunks * chunk - n))
+    out = jax.lax.map(score_chunk, padded.reshape(n_chunks, chunk))
+    return out.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# DIN  [arXiv:1706.06978]
+# ---------------------------------------------------------------------------
+
+def init_din(key: jax.Array, cfg: RecsysConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    d = cfg.embed_dim
+    attn_in = 4 * d
+    p: Params = {
+        "item_table": (jax.random.normal(ks[0], (cfg.item_vocab, d),
+                                         jnp.float32) * 0.05).astype(dtype),
+        "attn": [init_dense(ks[1], attn_in, cfg.attn_mlp[0], dtype=dtype),
+                 init_dense(ks[2], cfg.attn_mlp[0], cfg.attn_mlp[1], dtype=dtype),
+                 init_dense(ks[3], cfg.attn_mlp[1], 1, dtype=dtype)],
+        "mlp": [init_dense(ks[4], 3 * d, cfg.mlp[0], dtype=dtype),
+                init_dense(ks[5], cfg.mlp[0], cfg.mlp[1], dtype=dtype),
+                init_dense(ks[6], cfg.mlp[1], 1, dtype=dtype)],
+    }
+    return p
+
+
+def _din_attention(p: Params, hist: jax.Array, hist_mask: jax.Array,
+                   target: jax.Array) -> jax.Array:
+    """Target attention: weight each history item by MLP(h, t, h-t, h*t).
+    hist (B, S, D), target (B, D) -> user interest vector (B, D)."""
+    B, S, D = hist.shape
+    t = jnp.broadcast_to(target[:, None, :], (B, S, D))
+    z = jnp.concatenate([hist, t, hist - t, hist * t], axis=-1)
+    for i, lp in enumerate(p["attn"]):
+        z = dense(lp, z)
+        if i < len(p["attn"]) - 1:
+            z = jax.nn.sigmoid(z)                           # Dice-ish
+    w = z[..., 0]                                           # (B, S) raw weights
+    w = jnp.where(hist_mask, w, 0.0)
+    return jnp.einsum("bs,bsd->bd", w, hist)
+
+
+def din_forward(params: Params, cfg: RecsysConfig, hist_ids: jax.Array,
+                hist_mask: jax.Array, target_ids: jax.Array) -> jax.Array:
+    hist = jnp.take(params["item_table"], hist_ids, axis=0)   # (B, S, D)
+    target = jnp.take(params["item_table"], target_ids, axis=0)
+    user = _din_attention(params, hist, hist_mask, target)
+    z = jnp.concatenate([user, target, user * target], axis=-1)
+    for i, lp in enumerate(params["mlp"]):
+        z = dense(lp, z)
+        if i < len(params["mlp"]) - 1:
+            z = jax.nn.sigmoid(z)
+    return z[:, 0]
+
+
+def din_score_candidates(params: Params, cfg: RecsysConfig,
+                         hist_ids: jax.Array, hist_mask: jax.Array,
+                         cand_ids: jax.Array, chunk: int = 8192) -> jax.Array:
+    """One user (hist (S,)) vs N candidate items."""
+    n = cand_ids.shape[0]
+
+    def score_chunk(c_ids):
+        B = c_ids.shape[0]
+        h = jnp.broadcast_to(hist_ids[None], (B, hist_ids.shape[0]))
+        m = jnp.broadcast_to(hist_mask[None], (B, hist_mask.shape[0]))
+        return din_forward(params, cfg, h, m, c_ids)
+
+    if n <= chunk:
+        return score_chunk(cand_ids)
+    n_chunks = -(-n // chunk)
+    padded = jnp.pad(cand_ids, (0, n_chunks * chunk - n))
+    out = jax.lax.map(score_chunk, padded.reshape(n_chunks, chunk))
+    return out.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# SASRec  [arXiv:1808.09781]
+# ---------------------------------------------------------------------------
+
+def init_sasrec(key: jax.Array, cfg: RecsysConfig,
+                dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 2 + 5 * cfg.n_blocks)
+    d = cfg.embed_dim
+    blocks = []
+    for i in range(cfg.n_blocks):
+        blocks.append({
+            "wq": dense_init(ks[2 + 5 * i], d, d, dtype),
+            "wk": dense_init(ks[3 + 5 * i], d, d, dtype),
+            "wv": dense_init(ks[4 + 5 * i], d, d, dtype),
+            "ff1": init_dense(ks[5 + 5 * i], d, d, dtype=dtype),
+            "ff2": init_dense(ks[6 + 5 * i], d, d, dtype=dtype),
+            "ln1_s": jnp.ones((d,), dtype), "ln1_b": jnp.zeros((d,), dtype),
+            "ln2_s": jnp.ones((d,), dtype), "ln2_b": jnp.zeros((d,), dtype),
+        })
+    return {
+        "item_table": (jax.random.normal(ks[0], (cfg.item_vocab, d),
+                                         jnp.float32) * 0.05).astype(dtype),
+        "pos_table": (jax.random.normal(ks[1], (cfg.seq_len, d),
+                                        jnp.float32) * 0.05).astype(dtype),
+        "blocks": blocks,
+    }
+
+
+def sasrec_user_state(params: Params, cfg: RecsysConfig, hist_ids: jax.Array,
+                      hist_mask: jax.Array) -> jax.Array:
+    """hist (B, S) -> user representation (B, D): last valid position state
+    after causal self-attention blocks."""
+    B, S = hist_ids.shape
+    d = cfg.embed_dim
+    x = jnp.take(params["item_table"], hist_ids, axis=0)
+    x = x + params["pos_table"][None, :S]
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    key_ok = hist_mask[:, None, :]
+    for bp in params["blocks"]:
+        h = layer_norm(x, bp["ln1_s"], bp["ln1_b"])
+        q, k, v = h @ bp["wq"], h @ bp["wk"], h @ bp["wv"]
+        logits = jnp.einsum("bsd,btd->bst", q, k) / jnp.sqrt(jnp.float32(d))
+        logits = jnp.where(causal[None] & key_ok, logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        x = x + jnp.einsum("bst,btd->bsd", w, v)
+        h2 = layer_norm(x, bp["ln2_s"], bp["ln2_b"])
+        x = x + dense(bp["ff2"], jax.nn.relu(dense(bp["ff1"], h2)))
+    # state at the last valid position
+    last = jnp.maximum(jnp.sum(hist_mask.astype(jnp.int32), axis=-1) - 1, 0)
+    return jnp.take_along_axis(x, last[:, None, None].repeat(d, -1), 1)[:, 0]
+
+
+def sasrec_forward(params: Params, cfg: RecsysConfig, hist_ids: jax.Array,
+                   hist_mask: jax.Array, target_ids: jax.Array) -> jax.Array:
+    """Next-item logit: <user_state, item_emb[target]>."""
+    u = sasrec_user_state(params, cfg, hist_ids, hist_mask)
+    t = jnp.take(params["item_table"], target_ids, axis=0)
+    return jnp.sum(u * t, axis=-1)
+
+
+def sasrec_score_candidates(params: Params, cfg: RecsysConfig,
+                            hist_ids: jax.Array, hist_mask: jax.Array,
+                            cand_ids: jax.Array) -> jax.Array:
+    """1 user vs N candidates: one user-state pass + (N, D) @ (D,) matvec."""
+    u = sasrec_user_state(params, cfg, hist_ids[None], hist_mask[None])[0]
+    items = jnp.take(params["item_table"], cand_ids, axis=0)
+    return items @ u

@@ -1,0 +1,33 @@
+"""Scan indirection for roofline analysis.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count, so FLOP/byte/collective numbers pulled from a scanned (stacked-layer)
+lowering undercount by ~n_layers x n_microbatches. The roofline pass
+(benchmarks/roofline.py) therefore lowers REDUCED-depth models with every
+scan UNROLLED (cost numbers then scale linearly and are extrapolated to full
+depth), while the dry-run proper keeps rolled scans (fast compiles, correct
+memory analysis).
+
+``set_unroll(True)`` flips every model/train scan routed through here.
+"""
+from __future__ import annotations
+
+import jax
+
+_UNROLL = False
+
+
+def set_unroll(value: bool) -> None:
+    global _UNROLL
+    _UNROLL = bool(value)
+
+
+def get_unroll() -> bool:
+    return _UNROLL
+
+
+def scan(f, init, xs, **kw):
+    if _UNROLL:
+        kw = dict(kw)
+        kw["unroll"] = True
+    return jax.lax.scan(f, init, xs, **kw)

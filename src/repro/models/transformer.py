@@ -1,0 +1,402 @@
+"""Configurable decoder LM covering the 5 assigned transformer archs.
+
+Layers are STACKED and executed with ``jax.lax.scan`` (MaxText-style): one
+layer gets lowered/compiled regardless of depth — essential for 56-layer
+dry-runs. Architectural axes, all driven by ``LMConfig``:
+
+  * GQA with arbitrary (n_heads, n_kv_heads)        — all archs
+  * sliding-window attention on every layer          — mixtral (w=4096)
+  * local/global alternating layers + softcaps       — gemma2
+  * QKV bias                                         — qwen2.5
+  * routed MoE FFN (capacity dispatch)               — mixtral, moonshot
+
+Layer grouping: archs with uniform layers use one stack ("all"); gemma2 uses
+one stack of (local, global) layer PAIRS so the scan body stays homogeneous
+while local layers keep ring caches of size=window and global layers keep
+full-length caches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from repro.models.scan_util import scan as _scan
+from repro.dist.act_sharding import constrain as _cst
+
+from repro.configs.base import LMConfig
+from repro.models import kv_cache as KV
+from repro.models.layers import (attention, init_attention, init_mlp, mlp,
+                                 rms_norm, softcap, dense_init, embed_init)
+from repro.models.moe import init_moe, moe_ffn
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key: jax.Array, cfg: LMConfig, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "attn": init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.d_head, cfg.qkv_bias,
+                               dtype),
+    }
+    if cfg.moe:
+        p["moe"] = init_moe(ks[1], cfg.d_model, cfg.moe_d_ff or cfg.d_ff,
+                            cfg.n_experts, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _stack_layers(key: jax.Array, cfg: LMConfig, n: int, dtype) -> Params:
+    """Init n layers and stack each leaf along axis 0 (scan-ready)."""
+    keys = jax.random.split(key, n)
+    layers = [_init_layer(k, cfg, dtype) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *layers)
+
+
+def init_lm(key: jax.Array, cfg: LMConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 4)
+    params: Params = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "head": dense_init(ks[1], cfg.d_model, cfg.vocab, dtype),
+    }
+    if cfg.local_global_alternating:
+        assert cfg.n_layers % 2 == 0
+        n_pairs = cfg.n_layers // 2
+        params["local"] = _stack_layers(ks[2], cfg, n_pairs, dtype)
+        params["global"] = _stack_layers(ks[3], cfg, n_pairs, dtype)
+    else:
+        params["all"] = _stack_layers(ks[2], cfg, cfg.n_layers, dtype)
+    return params
+
+
+def cache_spec(cfg: LMConfig, max_seq: int) -> Dict[str, Tuple[int, int]]:
+    """stack name -> (n_layers_in_stack, s_cache)."""
+    w = cfg.sliding_window or 0
+    if cfg.local_global_alternating:
+        n_pairs = cfg.n_layers // 2
+        return {"local": (n_pairs, min(w, max_seq) if w else max_seq),
+                "global": (n_pairs, max_seq)}
+    s = min(w, max_seq) if w else max_seq
+    return {"all": (cfg.n_layers, s)}
+
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> KV.Cache:
+    return {name: KV.init_stack(n, batch, s, cfg.n_kv_heads, cfg.d_head,
+                                dtype)
+            for name, (n, s) in cache_spec(cfg, max_seq).items()}
+
+
+# ---------------------------------------------------------------------------
+# layer body
+# ---------------------------------------------------------------------------
+
+def _layer(p: Params, x: jax.Array, positions: jax.Array, cfg: LMConfig,
+           window: jax.Array,
+           kv_override=None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Pre-norm block. Returns (x_out, k_seq, v_seq) — K/V exposed so prefill
+    can populate caches without recomputation."""
+    x = _cst(x, "dp", None, None)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    # compute K/V explicitly (shared with cache population)
+    B, S, _ = h.shape
+    k_seq = h @ p["attn"]["wk"]
+    v_seq = h @ p["attn"]["wv"]
+    if "bk" in p["attn"]:
+        k_seq = k_seq + p["attn"]["bk"]
+        v_seq = v_seq + p["attn"]["bv"]
+    k_seq = k_seq.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    v_seq = v_seq.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    from repro.models.layers import apply_rope
+    k_rope = apply_rope(k_seq, positions, cfg.rope_theta)
+
+    if kv_override is None:
+        kv = (k_rope, v_seq, positions, jnp.ones(positions.shape, jnp.bool_))
+    else:
+        kv = kv_override
+    attn_out = attention(
+        p["attn"], h, positions, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+        rope_theta=cfg.rope_theta, window=window,
+        attn_softcap=cfg.attn_softcap, kv_override=kv,
+        q_chunk=cfg.attn_q_chunk)
+    x = x + attn_out
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        ff = moe_ffn(p["moe"], h2, top_k=cfg.experts_top_k, act=cfg.act,
+                     capacity_factor=cfg.moe_capacity_factor)
+    else:
+        ff = mlp(p["mlp"], h2, act=cfg.act)
+    return x + ff, k_rope, v_seq
+
+
+def _window_scalar(cfg: LMConfig, local: bool) -> jax.Array:
+    if local and cfg.sliding_window:
+        return jnp.int32(cfg.sliding_window)
+    if (not cfg.local_global_alternating) and cfg.sliding_window:
+        return jnp.int32(cfg.sliding_window)
+    return jnp.int32(0)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def forward_train(params: Params, cfg: LMConfig, tokens: jax.Array,
+                  *, remat: bool = True) -> jax.Array:
+    """tokens (B, S) -> logits (B, S, V). Full causal (+window) attention."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def make_body(window_local, window_global=None, paired=False):
+        def body(x, layer_p):
+            if paired:
+                lp, gp = layer_p
+                x, _, _ = _layer(lp, x, positions, cfg, window_local)
+                x, _, _ = _layer(gp, x, positions, cfg,
+                                 jnp.int32(0) if window_global is None
+                                 else window_global)
+            else:
+                x, _, _ = _layer(layer_p, x, positions, cfg, window_local)
+            return x, None
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        return body
+
+    if cfg.local_global_alternating:
+        body = make_body(_window_scalar(cfg, True), jnp.int32(0), paired=True)
+        x, _ = _scan(body, x, (params["local"], params["global"]))
+    else:
+        body = make_body(_window_scalar(cfg, True))
+        x, _ = _scan(body, x, params["all"])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["head"]
+    return softcap(logits, cfg.logit_softcap)
+
+
+def forward_hidden(params: Params, cfg: LMConfig, tokens: jax.Array,
+                   *, remat: bool = False) -> jax.Array:
+    """tokens (B, S) -> final hidden states (B, S, D) (no LM head) — the
+    trunk for both LM training (head applied chunked in train_step) and the
+    ColBERT late-interaction encoder. remat=True checkpoints each layer
+    (nothing saveable): backward recomputes one layer at a time, so peak
+    activation memory stays one layer deep regardless of depth."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, layer_p):
+        if cfg.local_global_alternating:
+            lp, gp = layer_p
+            x, _, _ = _layer(lp, x, positions, cfg, _window_scalar(cfg, True))
+            x, _, _ = _layer(gp, x, positions, cfg, jnp.int32(0))
+        else:
+            x, _, _ = _layer(layer_p, x, positions, cfg,
+                             _window_scalar(cfg, True))
+        return x, None
+
+    xs = ((params["local"], params["global"])
+          if cfg.local_global_alternating else params["all"])
+    if remat:
+        # Nested (sqrt-L) remat: a flat checkpointed scan still stacks one
+        # x-carry residual PER LAYER (56 x ~100 MB/chip on mixtral train);
+        # a two-level scan-of-scans saves only f outer + L/f inner carries
+        # (~15 instead of 56) for one extra forward recompute.
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+        n_stack = jax.tree.leaves(xs)[0].shape[0]
+        f = max((d for d in range(1, n_stack + 1)
+                 if n_stack % d == 0 and d * d <= n_stack), default=1)
+        if f > 1:
+            outer_xs = jax.tree.map(
+                lambda a: a.reshape(f, n_stack // f, *a.shape[1:]), xs)
+
+            def outer_body(x, block_params):
+                x, _ = _scan(body, x, block_params)
+                return x, None
+
+            outer = jax.checkpoint(
+                outer_body, policy=jax.checkpoint_policies.nothing_saveable)
+            x, _ = _scan(outer, x, outer_xs)
+        else:
+            x, _ = _scan(body, x, xs)
+    else:
+        x, _ = _scan(body, x, xs)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def forward_prefill(params: Params, cfg: LMConfig, tokens: jax.Array,
+                    max_seq: int, cache_dtype=jnp.bfloat16,
+                    ) -> Tuple[jax.Array, KV.Cache]:
+    """Prefill: returns (last-token logits (B, V), populated cache)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    spec = cache_spec(cfg, max_seq)
+
+    def scan_stack(x, stack_params, window, s_cache):
+        def body(x, layer_p):
+            x, k_seq, v_seq = _layer(layer_p, x, positions, cfg, window)
+            k, v, pos = KV.prefill_write(k_seq.astype(cache_dtype),
+                                         v_seq.astype(cache_dtype),
+                                         positions, s_cache)
+            return x, (k, v, pos)
+        return _scan(body, x, stack_params)
+
+    cache: KV.Cache = {}
+    if cfg.local_global_alternating:
+        def body(x, layer_p):
+            lp, gp = layer_p
+            x, kl, vl = _layer(lp, x, positions, cfg, _window_scalar(cfg, True))
+            x, kg, vg = _layer(gp, x, positions, cfg, jnp.int32(0))
+            wl = KV.prefill_write(kl.astype(cache_dtype),
+                                  vl.astype(cache_dtype), positions,
+                                  spec["local"][1])
+            wg = KV.prefill_write(kg.astype(cache_dtype),
+                                  vg.astype(cache_dtype), positions,
+                                  spec["global"][1])
+            return x, (wl, wg)
+        x, (wl, wg) = _scan(body, x, (params["local"], params["global"]))
+        cache["local"] = KV.CacheStack(k=wl[0], v=wl[1], pos=wl[2][0])
+        cache["global"] = KV.CacheStack(k=wg[0], v=wg[1], pos=wg[2][0])
+    else:
+        x, (k, v, pos) = scan_stack(x, params["all"],
+                                    _window_scalar(cfg, True),
+                                    spec["all"][1])
+        cache["all"] = KV.CacheStack(k=k, v=v, pos=pos[0])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1] @ params["head"]
+    return softcap(logits, cfg.logit_softcap), cache
+
+
+def forward_decode(params: Params, cfg: LMConfig, token: jax.Array,
+                   position: jax.Array, cache: KV.Cache,
+                   ) -> Tuple[jax.Array, KV.Cache]:
+    """One decode step. token (B,) i32 at scalar `position`; returns
+    (logits (B, V), updated cache)."""
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0)[:, None, :]   # (B, 1, D)
+    positions = jnp.broadcast_to(position.astype(jnp.int32), (B, 1))
+
+    def step_layer(x, layer_p, stack: KV.CacheStack, window, layer_slot):
+        """One layer against one cache stack layer (functional update)."""
+        k_l, v_l = stack.k[layer_slot], stack.v[layer_slot]
+        h = rms_norm(x, layer_p["ln1"], cfg.norm_eps)
+        k_new = h @ layer_p["attn"]["wk"]
+        v_new = h @ layer_p["attn"]["wv"]
+        if "bk" in layer_p["attn"]:
+            k_new = k_new + layer_p["attn"]["bk"]
+            v_new = v_new + layer_p["attn"]["bv"]
+        k_new = k_new.reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
+        v_new = v_new.reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
+        from repro.models.layers import apply_rope
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+        k_upd, v_upd, pos_upd = KV.write_token(
+            k_l, v_l, stack.pos, k_new.astype(k_l.dtype),
+            v_new.astype(v_l.dtype), position)
+        from repro.dist.act_sharding import constrain_named
+        k_upd = constrain_named(k_upd, "cache_kv")
+        v_upd = constrain_named(v_upd, "cache_kv")
+        pos_upd = constrain_named(pos_upd, "cache_pos")
+        kv_valid = pos_upd >= 0
+        from repro.dist import flash_decode as FD
+        if FD.enabled():
+            # §Perf H2: explicit split-K attention over the seq-sharded
+            # cache (GSPMD would all-gather K/V per layer otherwise).
+            q = h @ layer_p["attn"]["wq"]
+            if "bq" in layer_p["attn"]:
+                q = q + layer_p["attn"]["bq"]
+            q = q.reshape(B, 1, cfg.n_heads, cfg.d_head)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            groups = cfg.n_heads // cfg.n_kv_heads
+            qg = q.reshape(B, 1, cfg.n_kv_heads, groups, cfg.d_head)
+            o = FD.flash_decode_attention(
+                qg, k_upd, v_upd, pos_upd, kv_valid, positions, window,
+                1.0 / float(cfg.d_head) ** 0.5, cfg.attn_softcap)
+            attn_out = (o.reshape(B, 1, cfg.n_heads * cfg.d_head)
+                        .astype(x.dtype) @ layer_p["attn"]["wo"])
+        else:
+            attn_out = attention(
+                layer_p["attn"], h, positions, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+                rope_theta=cfg.rope_theta, window=window,
+                attn_softcap=cfg.attn_softcap,
+                kv_override=(k_upd, v_upd, pos_upd, kv_valid))
+        x = x + attn_out
+        h2 = rms_norm(x, layer_p["ln2"], cfg.norm_eps)
+        if cfg.moe:
+            # decode: never drop tokens (worst-case capacity is cheap at S=1)
+            ff = moe_ffn(layer_p["moe"], h2, top_k=cfg.experts_top_k,
+                         act=cfg.act, no_drop=True)
+        else:
+            ff = mlp(layer_p["mlp"], h2, act=cfg.act)
+        return x + ff, (k_upd, v_upd, pos_upd)
+
+    # The full cache stacks ride in the scan CARRY and are updated in place
+    # with dynamic_update_slice on the (unsharded) layer axis: one buffer per
+    # stack lives for the whole step and XLA aliases it with the donated
+    # input — passing slices through scan xs/ys doubled peak memory.
+    new_cache: KV.Cache = {}
+    if cfg.local_global_alternating:
+        def body(carry, xs):
+            x, kl_buf, vl_buf, pl, kg_buf, vg_buf, pg, idx = carry
+            lp, gp = xs
+            stack_l = KV.CacheStack(
+                k=jax.lax.dynamic_index_in_dim(kl_buf, idx, 0, keepdims=True),
+                v=jax.lax.dynamic_index_in_dim(vl_buf, idx, 0, keepdims=True),
+                pos=pl)
+            x, (k1, v1, p1) = step_layer(x, lp, stack_l,
+                                         _window_scalar(cfg, True), 0)
+            kl_buf = jax.lax.dynamic_update_index_in_dim(kl_buf, k1, idx, 0)
+            vl_buf = jax.lax.dynamic_update_index_in_dim(vl_buf, v1, idx, 0)
+            stack_g = KV.CacheStack(
+                k=jax.lax.dynamic_index_in_dim(kg_buf, idx, 0, keepdims=True),
+                v=jax.lax.dynamic_index_in_dim(vg_buf, idx, 0, keepdims=True),
+                pos=pg)
+            x, (k2, v2, p2) = step_layer(x, gp, stack_g, jnp.int32(0), 0)
+            kg_buf = jax.lax.dynamic_update_index_in_dim(kg_buf, k2, idx, 0)
+            vg_buf = jax.lax.dynamic_update_index_in_dim(vg_buf, v2, idx, 0)
+            return (x, kl_buf, vl_buf, p1, kg_buf, vg_buf, p2, idx + 1), None
+
+        carry0 = (x, cache["local"].k, cache["local"].v, cache["local"].pos,
+                  cache["global"].k, cache["global"].v, cache["global"].pos,
+                  jnp.int32(0))
+        (x, kl, vl, pl, kg, vg, pg, _), _ = _scan(
+            body, carry0, (params["local"], params["global"]))
+        new_cache["local"] = KV.CacheStack(k=kl, v=vl, pos=pl)
+        new_cache["global"] = KV.CacheStack(k=kg, v=vg, pos=pg)
+    else:
+        def body(carry, lp):
+            x, k_buf, v_buf, pos, idx = carry
+            stack = KV.CacheStack(
+                k=jax.lax.dynamic_index_in_dim(k_buf, idx, 0, keepdims=True),
+                v=jax.lax.dynamic_index_in_dim(v_buf, idx, 0, keepdims=True),
+                pos=pos)
+            x, (k, v, p) = step_layer(x, lp, stack,
+                                      _window_scalar(cfg, True), 0)
+            k_buf = jax.lax.dynamic_update_index_in_dim(k_buf, k, idx, 0)
+            v_buf = jax.lax.dynamic_update_index_in_dim(v_buf, v, idx, 0)
+            return (x, k_buf, v_buf, p, idx + 1), None
+
+        carry0 = (x, cache["all"].k, cache["all"].v, cache["all"].pos,
+                  jnp.int32(0))
+        (x, k, v, p, _), _ = _scan(body, carry0, params["all"])
+        new_cache["all"] = KV.CacheStack(k=k, v=v, pos=p)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, 0] @ params["head"]
+    return softcap(logits, cfg.logit_softcap), new_cache

@@ -1,0 +1,4 @@
+"""Two-stage late-interaction retrieval: index, stage-1 kNN, reranking."""
+from repro.retrieval.ann import CandidateSet, generate_candidates, generic_bounds
+from repro.retrieval.index import TokenIndex, build_index, build_index_from_ragged
+from repro.retrieval.pipeline import RerankResult, evaluate_dataset, rerank_query

@@ -1,0 +1,120 @@
+"""Stage-1 candidate generation: per-query-token kNN + ANN-derived bounds.
+
+Follows paper App. A.1: for each query token q_t, retrieve the top-k' most
+similar document tokens (instantiated as exact kNN for reproducibility, as
+in the paper); the candidate set is the union of owning documents. Eq. 15
+turns the stage-1 similarities into per-(doc, token) upper bounds:
+
+    a_it = 0
+    b_it = h(d_i, t)      if d_i was retrieved for token t  (exact value!)
+         = s_k'^(t)       otherwise (the k'-th neighbor similarity)
+
+Note: when any token of d_i is in the top-k' for q_t, the *best* token of
+d_i necessarily is too (it has a higher sim), so the scatter-max below
+recovers the exact h(d_i, t) for hit cells. ``known_mask/known_vals`` expose
+those exact cells so the (beyond-paper) ``prereveal_ann`` option can start
+the bandit with them at zero additional cost.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.retrieval.index import TokenIndex
+
+_NEG = jnp.float32(-3e38)
+
+
+class CandidateSet(NamedTuple):
+    doc_ids: jax.Array      # (N,) i32, -1 padding
+    doc_mask: jax.Array     # (N,) bool
+    a: jax.Array            # (N, T) lower support
+    b: jax.Array            # (N, T) upper support (Eq. 15)
+    known_mask: jax.Array   # (N, T) bool — cells whose exact value stage 1 saw
+    known_vals: jax.Array   # (N, T) f32
+    s_kprime: jax.Array     # (T,) k'-th neighbor similarity per query token
+
+    @property
+    def n_candidates(self) -> jax.Array:
+        return jnp.sum(self.doc_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("kprime", "max_candidates",
+                                             "support"))
+def generate_candidates(
+    index_embs: jax.Array,      # (C, L, M)
+    index_mask: jax.Array,      # (C, L)
+    query: jax.Array,           # (T, M)
+    *,
+    kprime: int = 10,
+    max_candidates: int = 256,
+    support: Tuple[float, float] = (0.0, 1.0),
+) -> CandidateSet:
+    C, L, M = index_embs.shape
+    T = query.shape[0]
+    toks = index_embs.reshape(C * L, M)
+    owner = jnp.repeat(jnp.arange(C, dtype=jnp.int32), L)
+    valid = index_mask.reshape(-1)
+
+    sims = query.astype(jnp.float32) @ toks.astype(jnp.float32).T  # (T, C*L)
+    sims = jnp.where(valid[None, :], sims, _NEG)
+    top_vals, top_idx = jax.lax.top_k(sims, kprime)                # (T, k')
+    hit_docs = jnp.take(owner, top_idx)                            # (T, k')
+    s_kprime = top_vals[:, kprime - 1]
+
+    # Candidate set = union of hit docs. If the union exceeds
+    # max_candidates, keep the docs with the HIGHEST best-hit similarity
+    # (arbitrary-id truncation would silently drop strong candidates).
+    doc_best = jnp.full((C,), _NEG).at[hit_docs.reshape(-1)].max(
+        top_vals.reshape(-1))
+    best_vals, best_ids = jax.lax.top_k(doc_best, min(max_candidates, C))
+    if C < max_candidates:               # pad to the static candidate count
+        pad = max_candidates - C
+        best_vals = jnp.pad(best_vals, (0, pad), constant_values=_NEG)
+        best_ids = jnp.pad(best_ids, (0, pad), constant_values=0)
+    sel = best_vals > _NEG / 2
+    cands = jnp.where(sel, best_ids, jnp.iinfo(jnp.int32).max)
+    cands = jnp.sort(cands)                     # ascending, padding last
+    cands = jnp.where(cands == jnp.iinfo(jnp.int32).max, -1,
+                      cands).astype(jnp.int32)
+    doc_mask = cands >= 0
+
+    a_lo, b_hi = support
+    a = jnp.full((max_candidates, T), jnp.float32(a_lo))
+    # Default upper bound: the k'-th neighbor similarity per token (Eq. 15).
+    b = jnp.broadcast_to(jnp.maximum(s_kprime, a_lo)[None, :],
+                         (max_candidates, T)).astype(jnp.float32)
+
+    # Hit cells: exact h value via scatter-max into candidate rows.
+    pos = jnp.searchsorted(cands, hit_docs)                        # (T, k')
+    pos = jnp.clip(pos, 0, max_candidates - 1)
+    is_cand = jnp.take(cands, pos) == hit_docs
+    t_grid = jnp.broadcast_to(jnp.arange(T)[:, None], hit_docs.shape)
+    safe_pos = jnp.where(is_cand, pos, max_candidates - 1)
+
+    known_vals = jnp.full((max_candidates, T), _NEG)
+    known_vals = known_vals.at[safe_pos, t_grid].max(
+        jnp.where(is_cand, top_vals, _NEG))
+    known_mask = known_vals > _NEG / 2
+    known_vals = jnp.where(known_mask, known_vals, 0.0)
+
+    b = jnp.where(known_mask, known_vals, b)
+    b = jnp.clip(b, a_lo, b_hi)
+    a = jnp.where(doc_mask[:, None], a, 0.0)
+    b = jnp.where(doc_mask[:, None], b, 0.0)
+
+    return CandidateSet(doc_ids=cands, doc_mask=doc_mask, a=a, b=b,
+                        known_mask=known_mask & doc_mask[:, None],
+                        known_vals=known_vals, s_kprime=s_kprime)
+
+
+def generic_bounds(n: int, t: int,
+                   support: Tuple[float, float] = (0.0, 1.0)
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """No-ANN fallback: global similarity-range bounds (paper Sec. 5.3)."""
+    a = jnp.full((n, t), jnp.float32(support[0]))
+    b = jnp.full((n, t), jnp.float32(support[1]))
+    return a, b

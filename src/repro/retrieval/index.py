@@ -1,0 +1,74 @@
+"""Token-level corpus index for late-interaction retrieval.
+
+Documents are stored padded to a fixed L_max (TPU-static shapes) with a
+validity mask; the flattened (C*L, M) token matrix view drives the stage-1
+per-query-token kNN. At cluster scale the index is sharded by document
+blocks over the ('model', 'pod') mesh axes (see retrieval/service.py) —
+this module is the single-host view used by tests/benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class TokenIndex:
+    doc_embs: jax.Array     # (C, L, M)
+    doc_mask: jax.Array     # (C, L) bool
+    doc_lens: jax.Array     # (C,) int32
+
+    @property
+    def n_docs(self) -> int:
+        return self.doc_embs.shape[0]
+
+    @property
+    def max_len(self) -> int:
+        return self.doc_embs.shape[1]
+
+    @property
+    def dim(self) -> int:
+        return self.doc_embs.shape[2]
+
+    def flat_tokens(self) -> Tuple[jax.Array, jax.Array]:
+        """(C*L, M) token matrix + (C*L,) owning-doc ids (invalid => -1)."""
+        C, L, M = self.doc_embs.shape
+        toks = self.doc_embs.reshape(C * L, M)
+        owner = jnp.repeat(jnp.arange(C, dtype=jnp.int32), L)
+        owner = jnp.where(self.doc_mask.reshape(-1), owner, -1)
+        return toks, owner
+
+    def gather_docs(self, doc_ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Candidate sub-index: (N, L, M) embeddings + (N, L) mask.
+        Negative ids are padding and come back fully masked."""
+        safe = jnp.maximum(doc_ids, 0)
+        embs = jnp.take(self.doc_embs, safe, axis=0)
+        mask = jnp.take(self.doc_mask, safe, axis=0)
+        mask = mask & (doc_ids >= 0)[:, None]
+        return embs, mask
+
+
+def build_index(doc_embs: np.ndarray, doc_mask: np.ndarray,
+                doc_lens: np.ndarray) -> TokenIndex:
+    return TokenIndex(doc_embs=jnp.asarray(doc_embs, jnp.float32),
+                      doc_mask=jnp.asarray(doc_mask),
+                      doc_lens=jnp.asarray(doc_lens, jnp.int32))
+
+
+def build_index_from_ragged(docs: Sequence[np.ndarray],
+                            pad_to: Optional[int] = None) -> TokenIndex:
+    """Pack a ragged list of (L_i, M) token arrays into a padded index."""
+    lens = np.asarray([d.shape[0] for d in docs], np.int32)
+    L = int(pad_to or lens.max())
+    M = docs[0].shape[1]
+    out = np.zeros((len(docs), L, M), np.float32)
+    mask = np.zeros((len(docs), L), bool)
+    for i, d in enumerate(docs):
+        n = min(d.shape[0], L)
+        out[i, :n] = d[:n]
+        mask[i, :n] = True
+    return build_index(out, mask, np.minimum(lens, L))

@@ -1,0 +1,1 @@
+"""Serving: LM decode engine + bandit reranking service."""

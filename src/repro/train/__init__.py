@@ -1,0 +1,1 @@
+"""Training substrate: optimizer, per-family steps, loop, compression."""

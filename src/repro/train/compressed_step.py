@@ -1,0 +1,79 @@
+"""Data-parallel LM train step with int8-compressed gradient all-reduce
+(§Perf H1, iteration 4 — completes the lead recorded in EXPERIMENTS.md).
+
+Layout: pure data parallelism over a chosen axis group (params REPLICATED
+across it, batch sharded). The whole step runs under shard_map so the
+gradient reduction is OURS, not GSPMD's: grads are quantized to int8 with a
+shared scale (one scalar pmax per leaf) and summed with an int32 psum —
+4x fewer bytes on the wire than fp32, 2x fewer than bf16, with ERROR
+FEEDBACK carried in the training state so quantization error cannot
+accumulate (train/compression.py).
+
+This is the production pattern for small/medium models where H1 showed the
+collective term is gradient/activation traffic, not weight gathers.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import LMConfig
+from repro.train.compression import init_error_buffer, int8_rs_ag
+from repro.train.optimizer import AdamW, AdamWState
+from repro.train.train_step import lm_loss
+
+Params = Any
+
+
+class CompressedTrainState(NamedTuple):
+    params: Params
+    opt: AdamWState
+    error: Params          # error-feedback buffers (fp32, param-shaped)
+
+
+def init_compressed_state(params: Params, opt: AdamW) -> CompressedTrainState:
+    return CompressedTrainState(params=params, opt=opt.init(params),
+                                error=init_error_buffer(params))
+
+
+def make_compressed_lm_train_step(cfg: LMConfig, opt: AdamW, mesh: Mesh,
+                                  *, chunk_tokens: int = 8192,
+                                  compress: bool = True) -> Callable:
+    """Returns step(state, batch) -> (state, metrics); batch sharded over
+    every mesh axis, params/opt/error replicated (ZeRO-0 + wire compression;
+    compose with zero1 opt sharding outside if desired)."""
+    every = tuple(mesh.axis_names)
+
+    def shard_fn(state: CompressedTrainState, tokens, targets):
+        def loss_fn(p):
+            return lm_loss(p, cfg, tokens, targets,
+                           chunk_tokens=chunk_tokens, remat=True)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state.params)
+        loss = jax.lax.pmean(loss, every)
+        if compress:
+            grads, new_error = int8_rs_ag(grads, state.error, every)
+        else:
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, every), grads)
+            new_error = state.error
+        new_p, new_opt, gnorm = opt.update(grads, state.opt, state.params)
+        new_state = CompressedTrainState(params=new_p, opt=new_opt,
+                                         error=new_error)
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    rep = jax.tree.map(lambda _: P(), jax.tree.leaves({"x": 0}))  # helper
+
+    def step(state: CompressedTrainState, batch: Dict[str, jax.Array]):
+        state_specs = jax.tree.map(lambda _: P(), state)
+        out_specs = (jax.tree.map(lambda _: P(), state),
+                     {"loss": P(), "grad_norm": P()})
+        return jax.shard_map(
+            shard_fn, mesh=mesh, check_vma=False,
+            in_specs=(state_specs, P(every, None), P(every, None)),
+            out_specs=out_specs,
+        )(state, batch["tokens"], batch["targets"])
+
+    return step

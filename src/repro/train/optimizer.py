@@ -1,0 +1,100 @@
+"""AdamW + LR schedules in pure JAX (optax is not available offline).
+
+Optimizer state is a pytree shaped like the params (m, v per leaf), so it
+shards exactly like the params (ZeRO-3-equivalent under the 2D param
+sharding in dist/sharding.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Params
+    v: Params
+
+
+class AdamW(NamedTuple):
+    init: Callable[[Params], AdamWState]
+    update: Callable[[Params, AdamWState, Params, jax.Array], tuple]
+
+
+def adamw(lr: Callable[[jax.Array], jax.Array] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1,
+          grad_clip_norm: float = 1.0) -> AdamW:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.float32(lr))
+
+    def init(params: Params) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def update(grads: Params, state: AdamWState, params: Params,
+               extra_scale: jax.Array | None = None):
+        step = state.step + 1
+        # global-norm clip
+        gnorm = global_norm(grads)
+        clip = jnp.minimum(1.0, grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+        if extra_scale is not None:
+            clip = clip * extra_scale
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * clip
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mhat = m2 / (1 - b1 ** step.astype(jnp.float32))
+            vhat = v2 / (1 - b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr_fn(step) * delta
+            return new_p.astype(p.dtype), m2, v2
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        flat_p = treedef.flatten_up_to(params)
+        results = [upd(g, m, v, p)
+                   for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_params = treedef.unflatten([r[0] for r in results])
+        new_m = treedef.unflatten([r[1] for r in results])
+        new_v = treedef.unflatten([r[2] for r in results])
+        return new_params, AdamWState(step=step, m=new_m, v=new_v), gnorm
+
+    return AdamW(init=init, update=update)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    min_ratio: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def fn(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) /
+                        jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.float32(peak_lr) * jnp.where(s < warmup_steps, warm, cos)
+    return fn
+
+
+def linear_schedule(peak_lr: float, warmup_steps: int,
+                    total_steps: int) -> Callable[[jax.Array], jax.Array]:
+    def fn(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup_steps, 1)
+        decay = jnp.clip(1.0 - (s - warmup_steps) /
+                         jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        return jnp.float32(peak_lr) * jnp.where(s < warmup_steps, warm, decay)
+    return fn

@@ -1,0 +1,191 @@
+"""Per-family losses and jit-ready train/serve step functions.
+
+The LM cross-entropy is CHUNKED over the sequence (scan + remat): at
+vocab=256k / 1M-token batches, materializing full (tokens, vocab) logits in
+fp32 would be ~1 TB — chunking keeps the live logits slice bounded while
+leaving total FLOPs unchanged (forward recomputed per chunk on backward).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from repro.models.scan_util import scan as _scan
+
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig
+from repro.models import gnn as G
+from repro.models import recsys as R
+from repro.models.layers import rms_norm, softcap
+from repro.models.transformer import forward_train
+from repro.train.optimizer import AdamW, AdamWState
+
+Params = Any
+
+
+class TrainState(NamedTuple):
+    params: Params
+    opt: AdamWState
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+def _hidden_states(params: Params, cfg: LMConfig, tokens: jax.Array,
+                   remat: bool) -> jax.Array:
+    """Forward trunk only (no LM head); per-layer remat inside the scan."""
+    from repro.models.transformer import forward_hidden
+    return forward_hidden(params, cfg, tokens, remat=remat)
+
+
+def lm_loss(params: Params, cfg: LMConfig, tokens: jax.Array,
+            targets: jax.Array, *, chunk_tokens: int = 8192,
+            remat: bool = True) -> jax.Array:
+    """Next-token CE, chunked over the SEQUENCE axis (the batch axis stays
+    sharded over the FSDP group throughout, so chunking never reshards)."""
+    from repro.dist.act_sharding import constrain as _cst
+    B, S = tokens.shape
+    hidden = _hidden_states(params, cfg, tokens, remat)      # (B, S, D)
+    hidden = _cst(hidden, "dp", None, None)
+
+    head = params["head"]
+    chunk_s = max(1, min(S, chunk_tokens // max(B, 1)))
+    while S % chunk_s != 0:
+        chunk_s -= 1
+    n_chunks = S // chunk_s
+
+    def chunk_loss(carry, xs):
+        hc, yc = xs                                          # (B, cs, D)
+        logits = softcap(hc @ head, cfg.logit_softcap).astype(jnp.float32)
+        logits = _cst(logits, "dp", None, "tp")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(yc, 0)[..., None],
+                                   axis=-1)[..., 0]
+        nll = jnp.where(yc >= 0, logz - gold, 0.0)
+        cnt = jnp.sum((yc >= 0).astype(jnp.float32))
+        return (carry[0] + jnp.sum(nll), carry[1] + cnt), None
+
+    h_cs = hidden.reshape(B, n_chunks, chunk_s, -1).transpose(1, 0, 2, 3)
+    y_cs = targets.reshape(B, n_chunks, chunk_s).transpose(1, 0, 2)
+    body = jax.checkpoint(chunk_loss) if remat else chunk_loss
+    (tot, cnt), _ = _scan(body, (jnp.float32(0), jnp.float32(0)),
+                          (h_cs, y_cs))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def make_lm_train_step(cfg: LMConfig, opt: AdamW, chunk_tokens: int = 8192,
+                       num_microbatches: int = 1) -> Callable:
+    """num_microbatches > 1 = gradient accumulation via lax.scan.
+
+    The (B, S) batch is viewed as (B/m, m, S) and transposed so the scan's
+    leading (microbatch) axis is UNsharded while the per-micro batch rows
+    stay sharded over the FSDP group — every device contributes B/(m*dp)
+    rows to each micro step and activation peaks shrink by m."""
+    def step(state: TrainState, batch: Dict[str, jax.Array]):
+        tokens, targets = batch["tokens"], batch["targets"]
+
+        def loss_fn(p, t, y):
+            return lm_loss(p, cfg, t, y, chunk_tokens=chunk_tokens)
+
+        if num_microbatches > 1:
+            B, S = tokens.shape
+            assert B % num_microbatches == 0
+            mb = B // num_microbatches
+            tk = tokens.reshape(mb, num_microbatches, S).transpose(1, 0, 2)
+            tg = targets.reshape(mb, num_microbatches, S).transpose(1, 0, 2)
+
+            def micro(carry, xs):
+                g_acc, l_acc = carry
+                t, y = xs
+                loss, g = jax.value_and_grad(loss_fn)(state.params, t, y)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            (g_sum, l_sum), _ = _scan(micro, (g0, jnp.float32(0)),
+                                             (tk, tg))
+            grads = jax.tree.map(lambda g: g / num_microbatches, g_sum)
+            loss = l_sum / num_microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(
+                state.params, tokens, targets)
+        new_p, new_opt, gnorm = opt.update(grads, state.opt, state.params)
+        return TrainState(new_p, new_opt), {"loss": loss, "grad_norm": gnorm}
+    return step
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def make_gnn_train_step(cfg: GNNConfig, opt: AdamW) -> Callable:
+    def step(state: TrainState, batch: G.GraphBatch):
+        loss, grads = jax.value_and_grad(
+            lambda p: G.pna_loss(p, cfg, batch))(state.params)
+        new_p, new_opt, gnorm = opt.update(grads, state.opt, state.params)
+        return TrainState(new_p, new_opt), {"loss": loss, "grad_norm": gnorm}
+    return step
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+
+def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    z = logits.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def recsys_forward(params: Params, cfg: RecsysConfig,
+                   batch: Dict[str, jax.Array]) -> jax.Array:
+    if cfg.interaction == "fm-2way":
+        return R.fm_forward(params, cfg, batch["ids"])
+    if cfg.interaction == "self-attn":
+        return R.autoint_forward(params, cfg, batch["ids"])
+    if cfg.interaction == "target-attn":
+        return R.din_forward(params, cfg, batch["hist_ids"],
+                             batch["hist_mask"], batch["target_ids"])
+    if cfg.interaction == "self-attn-seq":
+        return R.sasrec_forward(params, cfg, batch["hist_ids"],
+                                batch["hist_mask"], batch["target_ids"])
+    raise ValueError(cfg.interaction)
+
+
+def make_recsys_train_step(cfg: RecsysConfig, opt: AdamW) -> Callable:
+    def step(state: TrainState, batch: Dict[str, jax.Array]):
+        def loss_fn(p):
+            logits = recsys_forward(p, cfg, batch)
+            return bce_loss(logits, batch["labels"])
+        loss, grads = jax.value_and_grad(loss_fn)(state.params)
+        new_p, new_opt, gnorm = opt.update(grads, state.opt, state.params)
+        return TrainState(new_p, new_opt), {"loss": loss, "grad_norm": gnorm}
+    return step
+
+
+def recsys_serve(params: Params, cfg: RecsysConfig,
+                 batch: Dict[str, jax.Array]) -> jax.Array:
+    """Forward scoring (serve_p99 / serve_bulk shapes)."""
+    return recsys_forward(params, cfg, batch)
+
+
+def recsys_score_candidates(params: Params, cfg: RecsysConfig,
+                            batch: Dict[str, jax.Array]) -> jax.Array:
+    """retrieval_cand shape: 1 query vs n_candidates items."""
+    if cfg.interaction == "fm-2way":
+        return R.fm_score_candidates(params, cfg, batch["context_ids"],
+                                     batch["cand_ids"])
+    if cfg.interaction == "self-attn":
+        return R.autoint_score_candidates(params, cfg, batch["context_ids"],
+                                          batch["cand_ids"])
+    if cfg.interaction == "target-attn":
+        return R.din_score_candidates(params, cfg, batch["hist_ids"],
+                                      batch["hist_mask"], batch["cand_ids"])
+    if cfg.interaction == "self-attn-seq":
+        return R.sasrec_score_candidates(params, cfg, batch["hist_ids"],
+                                         batch["hist_mask"], batch["cand_ids"])
+    raise ValueError(cfg.interaction)

@@ -1,0 +1,13 @@
+import os
+
+# Tests must see the real single CPU device (the dry-run sets its own flags
+# in-process); keep any global XLA device-count override out of here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,96 @@
+"""Sequential Col-Bandit (Algorithm 1) behaviour tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import exact_topk, overlap_at_k, run_bandit
+
+
+def _make_h(seed=0, N=48, T=32, gap=0.25):
+    rng = np.random.default_rng(seed)
+    H = rng.uniform(0.2, 0.5, (N, T)).astype(np.float32)
+    winners = rng.choice(N, 6, replace=False)
+    H[winners] += gap
+    return jnp.asarray(np.clip(H, 0, 1)), winners
+
+
+def test_separated_with_hard_bounds_is_exact():
+    """With alpha_ef -> conservative (radius never used: alpha huge makes
+    hybrid fall back to hard bounds), separation is a deterministic
+    certificate: the returned set MUST equal the exact top-K."""
+    H, _ = _make_h(0)
+    a = jnp.zeros(H.shape); b = jnp.ones(H.shape)
+    exact, _ = exact_topk(H, k=5)
+    res = run_bandit(H, a, b, jax.random.key(0), k=5, alpha_ef=1e9)
+    assert bool(res.separated)
+    assert float(overlap_at_k(res.topk, exact)) == 1.0
+
+
+def test_coverage_below_one_on_separable_instance():
+    H, _ = _make_h(1)
+    a = jnp.zeros(H.shape); b = jnp.ones(H.shape)
+    res = run_bandit(H, a, b, jax.random.key(0), k=5, alpha_ef=0.5)
+    assert float(res.coverage) < 1.0
+    assert bool(res.separated)
+
+
+def test_full_budget_recovers_exact():
+    """Even on an inseparable instance (tiny gaps), exhausting the budget
+    must end with the exact ranking (all cells revealed)."""
+    rng = np.random.default_rng(2)
+    H = jnp.asarray(rng.uniform(0.4, 0.6, (16, 8)).astype(np.float32))
+    a = jnp.zeros(H.shape); b = jnp.ones(H.shape)
+    exact, _ = exact_topk(H, k=3)
+    res = run_bandit(H, a, b, jax.random.key(0), k=3, alpha_ef=1e9,
+                     epsilon=0.0)
+    assert float(overlap_at_k(res.topk, exact)) == 1.0
+
+
+def test_alpha_monotone_coverage():
+    """Smaller alpha_ef => tighter radius => less coverage (Sec. 4.4)."""
+    H, _ = _make_h(3)
+    a = jnp.zeros(H.shape); b = jnp.ones(H.shape)
+    covs = []
+    for alpha in (0.1, 1.0, 3.0):
+        res = run_bandit(H, a, b, jax.random.key(0), k=5, alpha_ef=alpha)
+        covs.append(float(res.coverage))
+    assert covs[0] <= covs[1] + 0.05
+    assert covs[1] <= covs[2] + 0.05
+
+
+def test_doc_mask_excludes_padding():
+    H, _ = _make_h(4, N=32)
+    pad = jnp.arange(32) < 24
+    a = jnp.zeros(H.shape); b = jnp.ones(H.shape)
+    res = run_bandit(H, a, b, jax.random.key(0), k=5, alpha_ef=0.5,
+                     doc_mask=pad)
+    assert all(int(i) < 24 for i in np.asarray(res.topk))
+    # padded docs never revealed
+    assert not np.asarray(res.revealed)[24:].any()
+
+
+def test_warmup_fraction_reveals_upfront():
+    H, _ = _make_h(5)
+    a = jnp.zeros(H.shape); b = jnp.ones(H.shape)
+    res = run_bandit(H, a, b, jax.random.key(0), k=5, alpha_ef=1e9,
+                     warmup_fraction=0.5, init_one_per_doc=False)
+    assert float(res.coverage) >= 0.5
+
+
+def test_prereveal_counts_as_observed():
+    H, _ = _make_h(6)
+    a = jnp.zeros(H.shape); b = jnp.ones(H.shape)
+    pre = jnp.zeros(H.shape, bool).at[:, :4].set(True)
+    res = run_bandit(H, a, b, jax.random.key(0), k=5, alpha_ef=0.5,
+                     init_one_per_doc=False, prereveal=pre)
+    assert np.asarray(res.revealed)[:, :4].all()
+
+
+def test_deterministic_given_key():
+    H, _ = _make_h(7)
+    a = jnp.zeros(H.shape); b = jnp.ones(H.shape)
+    r1 = run_bandit(H, a, b, jax.random.key(42), k=5, alpha_ef=0.5)
+    r2 = run_bandit(H, a, b, jax.random.key(42), k=5, alpha_ef=0.5)
+    assert int(r1.reveals) == int(r2.reveals)
+    np.testing.assert_array_equal(np.asarray(r1.topk), np.asarray(r2.topk))

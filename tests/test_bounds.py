@@ -1,0 +1,100 @@
+"""Unit + property tests for the decision bounds (paper Sec. 4.2, App. A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bounds as B
+
+
+def test_rho_n_collapses_at_full_observation():
+    T = 32
+    n = jnp.arange(0, T + 1)
+    rho = B.rho_n(n, T)
+    assert float(rho[T]) == pytest.approx(0.0, abs=1e-7)   # Eq.18: n=T -> 0
+    assert float(rho[1]) == pytest.approx(1.0, abs=1e-6)   # n=1 -> 1
+
+
+def test_rho_n_piecewise_continuity():
+    # the two branches of Eq. 18 should roughly agree at n = T/2
+    T = 64
+    lo = float(B.rho_n(jnp.asarray(T // 2), T))
+    hi = float(B.rho_n(jnp.asarray(T // 2 + 1), T))
+    assert abs(lo - hi) < 0.1
+
+
+def test_radius_infinite_below_two_samples():
+    r = B.serfling_radius(jnp.ones(3), jnp.asarray([0, 1, 2]), T=16, N=3,
+                          delta=0.01, alpha_ef=1.0)
+    assert np.isinf(np.asarray(r)[:2]).all()
+    assert np.isfinite(np.asarray(r)[2])
+
+
+def test_radius_zero_at_full_row():
+    r = B.serfling_radius(jnp.ones(1), jnp.asarray([16]), T=16, N=1,
+                          delta=0.01, alpha_ef=1.0)
+    assert float(r[0]) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_radius_scales_with_alpha():
+    n = jnp.asarray([8])
+    r1 = B.serfling_radius(jnp.ones(1), n, T=16, N=4, delta=0.01, alpha_ef=1.0)
+    r2 = B.serfling_radius(jnp.ones(1), n, T=16, N=4, delta=0.01, alpha_ef=0.25)
+    assert float(r2[0]) == pytest.approx(0.25 * float(r1[0]), rel=1e-6)
+
+
+@given(st.integers(2, 31), st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_hard_bounds_always_contain_truth(n_obs, seed):
+    """Eq. 10/11: LB <= S <= UB for any observation subset (deterministic)."""
+    rng = np.random.default_rng(seed)
+    N, T = 8, 32
+    H = rng.uniform(0, 1, (N, T)).astype(np.float32)
+    revealed = np.zeros((N, T), bool)
+    for i in range(N):
+        idx = rng.choice(T, n_obs, replace=False)
+        revealed[i, idx] = True
+    total = (H * revealed).sum(-1)
+    a = np.zeros((N, T), np.float32)
+    b = np.ones((N, T), np.float32)
+    lb, ub = B.hard_bounds(jnp.asarray(total), jnp.asarray(revealed),
+                           jnp.asarray(a), jnp.asarray(b))
+    S = H.sum(-1)
+    assert (np.asarray(lb) <= S + 1e-5).all()
+    assert (np.asarray(ub) >= S - 1e-5).all()
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_intervals_tighten_with_more_observations(seed):
+    rng = np.random.default_rng(seed)
+    N, T = 4, 32
+    H = rng.uniform(0, 1, (N, T)).astype(np.float32)
+    a = jnp.zeros((N, T)); b = jnp.ones((N, T))
+    widths = []
+    for n_obs in (4, 16, 32):
+        revealed = np.zeros((N, T), bool)
+        revealed[:, :n_obs] = True
+        total = (H * revealed).sum(-1)
+        total_sq = ((H ** 2) * revealed).sum(-1)
+        iv = B.intervals(jnp.full((N,), n_obs), jnp.asarray(total),
+                         jnp.asarray(total_sq), jnp.asarray(revealed), a, b,
+                         T=T, N=N, delta=0.01, alpha_ef=1.0)
+        widths.append(float(jnp.mean(iv.ucb - iv.lcb)))
+    assert widths[0] >= widths[1] >= widths[2]
+    assert widths[2] == pytest.approx(0.0, abs=1e-5)   # fully observed
+
+
+def test_interval_at_full_observation_equals_exact_score():
+    rng = np.random.default_rng(1)
+    N, T = 4, 16
+    H = rng.uniform(0, 1, (N, T)).astype(np.float32)
+    revealed = np.ones((N, T), bool)
+    iv = B.intervals(jnp.full((N,), T), jnp.asarray(H.sum(-1)),
+                     jnp.asarray((H ** 2).sum(-1)), jnp.asarray(revealed),
+                     jnp.zeros((N, T)), jnp.ones((N, T)),
+                     T=T, N=N, delta=0.01, alpha_ef=1.0)
+    np.testing.assert_allclose(np.asarray(iv.s_hat), H.sum(-1), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(iv.lcb), H.sum(-1), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(iv.ucb), H.sum(-1), rtol=1e-5)

@@ -1,0 +1,134 @@
+"""Per-assigned-architecture smoke tests: a REDUCED config of the same
+family (small width/depth, few experts, tiny tables, small graphs) runs one
+forward/train step on CPU, asserting output shapes and no NaNs. The FULL
+configs are exercised only via the dry-run (launch/dryrun.py)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig
+from repro.models import gnn as G
+from repro.models import recsys as R
+from repro.models.transformer import forward_train, init_lm
+from repro.train.optimizer import adamw
+from repro.train.train_step import (TrainState, make_gnn_train_step,
+                                    make_lm_train_step,
+                                    make_recsys_train_step)
+
+KEY = jax.random.key(0)
+
+
+def _reduced_lm(cfg: LMConfig) -> LMConfig:
+    """Shrink while keeping the arch's structural features (MoE/SWA/
+    local-global/softcaps/QKV-bias) intact."""
+    return dataclasses.replace(
+        cfg, n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=max(1, min(cfg.n_kv_heads, 4) // (1 if cfg.n_kv_heads < 4 else 1)),
+        d_head=16, d_ff=0 if cfg.moe else 128, vocab=512,
+        moe_d_ff=96 if cfg.moe else 0,
+        n_experts=4 if cfg.moe else 0,
+        experts_top_k=min(2, cfg.experts_top_k) if cfg.moe else 0,
+        sliding_window=8 if cfg.sliding_window else None)
+
+
+def _no_nans(tree) -> bool:
+    return all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(tree)
+               if np.issubdtype(np.asarray(x).dtype, np.floating))
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED_ARCHS
+                                  if get_config(a).family == "lm"])
+def test_lm_arch_smoke(arch):
+    full = get_config(arch)
+    cfg = _reduced_lm(full)
+    # structural features preserved
+    assert cfg.moe == full.moe
+    assert cfg.local_global_alternating == full.local_global_alternating
+    assert cfg.qkv_bias == full.qkv_bias
+    assert (cfg.sliding_window is None) == (full.sliding_window is None)
+
+    params = init_lm(KEY, cfg)
+    tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    logits = forward_train(params, cfg, tokens, remat=False)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert _no_nans(logits)
+
+    opt = adamw(1e-3)
+    state = TrainState(params=params, opt=opt.init(params))
+    step = jax.jit(make_lm_train_step(cfg, opt))
+    batch = {"tokens": tokens, "targets": jnp.roll(tokens, -1, 1)}
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert _no_nans(state.params)
+
+
+def test_pna_arch_smoke():
+    full = get_config("pna")
+    cfg = dataclasses.replace(full, n_layers=2, d_hidden=16, n_classes=5)
+    assert cfg.aggregators == full.aggregators     # all 4 aggregators
+    assert cfg.scalers == full.scalers             # all 3 scalers
+    params = G.init_pna(KEY, cfg, d_feat=12)
+    batch = G.random_graph(48, 128, 12, 5, seed=0)
+    logits = G.pna_forward(params, cfg, batch)
+    assert logits.shape == (48, 5)
+    assert _no_nans(logits)
+
+    opt = adamw(1e-3)
+    state = TrainState(params=params, opt=opt.init(params))
+    step = jax.jit(make_gnn_train_step(cfg, opt))
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert _no_nans(state.params)
+
+
+def _reduced_recsys(cfg: RecsysConfig) -> RecsysConfig:
+    kw = dict(vocab_sizes=tuple(64 + 5 * i for i in range(cfg.n_sparse))
+              if cfg.n_sparse else (), item_vocab=256 if cfg.item_vocab else 0,
+              seq_len=min(cfg.seq_len, 12) if cfg.seq_len else 0)
+    return dataclasses.replace(cfg, **kw)
+
+
+@pytest.mark.parametrize("arch", ["autoint", "sasrec", "din", "fm"])
+def test_recsys_arch_smoke(arch):
+    full = get_config(arch)
+    cfg = _reduced_recsys(full)
+    assert cfg.interaction == full.interaction
+
+    key = KEY
+    if cfg.interaction == "fm-2way":
+        params = R.init_fm(key, cfg)
+        batch = {"ids": jax.random.randint(key, (8, cfg.n_sparse), 0, 64)}
+    elif cfg.interaction == "self-attn":
+        params = R.init_autoint(key, cfg)
+        batch = {"ids": jax.random.randint(key, (8, cfg.n_sparse), 0, 64)}
+    else:
+        params = (R.init_din(key, cfg) if cfg.interaction == "target-attn"
+                  else R.init_sasrec(key, cfg))
+        batch = {"hist_ids": jax.random.randint(key, (8, cfg.seq_len), 0, 256),
+                 "hist_mask": jnp.ones((8, cfg.seq_len), bool),
+                 "target_ids": jax.random.randint(key, (8,), 0, 256)}
+    from repro.train.train_step import recsys_forward
+    logits = recsys_forward(params, cfg, batch)
+    assert logits.shape == (8,)
+    assert _no_nans(logits)
+
+    opt = adamw(1e-3)
+    state = TrainState(params=params, opt=opt.init(params))
+    step = jax.jit(make_recsys_train_step(cfg, opt))
+    batch["labels"] = jnp.asarray(np.random.default_rng(0).integers(0, 2, 8),
+                                  jnp.float32)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert _no_nans(state.params)
+
+
+def test_all_assigned_archs_registered():
+    assert len(ASSIGNED_ARCHS) == 10
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        assert len(cfg.shapes) == 4        # 4 cells per arch = 40 total

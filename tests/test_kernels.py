@@ -1,0 +1,96 @@
+"""Pallas kernel sweeps vs. the pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.ops import (gather_maxsim_op, masked_maxsim_op, maxsim_op,
+                               maxsim_scores_op)
+
+
+def _inputs(N, L, M, T, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    E = rng.standard_normal((N, L, M)).astype(np.float32)
+    E /= np.maximum(np.linalg.norm(E, axis=-1, keepdims=True), 1e-9)
+    lens = rng.integers(1, L + 1, N)
+    mask = np.arange(L)[None] < lens[:, None]
+    E = np.where(mask[..., None], E, 0.0)
+    Q = rng.standard_normal((T, M)).astype(np.float32)
+    Q /= np.maximum(np.linalg.norm(Q, axis=-1, keepdims=True), 1e-9)
+    return (jnp.asarray(E, dtype), jnp.asarray(mask), jnp.asarray(Q, dtype))
+
+
+SHAPES = [
+    (8, 64, 128, 32),     # aligned
+    (20, 300, 128, 32),   # unaligned N, L
+    (7, 96, 128, 13),     # unaligned everything
+    (64, 729, 128, 64),   # multimodal-ish (Granite: 729 doc tokens)
+    (1, 8, 128, 1),       # degenerate
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_maxsim_matches_ref(shape, dtype):
+    N, L, M, T = shape
+    E, mask, Q = _inputs(N, L, M, T, dtype)
+    h = maxsim_op(E, mask, Q, block_n=8, block_l=128)
+    h_ref = ref.maxsim_ref(E, mask, Q)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=tol)
+
+
+@pytest.mark.parametrize("shape", SHAPES[:3])
+def test_masked_maxsim_matches_ref(shape):
+    N, L, M, T = shape
+    E, mask, Q = _inputs(N, L, M, T, jnp.float32, seed=1)
+    bn, bt = 8, 8
+    gi, gj = -(-N // bn), -(-T // bt)
+    rng = np.random.default_rng(2)
+    tm = jnp.asarray(rng.random((gi, gj)) > 0.4)
+    h = masked_maxsim_op(E, mask, Q, tm, block_n=bn, block_t=bt, block_l=128)
+    full = np.repeat(np.repeat(np.asarray(tm), bn, 0), bt, 1)[:N, :T]
+    h_ref = np.where(full, np.asarray(ref.maxsim_ref(E, mask, Q)), 0.0)
+    np.testing.assert_allclose(np.asarray(h), h_ref, atol=1e-5)
+
+
+def test_masked_maxsim_inactive_tiles_exact_zero():
+    E, mask, Q = _inputs(16, 64, 128, 16, jnp.float32, seed=3)
+    tm = jnp.zeros((2, 2), bool)
+    h = masked_maxsim_op(E, mask, Q, tm, block_n=8, block_t=8, block_l=64)
+    assert (np.asarray(h) == 0.0).all()
+
+
+@pytest.mark.parametrize("B,G", [(6, 4), (8, 8), (3, 1)])
+def test_gather_maxsim_matches_ref(B, G):
+    N, L, M, T = 24, 160, 128, 32
+    E, mask, Q = _inputs(N, L, M, T, jnp.float32, seed=4)
+    rng = np.random.default_rng(5)
+    di = jnp.asarray(rng.integers(0, N, B), jnp.int32)
+    ti = jnp.asarray(rng.integers(0, T, (B, G)), jnp.int32)
+    out = gather_maxsim_op(E, mask, Q, di, ti, block_b=4, block_l=64)
+    out_ref = ref.gather_maxsim_ref(E, mask, Q, di, ti)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               atol=1e-5)
+
+
+def test_scores_equals_row_sum():
+    E, mask, Q = _inputs(16, 128, 128, 32, jnp.float32, seed=6)
+    s = maxsim_scores_op(E, mask, Q)
+    np.testing.assert_allclose(
+        np.asarray(s), np.asarray(ref.maxsim_ref(E, mask, Q).sum(-1)),
+        rtol=1e-5)
+
+
+@given(st.integers(1, 24), st.integers(1, 80), st.integers(1, 40),
+       st.integers(0, 1000))
+@settings(max_examples=12, deadline=None)
+def test_maxsim_property_sweep(N, L, T, seed):
+    """Hypothesis sweep over irregular shapes (M fixed at the hardware lane
+    width)."""
+    E, mask, Q = _inputs(N, L, 128, T, jnp.float32, seed)
+    h = maxsim_op(E, mask, Q, block_n=8, block_l=64)
+    h_ref = ref.maxsim_ref(E, mask, Q)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=1e-5)

@@ -1,0 +1,60 @@
+"""Metrics (Eq. 16 + IR metrics) and static baselines (Alg. 2/3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (doc_top_margin, doc_uniform, exact_topk, mrr_at_k,
+                        ndcg_at_k, overlap_at_k, recall_at_k)
+
+
+def test_overlap():
+    a = jnp.asarray([1, 2, 3, 4, 5])
+    assert float(overlap_at_k(a, a)) == 1.0
+    assert float(overlap_at_k(a, jnp.asarray([1, 2, 3, 9, 8]))) == pytest.approx(0.6)
+    assert float(overlap_at_k(a, jnp.asarray([9, 8, 7, 6, 0]))) == 0.0
+    # order-insensitive
+    assert float(overlap_at_k(a, jnp.asarray([5, 4, 3, 2, 1]))) == 1.0
+
+
+def test_recall_mrr_ndcg():
+    rel = jnp.zeros(20, bool).at[jnp.asarray([3, 7])].set(True)
+    topk = jnp.asarray([0, 3, 5, 7, 9])
+    assert float(recall_at_k(topk, rel)) == pytest.approx(1.0)
+    assert float(mrr_at_k(topk, rel)) == pytest.approx(1 / 2)
+    topk2 = jnp.asarray([0, 1, 2, 4, 5])
+    assert float(recall_at_k(topk2, rel)) == 0.0
+    assert float(mrr_at_k(topk2, rel)) == 0.0
+    assert float(ndcg_at_k(topk2, rel)) == 0.0
+    # perfect ranking => ndcg 1
+    topk3 = jnp.asarray([3, 7, 0, 1, 2])
+    assert float(ndcg_at_k(topk3, rel)) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_doc_uniform_full_budget_exact():
+    rng = np.random.default_rng(0)
+    H = jnp.asarray(rng.uniform(0, 1, (32, 16)).astype(np.float32))
+    exact, _ = exact_topk(H, k=4)
+    res = doc_uniform(H, jax.random.key(0), k=4, budget=16)
+    assert float(overlap_at_k(res.topk, exact)) == 1.0
+    assert float(res.coverage) == 1.0
+
+
+def test_doc_uniform_budget_coverage():
+    rng = np.random.default_rng(1)
+    H = jnp.asarray(rng.uniform(0, 1, (32, 16)).astype(np.float32))
+    res = doc_uniform(H, jax.random.key(0), k=4, budget=4)
+    assert float(res.coverage) == pytest.approx(4 / 16)
+    # exactly budget cells per row
+    assert (np.asarray(res.revealed).sum(-1) == 4).all()
+
+
+def test_doc_top_margin_picks_widest():
+    rng = np.random.default_rng(2)
+    H = jnp.asarray(rng.uniform(0, 1, (8, 16)).astype(np.float32))
+    a = jnp.zeros(H.shape)
+    b = jnp.asarray(np.tile(np.linspace(0.1, 1.0, 16), (8, 1)).astype(np.float32))
+    res = doc_top_margin(H, a, b, k=2, budget=4)
+    # widest-support cells are the last 4 columns
+    assert np.asarray(res.revealed)[:, -4:].all()
+    assert not np.asarray(res.revealed)[:, :-4].any()
