@@ -3,6 +3,7 @@
   PYTHONPATH=src python -m benchmarks.run              # everything
   PYTHONPATH=src python -m benchmarks.run --only table1
   PYTHONPATH=src python -m benchmarks.run --quick      # smaller corpus
+  python benchmarks/run.py --list                      # enumerate harnesses
 
 The roofline/dry-run analyses need 512 placeholder devices and live in
 separate entry points:
@@ -12,12 +13,41 @@ separate entry points:
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
 import os
 import sys
 import time
 
+# Script-friendly bootstrap: `python benchmarks/run.py` puts benchmarks/ on
+# sys.path but neither the repo root (for `import benchmarks`) nor src (for
+# `import repro`); add both so the module works as script and as -m target.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
 import numpy as np
+
+# name -> (module, description).  perf_iterations / roofline are listed (and
+# import-checked by --list) but run through their own __main__ entry points
+# because they pin XLA_FLAGS for 512 placeholder devices at import.
+HARNESSES = {
+    "table1": ("benchmarks.table1_efficiency", "paper Table 1: efficiency"),
+    "table2": ("benchmarks.table2_effectiveness",
+               "paper Table 2: effectiveness"),
+    "fig2": ("benchmarks.fig2_tradeoff", "paper Fig. 2: tradeoff curve"),
+    "fig4": ("benchmarks.fig4_exploration", "paper Fig. 4: exploration"),
+    "fig5": ("benchmarks.fig5_ann_bounds", "paper Fig. 5: ANN bounds"),
+    "generalized": ("benchmarks.generalized_recsys",
+                    "generalized bandit on recsys scorers"),
+}
+STANDALONE = {
+    "perf_iterations": ("benchmarks.perf_iterations",
+                        "§Perf hillclimb (own entry point, 512 fake devices)"),
+    "roofline": ("benchmarks.roofline",
+                 "roofline terms per cell (own entry point)"),
+}
 
 
 def _to_jsonable(obj):
@@ -30,14 +60,35 @@ def _to_jsonable(obj):
     return obj
 
 
+def list_harnesses() -> int:
+    """Import-check and print every harness. A broken import (like the
+    repro.dist regression this guards against) fails loudly, per-module."""
+    failures = 0
+    print(f"{'name':16s} {'module':34s} description")
+    for name, (module, desc) in {**HARNESSES, **STANDALONE}.items():
+        try:
+            importlib.import_module(module)
+            status = desc
+        except Exception as e:
+            failures += 1
+            status = f"[IMPORT FAILED] {type(e).__name__}: {e}"
+        print(f"{name:16s} {module:34s} {status}")
+    if failures:
+        print(f"\n{failures} harness module(s) failed to import")
+    return 1 if failures else 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
-                    choices=["table1", "table2", "fig2", "fig4", "fig5",
-                             "generalized"])
+    ap.add_argument("--only", default=None, choices=sorted(HARNESSES))
+    ap.add_argument("--list", action="store_true",
+                    help="list harnesses (import-checking each) and exit")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="results/bench.json")
     args = ap.parse_args(argv)
+
+    if args.list:
+        return list_harnesses()
 
     n_docs = 192 if args.quick else 384
     n_q = 6 if args.quick else 12

@@ -9,19 +9,26 @@ from repro.data.synthetic import make_retrieval_dataset
 from repro.retrieval.index import build_index
 from repro.retrieval.pipeline import rerank_query
 
-ds = make_retrieval_dataset(n_docs=256, n_queries=4, seed=0)
-index = build_index(ds.doc_embs, ds.doc_mask, ds.doc_lens)
-query = jnp.asarray(ds.queries[0])
 
-exact = rerank_query(index, query, method="exact", k=5)
-bandit = rerank_query(index, query, method="bandit", k=5,
-                      bandit=BanditConfig(k=5, alpha_ef=0.3),
-                      qrels_row=ds.qrels[0])
+def main():
+    ds = make_retrieval_dataset(n_docs=256, n_queries=4, seed=0)
+    index = build_index(ds.doc_embs, ds.doc_mask, ds.doc_lens)
+    query = jnp.asarray(ds.queries[0])
 
-print(f"exact top-5 docs : {exact.topk_docs}")
-print(f"bandit top-5 docs: {bandit.topk_docs}")
-print(f"overlap@5        : {bandit.overlap:.2f}")
-print(f"coverage         : {100 * bandit.coverage:.1f}% of the MaxSim matrix")
-print(f"MaxSim FLOPs     : {bandit.flops:.3g} vs {bandit.flops_exact:.3g} "
-      f"({bandit.flops_exact / max(bandit.flops, 1):.1f}x saving)")
-print(f"task metrics     : {bandit.metrics}")
+    exact = rerank_query(index, query, method="exact", k=5)
+    bandit = rerank_query(index, query, method="bandit", k=5,
+                          bandit=BanditConfig(k=5, alpha_ef=0.3),
+                          qrels_row=ds.qrels[0])
+
+    print(f"exact top-5 docs : {exact.topk_docs}")
+    print(f"bandit top-5 docs: {bandit.topk_docs}")
+    print(f"overlap@5        : {bandit.overlap:.2f}")
+    print(f"coverage         : {100 * bandit.coverage:.1f}% "
+          f"of the MaxSim matrix")
+    print(f"MaxSim FLOPs     : {bandit.flops:.3g} vs {bandit.flops_exact:.3g} "
+          f"({bandit.flops_exact / max(bandit.flops, 1):.1f}x saving)")
+    print(f"task metrics     : {bandit.metrics}")
+
+
+if __name__ == "__main__":
+    main()

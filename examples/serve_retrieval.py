@@ -14,37 +14,44 @@ from repro.data.synthetic import make_retrieval_dataset
 from repro.retrieval.index import build_index
 from repro.retrieval.pipeline import rerank_query
 
-ap = argparse.ArgumentParser()
-ap.add_argument("--n-docs", type=int, default=512)
-ap.add_argument("--n-queries", type=int, default=16)
-ap.add_argument("--alpha", type=float, default=0.3)
-args = ap.parse_args()
 
-print(f"building index: {args.n_docs} docs ...")
-ds = make_retrieval_dataset(n_docs=args.n_docs, n_queries=args.n_queries,
-                            seed=1)
-index = build_index(ds.doc_embs, ds.doc_mask, ds.doc_lens)
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-docs", type=int, default=512)
+    ap.add_argument("--n-queries", type=int, default=16)
+    ap.add_argument("--alpha", type=float, default=0.3)
+    args = ap.parse_args(argv)
 
-stats = {"exact": [], "bandit": []}
-t0 = time.time()
-for qi in range(ds.n_queries):
-    q = jnp.asarray(ds.queries[qi])
-    e = rerank_query(index, q, method="exact", k=5, qrels_row=ds.qrels[qi])
-    b = rerank_query(index, q, method="bandit", k=5,
-                     bandit=BanditConfig(k=5, alpha_ef=args.alpha),
-                     qrels_row=ds.qrels[qi], seed=qi)
-    stats["exact"].append(e)
-    stats["bandit"].append(b)
-    print(f"  q{qi:02d}: overlap={b.overlap:.2f} "
-          f"coverage={100*b.coverage:4.1f}% "
-          f"saving={e.flops/max(b.flops,1):4.1f}x "
-          f"recall@5={b.metrics['recall']:.2f} "
-          f"(exact recall {e.metrics['recall']:.2f})")
+    print(f"building index: {args.n_docs} docs ...")
+    ds = make_retrieval_dataset(n_docs=args.n_docs, n_queries=args.n_queries,
+                                seed=1)
+    index = build_index(ds.doc_embs, ds.doc_mask, ds.doc_lens)
 
-cov = np.mean([r.coverage for r in stats["bandit"]])
-sav = np.mean([e.flops / max(b.flops, 1)
-               for e, b in zip(stats["exact"], stats["bandit"])])
-ov = np.mean([r.overlap for r in stats["bandit"]])
-print(f"\nserved {ds.n_queries} queries in {time.time()-t0:.1f}s: "
-      f"mean coverage {100*cov:.1f}%, mean saving {sav:.1f}x, "
-      f"mean overlap@5 {ov:.2f}")
+    stats = {"exact": [], "bandit": []}
+    t0 = time.time()
+    for qi in range(ds.n_queries):
+        q = jnp.asarray(ds.queries[qi])
+        e = rerank_query(index, q, method="exact", k=5,
+                         qrels_row=ds.qrels[qi])
+        b = rerank_query(index, q, method="bandit", k=5,
+                         bandit=BanditConfig(k=5, alpha_ef=args.alpha),
+                         qrels_row=ds.qrels[qi], seed=qi)
+        stats["exact"].append(e)
+        stats["bandit"].append(b)
+        print(f"  q{qi:02d}: overlap={b.overlap:.2f} "
+              f"coverage={100*b.coverage:4.1f}% "
+              f"saving={e.flops/max(b.flops,1):4.1f}x "
+              f"recall@5={b.metrics['recall']:.2f} "
+              f"(exact recall {e.metrics['recall']:.2f})")
+
+    cov = np.mean([r.coverage for r in stats["bandit"]])
+    sav = np.mean([e.flops / max(b.flops, 1)
+                   for e, b in zip(stats["exact"], stats["bandit"])])
+    ov = np.mean([r.overlap for r in stats["bandit"]])
+    print(f"\nserved {ds.n_queries} queries in {time.time()-t0:.1f}s: "
+          f"mean coverage {100*cov:.1f}%, mean saving {sav:.1f}x, "
+          f"mean overlap@5 {ov:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,2 +1,6 @@
 """repro: Col-Bandit late-interaction retrieval framework (JAX/Pallas)."""
+from repro import _compat
+
+_compat.install()
+
 __version__ = "0.1.0"

@@ -1,0 +1,35 @@
+"""Version-compatibility shims, installed from ``repro.__init__``.
+
+The codebase targets the modern ``jax.shard_map(..., check_vma=...)`` entry
+point; older jax releases (such as the 0.4.x line pinned in this container)
+only expose ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.
+Rather than sprinkling version checks through every call site (and the
+tests, which call ``jax.shard_map`` directly), we install one adapter on the
+``jax`` module the first time ``repro`` is imported.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def install() -> None:
+    """Idempotently install compatibility aliases on the jax module."""
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+            # modern kwarg name -> legacy one (same semantics: replication /
+            # varying-mesh-axes checking of out_specs).
+            if check_vma is not None and "check_rep" not in kw:
+                kw["check_rep"] = bool(check_vma)
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+        jax.shard_map = shard_map
+
+    if not hasattr(jax.lax, "axis_size"):
+        def axis_size(axis_name):
+            # psum of a unit constant constant-folds to the bound axis size
+            return jax.lax.psum(1, axis_name)
+
+        jax.lax.axis_size = axis_size

@@ -1,0 +1,18 @@
+"""repro.dist — the distributed-execution layer.
+
+Module map (each module's docstring carries the details):
+
+  sharding      PartitionSpec rule engine: parameter/optimizer/batch/cache
+                layouts for every model family on the production meshes
+                ({"data":16,"model":16} and {"pod":2,"data":16,"model":16}).
+  act_sharding  global activation-constraint context: models annotate
+                logical axes ("dp"/"tp"), the launch layer binds them per
+                cell (set_mesh/set_axes/set_extra); no-op when unbound.
+  collectives   manual shard_map collectives (ring_matmul / ring all-gather).
+  fault         failure injection, elastic reshard-on-restore, and the
+                deadline admission batcher for serving.
+  flash_decode  split-K decode attention over the sequence-sharded KV cache
+                (§Perf H2), toggled per-cell via configure().
+"""
+from repro.dist import (act_sharding, collectives, fault,  # noqa: F401
+                        flash_decode, sharding)

@@ -1,0 +1,118 @@
+"""Global activation-sharding constraint context.
+
+Model code annotates activations with LOGICAL axes (``"dp"``, ``"tp"``)
+via :func:`constrain`; the launch layer binds those names to concrete mesh
+axes once per cell with :func:`set_mesh` / :func:`set_axes`.  When no mesh
+is configured (unit tests, single-device examples) every constraint is a
+no-op, so the same model code runs unmodified everywhere.
+
+:func:`set_extra` registers NAMED full PartitionSpecs (e.g. ``"cache_kv"``)
+that :func:`constrain_named` applies — the decode cell uses this to pin the
+per-layer KV-cache slices inside the scan to the cache layout without the
+model having to know the mesh.
+
+All constraints are divisibility-guarded like dist/sharding.py: a dim that
+doesn't divide its axis group is left unsharded rather than failing.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import fsdp_axes, tp_axis
+
+_mesh = None
+_dp: Optional[Tuple[str, ...]] = None
+_tp: Optional[str] = None
+_extra: Dict[str, P] = {}
+
+
+def set_mesh(mesh) -> None:
+    """Bind the constraint context to ``mesh`` (None to disable).  Resets
+    the logical axes to the defaults (dp = FSDP group, tp = 'model') and
+    clears named extras — one fresh context per lowered cell."""
+    global _mesh, _dp, _tp
+    _mesh = mesh
+    _dp = fsdp_axes(mesh) if mesh is not None else None
+    _tp = tp_axis(mesh) if mesh is not None else None
+    _extra.clear()
+
+
+def set_axes(dp, tp) -> None:
+    """Override what the logical "dp" / "tp" names resolve to (e.g. the
+    dp_all layout binds dp to EVERY mesh axis and tp to None)."""
+    global _dp, _tp
+    _dp = dp
+    _tp = tp
+
+
+def set_extra(name: str, spec: P) -> None:
+    """Register a named full-rank PartitionSpec for constrain_named."""
+    _extra[name] = spec
+
+
+def clear() -> None:
+    """Drop the mesh, axes and extras — constraints become no-ops (needed
+    before running manual-collective shard_map code in the same process)."""
+    global _mesh, _dp, _tp
+    _mesh = None
+    _dp = None
+    _tp = None
+    _extra.clear()
+
+
+def get_mesh():
+    return _mesh
+
+
+def _resolve(part):
+    if part == "dp":
+        return _dp
+    if part == "tp":
+        return _tp
+    return part
+
+
+def _apply(x: jax.Array, parts) -> jax.Array:
+    mesh_shape = dict(_mesh.shape)
+    fitted = []
+    for dim, part in zip(x.shape, parts):
+        part = _resolve(part)
+        if part is None:
+            fitted.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        size = 1
+        ok = True
+        for a in axes:
+            if a not in mesh_shape:
+                ok = False
+                break
+            size *= int(mesh_shape[a])
+        fitted.append(part if ok and dim % size == 0 else None)
+    if all(p is None for p in fitted):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_mesh, P(*fitted)))
+
+
+def constrain(x: jax.Array, *parts) -> jax.Array:
+    """Constrain ``x`` (rank == len(parts)) to the resolved logical spec.
+    No-op without a configured mesh or on rank mismatch."""
+    if _mesh is None or x.ndim != len(parts):
+        return x
+    return _apply(x, parts)
+
+
+def constrain_named(x: jax.Array, name: str) -> jax.Array:
+    """Apply the registered named spec, or pass through when unregistered
+    (model code can annotate optimistically — see "cache_logits" in
+    models/layers.py)."""
+    if _mesh is None or name not in _extra:
+        return x
+    parts = tuple(_extra[name])
+    if len(parts) != x.ndim:
+        return x
+    return _apply(x, parts)

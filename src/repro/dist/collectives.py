@@ -1,0 +1,57 @@
+"""Manual collectives for shard_map code paths.
+
+``ring_matmul`` is the building block the launch layer uses where GSPMD's
+automatic resharding would insert one bulk all-gather: the row-sharded
+operand's partial products circulate around the ring one hop per step
+(``ppermute``), so every link carries 1/n of the payload per step and
+compute can overlap communication on hardware with async collectives.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _neighbor_perm(n: int) -> list:
+    return [(j, (j + 1) % n) for j in range(n)]
+
+
+def ring_all_gather(x_local: jax.Array, axis_name: str) -> jax.Array:
+    """All-gather ``x_local`` (r, ...) -> (n*r, ...) in ring order.
+
+    Must run under shard_map with ``axis_name`` bound.  Equivalent to
+    ``jax.lax.all_gather(..., tiled=True)`` but lowered as n-1 ppermute
+    hops; chunk j of the result is device j's shard, so concatenating along
+    axis 0 reconstructs the axis-sharded global array.
+    """
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        return x_local
+
+    def hop(buf, _):
+        nxt = jax.lax.ppermute(buf, axis_name, _neighbor_perm(n))
+        return nxt, nxt
+
+    # after k hops device i holds device (i-k) mod n's chunk
+    _, received = jax.lax.scan(hop, x_local, None, length=n - 1)
+    chunks = jnp.concatenate([x_local[None], received], axis=0)  # (n, r, ...)
+    # chunks[j] = shard of device (i-j) mod n; reorder to source order 0..n-1
+    idx = jax.lax.axis_index(axis_name)
+    order = jnp.mod(idx - jnp.arange(n), n)
+    ordered = jnp.take(chunks, order, axis=0)
+    return ordered.reshape((n * x_local.shape[0],) + x_local.shape[1:])
+
+
+def ring_matmul(x_local: jax.Array, w: jax.Array,
+                axis_name: str) -> jax.Array:
+    """Row-sharded matmul with ring reconstruction of the full product.
+
+    x_local: (rows/n, K) — the local shard of a row-sharded X;
+    w:       (K, N)     — replicated.
+    Returns the FULL (rows, N) product on every device: each shard computes
+    its local block, then the blocks ride the ring (n-1 ppermute hops, 1/n
+    of the output per hop) instead of a monolithic all-gather.
+    """
+    return ring_all_gather(x_local @ w, axis_name)

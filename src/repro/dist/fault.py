@@ -1,0 +1,96 @@
+"""Fault-tolerance and elastic-serving primitives.
+
+* :func:`simulate_failure` — deterministic in-process "kill" for testing the
+  checkpoint/restart contract (crash at step k, restart, land bitwise-equal
+  with an uninterrupted run — tests/test_train_ckpt_fault.py).
+* :func:`reshard` — place a restored (host) state tree onto a fresh mesh
+  layout: elastic restart onto a different device topology.
+* :class:`DeadlineBatcher` — the serving-side admission queue: release a
+  batch when it is FULL or when the oldest request has waited past the
+  deadline (padded to the compiled batch shape so one program serves both).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by the failure guard to emulate a worker being killed."""
+
+
+def simulate_failure(run: Callable[[Callable[[int], None]], Any],
+                     fail_at_step: int) -> bool:
+    """Run ``run(guard)`` where ``guard(step)`` kills the run the first time
+    ``step == fail_at_step``.  Returns True when the failure fired (the run
+    died mid-flight), False when the run finished before reaching the step.
+    """
+    fired = [False]
+
+    def guard(step: int) -> None:
+        if step == fail_at_step and not fired[0]:
+            fired[0] = True
+            raise SimulatedFailure(f"simulated failure at step {step}")
+
+    try:
+        run(guard)
+    except SimulatedFailure:
+        return True
+    return fired[0]
+
+
+def reshard(tree: Any, specs: Any, mesh) -> Any:
+    """Place every leaf of ``tree`` on ``mesh`` with its PartitionSpec from
+    ``specs`` (a matching tree of specs).  Used after restore_checkpoint to
+    land host arrays in a NEW device layout — the checkpoint format is
+    layout-free, so a job can come back on a different mesh shape."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)
+
+
+class DeadlineBatcher:
+    """Admission batching with a latency deadline.
+
+    ``add`` enqueues a request; ``poll`` returns ``None`` while the batch is
+    neither full nor expired, otherwise ``(requests, n_real)`` where
+    ``requests`` always has exactly ``batch_size`` entries (short batches
+    are padded by repeating the last real request, so the jitted serving
+    step sees one static shape) and ``n_real`` counts the genuine ones.
+    The deadline clock starts at the OLDEST pending request, so a trickle
+    of traffic is released within ``deadline_s`` of its first arrival.
+    """
+
+    def __init__(self, batch_size: int, deadline_s: float,
+                 clock: Callable[[], float] = time.monotonic):
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        self.batch_size = int(batch_size)
+        self.deadline_s = float(deadline_s)
+        self.clock = clock
+        self._pending: deque = deque()          # (arrival_ts, request)
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def add(self, request: Any) -> None:
+        self._pending.append((self.clock(), request))
+
+    def poll(self) -> Optional[Tuple[List[Any], int]]:
+        if not self._pending:
+            return None
+        if len(self._pending) >= self.batch_size:
+            reqs = [self._pending.popleft()[1]
+                    for _ in range(self.batch_size)]
+            return reqs, self.batch_size
+        oldest_ts = self._pending[0][0]
+        if self.clock() - oldest_ts < self.deadline_s:
+            return None
+        reqs = [item for _, item in self._pending]
+        n_real = len(reqs)
+        self._pending.clear()
+        reqs = reqs + [reqs[-1]] * (self.batch_size - n_real)
+        return reqs, n_real

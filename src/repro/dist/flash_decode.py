@@ -1,0 +1,116 @@
+"""Split-K ("flash-decoding") attention over a sequence-sharded KV cache.
+
+§Perf H2: on long-context decode (long_500k: B=1, S=512k) the KV cache
+shards its SEQUENCE dim over the ``model`` axis (dist/sharding.py
+``lm_cache_specs``).  GSPMD's automatic strategy for the decode attention
+einsum then all-gathers K/V per layer — hundreds of MiB per step.  The
+flash-decode path keeps K/V resident: every shard computes attention over
+its LOCAL keys, and the shards exchange only the (B, H) running max and
+denominator plus the (B, H, D) weighted-value partials — a distributed
+log-sum-exp combine, i.e. exactly flash-decoding's split-K reduction with
+the splits living on different chips.
+
+The launch layer activates it per-cell with :func:`configure`; model code
+gates on :func:`enabled` (models/transformer.py decode path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+_NEG = jnp.float32(-1e30)
+
+_mesh = None
+_batch_part = None       # PartitionSpec entry for the cache batch dim
+_seq_part = None         # PartitionSpec entry for the cache sequence dim
+
+
+def configure(mesh, batch_part, seq_part) -> None:
+    """Bind (or, with ``configure(None, None, None)``, unbind) the split-K
+    decode path.  ``batch_part`` / ``seq_part`` are the PartitionSpec
+    entries of the cache's batch and sequence dims (lm_cache_specs)."""
+    global _mesh, _batch_part, _seq_part
+    _mesh = mesh
+    _batch_part = batch_part
+    _seq_part = seq_part
+
+
+def enabled() -> bool:
+    return _mesh is not None
+
+
+def _axes_tuple(part) -> Tuple[str, ...]:
+    if part is None:
+        return ()
+    return part if isinstance(part, tuple) else (part,)
+
+
+def _local_attention(qg, k, v, kv_pos, kv_valid, q_pos, window,
+                     *, scale: float, softcap: Optional[float],
+                     seq_axes: Tuple[str, ...]):
+    """One shard's split-K contribution + cross-shard LSE combine.
+
+    qg:      (B, 1, Hkv, G, Dh)   queries, grouped per KV head
+    k, v:    (B, S_loc, Hkv, Dh)  local KV shard
+    kv_pos:  (B, S_loc) absolute position per slot (-1 = empty)
+    kv_valid:(B, S_loc) slot validity
+    q_pos:   (B, 1) query position; window: scalar i32 (<=0 = full causal)
+    """
+    f32 = jnp.float32
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(f32),
+                        k.astype(f32)) * scale            # (B,K,G,1,S)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    causal = kv_pos[:, None, :] <= q_pos[:, :, None]      # (B,1,S)
+    dist = q_pos[:, :, None] - kv_pos[:, None, :]
+    in_window = jnp.where(window > 0, dist < window, True)
+    mask = (causal & in_window & kv_valid[:, None, :])[:, None, None, :, :]
+    logits = jnp.where(mask, logits, _NEG)
+
+    m_loc = jnp.max(logits, axis=-1)                      # (B,K,G,1)
+    for ax in seq_axes:
+        m_loc = jax.lax.pmax(m_loc, ax)
+    p = jnp.exp(logits - m_loc[..., None])
+    p = jnp.where(mask, p, 0.0)   # guard: all-masked shard would exp(0)=1
+    denom = jnp.sum(p, axis=-1)                           # (B,K,G,1)
+    num = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(f32))
+    if seq_axes:
+        denom = jax.lax.psum(denom, seq_axes)
+        num = jax.lax.psum(num, seq_axes)
+    denom = jnp.maximum(denom, 1e-30)
+    # denom: (B,K,G,1) -> broadcast over (B,1,K,G,D)
+    out = num / denom.transpose(0, 3, 1, 2)[..., None]
+    return out.astype(qg.dtype)
+
+
+def flash_decode_attention(qg, k, v, kv_pos, kv_valid, q_pos, window,
+                           scale: float,
+                           attn_softcap: Optional[float] = None):
+    """Decode attention with the configured split-K sharding.
+
+    Shapes as in :func:`_local_attention` but GLOBAL; returns
+    (B, 1, Hkv, G, Dh).  Runs the kernel under shard_map on the configured
+    mesh so each shard only ever touches its local slice of the cache.
+    """
+    seq_axes = _axes_tuple(_seq_part)
+    kernel = functools.partial(_local_attention, scale=float(scale),
+                               softcap=attn_softcap, seq_axes=seq_axes)
+    if _mesh is None:
+        return kernel(qg, k, v, kv_pos, kv_valid, q_pos, window)
+    bp, sp = _batch_part, _seq_part
+    return jax.shard_map(
+        kernel, mesh=_mesh,
+        in_specs=(P(bp, None, None, None, None),   # qg
+                  P(bp, sp, None, None),           # k
+                  P(bp, sp, None, None),           # v
+                  P(bp, sp),                       # kv_pos
+                  P(bp, sp),                       # kv_valid
+                  P(bp, None),                     # q_pos
+                  P()),                            # window
+        out_specs=P(bp, None, None, None, None),
+        check_vma=False,
+    )(qg, k, v, kv_pos, kv_valid, q_pos, window)

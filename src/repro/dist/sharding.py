@@ -1,0 +1,224 @@
+"""Parameter / batch / KV-cache PartitionSpec rules for the production meshes.
+
+The two production meshes (launch/mesh.py) are::
+
+    single-pod  {"data": 16, "model": 16}            256 chips
+    multi-pod   {"pod": 2, "data": 16, "model": 16}  512 chips
+
+Conventions used throughout:
+
+  * the FSDP ("dp") group is every mesh axis EXCEPT ``model`` — ZeRO-style
+    parameter/optimizer sharding and batch sharding both ride on it, so a
+    second pod automatically widens the group ("pod","data");
+  * the ``model`` axis is tensor parallelism ("tp"): attention heads and
+    FFN hidden dims shard over it.
+
+Rules are written for the TRAILING dims of a leaf and matched against its
+pytree key path, so one rule covers both a plain leaf (``embed`` -> (V, D))
+and its scan-stacked counterpart (``wq`` -> (L, D, Q): the leading layer
+axis is padded with ``None``) and even the rank-4 MoE expert weights
+((L, E, D, F): E also padded).  Every produced spec is divisibility-checked
+against the mesh: a dim that doesn't divide evenly over its assigned axes is
+silently left unsharded (replicated) instead of failing to lower — the
+contract ``tests/test_dist.py::test_param_spec_rules_cover_lm_tree`` pins.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+MODEL_AXIS = "model"
+
+
+# ---------------------------------------------------------------------------
+# mesh helpers (duck-typed: anything with .shape mapping + .axis_names works)
+# ---------------------------------------------------------------------------
+
+def fsdp_axes(mesh) -> Tuple[str, ...]:
+    """The ZeRO/data-parallel axis group: every axis except ``model``.
+
+    On a mesh with only a model axis (or a single custom axis) the full set
+    is returned so batch specs always have at least one axis to shard over.
+    """
+    names = tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
+    return names or tuple(mesh.axis_names)
+
+
+def tp_axis(mesh) -> Optional[str]:
+    """The tensor-parallel axis, or None when the mesh has no ``model``."""
+    return MODEL_AXIS if MODEL_AXIS in tuple(mesh.axis_names) else None
+
+
+def _group_size(mesh_shape: Dict[str, int], axes) -> int:
+    n = 1
+    for a in axes:
+        n *= int(mesh_shape[a])
+    return n
+
+
+# ---------------------------------------------------------------------------
+# rule engine
+# ---------------------------------------------------------------------------
+
+class ShardingRules(NamedTuple):
+    """An ordered (pattern -> trailing-dims spec) table bound to a mesh shape
+    (only the shape dict is captured so abstract/fake meshes work too)."""
+    mesh_shape: Dict[str, int]
+    rules: Tuple[Tuple[Any, P], ...]
+
+
+def _compile(mesh, rules) -> ShardingRules:
+    return ShardingRules(
+        mesh_shape=dict(mesh.shape),
+        rules=tuple((re.compile(pat), spec) for pat, spec in rules))
+
+
+def _fit_spec(spec: P, shape: Tuple[int, ...],
+              mesh_shape: Dict[str, int]) -> P:
+    """Adapt a trailing-dims spec to a concrete leaf shape: left-pad with
+    None for extra leading dims (layer / expert stacking) and drop any
+    partition whose axis-group size does not divide the dim."""
+    parts = list(tuple(spec))
+    if len(parts) > len(shape):
+        parts = parts[len(parts) - len(shape):]
+    parts = [None] * (len(shape) - len(parts)) + parts
+    fitted = []
+    for dim, part in zip(shape, parts):
+        if part is None:
+            fitted.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        if any(a not in mesh_shape for a in axes):
+            fitted.append(None)
+            continue
+        fitted.append(part if dim % _group_size(mesh_shape, axes) == 0
+                      else None)
+    return P(*fitted)
+
+
+def specs_from_rules(tree, rules: ShardingRules):
+    """Tree of abstract leaves -> tree of PartitionSpecs (same structure).
+
+    Each leaf's key path (``jax.tree_util.keystr``) is matched against the
+    rule table; the FIRST matching rule wins, unmatched leaves replicate.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        spec = P()
+        for pat, s in rules.rules:
+            if pat.search(key):
+                spec = s
+                break
+        out.append(_fit_spec(spec, tuple(leaf.shape), rules.mesh_shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# LM rules
+# ---------------------------------------------------------------------------
+
+def lm_param_rules(mesh, mode: str = "zero3") -> ShardingRules:
+    """Parameter layout for the transformer LM family.
+
+    mode
+      * ``zero3``  — fully sharded parameters: contraction dim over the FSDP
+        group, heads/hidden over ``model`` (gathered just-in-time per layer).
+      * ``zero1``  — parameters replicated over the FSDP group (weight
+        gathers disappear from the step); TP sharding kept.  Pair with
+        ``lm_opt_rules`` so the optimizer state stays sharded.
+      * ``dp_all`` — no TP at all: everything shards its leading dim over
+        EVERY mesh axis (pure data parallelism, §Perf H1 iteration 3).
+    """
+    dp = fsdp_axes(mesh)
+    tp = tp_axis(mesh)
+    every = tuple(mesh.axis_names)
+    if mode == "zero3":
+        row, col = dp, tp
+    elif mode == "zero1":
+        row, col = None, tp
+    elif mode == "dp_all":
+        row, col = every, None
+    else:
+        raise ValueError(f"unknown param mode {mode!r}")
+    vec = row
+    rules = [
+        (r"\['embed'\]$", P(row, col)),
+        (r"\['head'\]$", P(row, col)),
+        (r"\['final_norm'\]$", P(vec)),
+        (r"\['ln1'\]$|\['ln2'\]$", P(vec)),
+        (r"\['wq'\]$|\['wk'\]$|\['wv'\]$", P(row, col)),
+        (r"\['wo'\]$", P(col, row)),
+        (r"\['bq'\]$|\['bk'\]$|\['bv'\]$", P(col)),
+        (r"\['router'\]$", P(row, None)),
+        # one rule serves dense MLP (L, D, F) AND MoE experts (L, E, D, F):
+        # trailing-2 dims are (contraction, hidden) in both layouts
+        (r"\['w_gate'\]$|\['w_up'\]$", P(row, col)),
+        (r"\['w_down'\]$", P(col, row)),
+    ]
+    return _compile(mesh, rules)
+
+
+def lm_opt_rules(mesh) -> ShardingRules:
+    """AdamW m/v layout: ALWAYS fully sharded (ZeRO-1 semantics) — optimizer
+    state is 2x fp32 per param and never needs to be resident unsharded."""
+    return lm_param_rules(mesh, mode="zero3")
+
+
+def lm_batch_spec(mesh) -> P:
+    """(B, S) token batches shard rows over the FSDP group."""
+    return P(fsdp_axes(mesh), None)
+
+
+def lm_cache_specs(mesh, batch: int) -> Dict[str, P]:
+    """KV-cache stack layout, keyed by ``models.kv_cache.CacheStack`` field.
+
+    k/v are (n_layers, B, S_cache, H_kv, D_head): batch shards over the FSDP
+    group when it divides (decode_32k), the cache SEQUENCE dim shards over
+    ``model`` (long_500k's B=1 cache is ~16 GiB/layer-stack otherwise — the
+    split-K flash-decode path in dist/flash_decode.py consumes exactly this
+    layout).  ``pos`` is (B, S_cache) and follows the same two axes.
+    """
+    dp = fsdp_axes(mesh)
+    mesh_shape = dict(mesh.shape)
+    bp = dp if (batch > 1 and batch % _group_size(mesh_shape, dp) == 0) \
+        else None
+    sp = tp_axis(mesh)
+    return {"k": P(None, bp, sp, None, None),
+            "v": P(None, bp, sp, None, None),
+            "pos": P(bp, sp)}
+
+
+# ---------------------------------------------------------------------------
+# GNN / RecSys rules
+# ---------------------------------------------------------------------------
+
+def gnn_param_rules(mesh) -> ShardingRules:
+    """PNA weights: (d_in, d_out) matrices over (fsdp, model) where they
+    divide (d_hidden=75 doesn't on the production meshes -> replicated,
+    which is also the pna_loss_sharded shard_map contract: params in)."""
+    dp = fsdp_axes(mesh)
+    tp = tp_axis(mesh)
+    rules = [
+        (r"\['encode'\]$|\['decode'\]$", P(dp, tp)),
+        (r"\['w_msg_src'\]$|\['w_msg_dst'\]$|\['w_update'\]$", P(dp, tp)),
+    ]
+    return _compile(mesh, rules)
+
+
+def recsys_param_rules(mesh) -> ShardingRules:
+    """RecSys layout: the fused embedding tables are the whole model — their
+    rows shard over ('model' [+ 'pod']) (models/recsys.py contract; rows are
+    padded to 4096 so they always divide); the small dense interaction
+    weights replicate."""
+    names = tuple(mesh.axis_names)
+    rows = tuple(a for a in ("pod", MODEL_AXIS) if a in names) or None
+    rules = [
+        (r"\['table'\]$|\['linear'\]$", P(rows, None)),
+        (r"\['item_table'\]$|\['pos_table'\]$", P(rows, None)),
+    ]
+    return _compile(mesh, rules)

@@ -1,0 +1,106 @@
+"""Minimal stand-in for the ``hypothesis`` property-testing API.
+
+The real hypothesis is declared in ``[project.optional-dependencies] test``
+and is always preferred; this fallback exists so the suite still COLLECTS
+AND RUNS in hermetic containers where installing it isn't possible.  It
+implements exactly the surface the tests use — ``given``, ``settings`` and
+``strategies.integers`` — with deterministic pseudo-random example
+generation (seeded per test name), boundary examples first, and no
+shrinking.  ``tests/conftest.py`` installs it into ``sys.modules`` only
+when ``import hypothesis`` fails.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+from typing import Any, Callable, List
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any],
+                 boundary: List[Any]):
+        self._draw = draw
+        self.boundary = boundary          # tried before random examples
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    if min_value > max_value:
+        raise ValueError("min_value must be <= max_value")
+    bounds = [min_value, max_value] if min_value != max_value else [min_value]
+    return _Strategy(lambda rng: rng.randint(min_value, max_value), bounds)
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)), [False, True])
+
+
+def sampled_from(options) -> _Strategy:
+    options = list(options)
+    return _Strategy(lambda rng: rng.choice(options), options[:1])
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                     [min_value, max_value])
+
+
+class settings:
+    """Decorator recording run options (only max_examples is honored)."""
+
+    def __init__(self, max_examples: int = None, deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._fallback_max_examples = self.max_examples
+        return fn
+
+
+def given(*strategies: _Strategy):
+    """Run the test once per generated example (boundary combos first on
+    the first draws, then seeded-random tuples)."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", None) or 20
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode("utf-8")))
+            for i in range(n):
+                if i == 0:
+                    example = tuple(s.boundary[0] for s in strategies)
+                elif i == 1 and all(len(s.boundary) > 1 for s in strategies):
+                    example = tuple(s.boundary[-1] for s in strategies)
+                else:
+                    example = tuple(s.draw(rng) for s in strategies)
+                try:
+                    fn(*args, *example, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({fn.__name__}): "
+                        f"{example!r}") from e
+        # pytest must NOT see the generated params as fixture requests:
+        # hide the wrapped signature (functools.wraps exposes it via
+        # __wrapped__) and advertise a zero-arg one.
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature(parameters=[])
+        wrapper.hypothesis_fallback = True
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` in sys.modules (fallback only
+    — callers must first verify the real package is absent)."""
+    mod = sys.modules[__name__]
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "sampled_from", "floats"):
+        setattr(strategies, name, getattr(mod, name))
+    mod.strategies = strategies
+    sys.modules.setdefault("hypothesis", mod)
+    sys.modules.setdefault("hypothesis.strategies", strategies)

@@ -1,0 +1,27 @@
+"""Shared helper: run a snippet in a subprocess with 8 host placeholder
+devices (multi-device shard_map tests must not disturb the main pytest
+process's single-device world — see conftest)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_in_subprocess(code: str, n_devices: int = 8) -> str:
+    prog = ("import os\n"
+            f"os.environ['XLA_FLAGS']="
+            f"'--xla_force_host_platform_device_count={n_devices}'\n"
+            + textwrap.dedent(code))
+    out = subprocess.run(
+        [sys.executable, "-c", prog], capture_output=True, text=True,
+        timeout=300, cwd=REPO_ROOT,
+        env={"PYTHONPATH": "src", "PATH": os.environ.get(
+                 "PATH", "/usr/bin:/bin"),
+             "HOME": os.environ.get("HOME", "/root"),
+             # same platform pin as conftest: without it, a container with
+             # libtpu installed stalls for minutes probing for TPU hardware
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout

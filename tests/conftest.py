@@ -1,8 +1,21 @@
 import os
+import sys
 
 # Tests must see the real single CPU device (the dry-run sets its own flags
 # in-process); keep any global XLA device-count override out of here.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Make `pytest` work from the repo root even without PYTHONPATH=src.
+_SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+if os.path.isdir(_SRC) and os.path.abspath(_SRC) not in (
+        os.path.abspath(p) for p in sys.path):
+    sys.path.insert(0, os.path.abspath(_SRC))
+
+try:                                     # real hypothesis when installed
+    import hypothesis                    # noqa: F401
+except ModuleNotFoundError:              # hermetic fallback (same API subset)
+    from repro.testing import hypothesis_fallback
+    hypothesis_fallback.install()
 
 import numpy as np
 import pytest

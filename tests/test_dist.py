@@ -1,29 +1,13 @@
 """Distribution primitives: multi-device tests run in a subprocess with 8
 host placeholder devices (tests themselves must keep the default 1-device
 world — see conftest)."""
-import subprocess
-import sys
-import textwrap
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _subproc import run_in_subprocess as _run_subprocess
 from repro.dist import sharding as SH
-
-
-def _run_subprocess(code: str):
-    prog = ("import os\n"
-            "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8'\n"
-            + textwrap.dedent(code))
-    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
-                         text=True, timeout=300,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"},
-                         cwd="/root/repo")
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
 
 
 def test_ring_matmul_matches_direct():

@@ -1,0 +1,78 @@
+"""Import sweep: every module under src/repro, benchmarks/ and examples/
+must import cleanly.  A missing package (like the repro.dist regression
+this PR fixed) then fails HERE, in one obvious place, instead of as six
+scattered collection errors.
+
+Imports run in a subprocess per tree because some modules (launch/dryrun,
+benchmarks/roofline, benchmarks/perf_iterations) pin XLA_FLAGS for 512
+placeholder devices at import time — that must never leak into this test
+process's jax.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _modules_under(base_dir: str, pkg_prefix: str):
+    mods = []
+    for dirpath, _, filenames in os.walk(os.path.join(ROOT, base_dir)):
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            rel = os.path.relpath(os.path.join(dirpath, fn), ROOT)
+            parts = rel[:-3].replace(os.sep, ".")
+            if pkg_prefix:
+                parts = parts[len(base_dir) + 1:]
+                parts = f"{pkg_prefix}.{parts}" if parts else pkg_prefix
+            if parts.endswith(".__init__"):
+                parts = parts[: -len(".__init__")]
+            mods.append(parts)
+    return sorted(set(mods))
+
+
+def _import_all(modules):
+    prog = (
+        "import importlib, sys, traceback\n"
+        "failed = []\n"
+        f"for m in {modules!r}:\n"
+        "    try:\n"
+        "        importlib.import_module(m)\n"
+        "    except Exception:\n"
+        "        failed.append(m)\n"
+        "        traceback.print_exc()\n"
+        "print('FAILED:' + ','.join(failed) if failed else 'ALL_OK')\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), ROOT,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                        text=True, timeout=600, cwd=ROOT, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ALL_OK" in out.stdout, (
+        f"import failures: {out.stdout.strip().splitlines()[-1]}\n"
+        f"{out.stderr[-3000:]}")
+
+
+def test_repro_package_imports():
+    mods = _modules_under("src/repro", "repro")
+    assert "repro.dist.sharding" in mods      # the restored subsystem
+    assert "repro.dist.fault" in mods
+    _import_all(mods)
+
+
+def test_benchmarks_import():
+    mods = _modules_under("benchmarks", "benchmarks")
+    assert "benchmarks.perf_iterations" in mods
+    _import_all(mods)
+
+
+def test_examples_import():
+    mods = _modules_under("examples", "examples")
+    assert len(mods) >= 4
+    _import_all(mods)
