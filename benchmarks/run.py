@@ -41,6 +41,8 @@ HARNESSES = {
     "fig5": ("benchmarks.fig5_ann_bounds", "paper Fig. 5: ANN bounds"),
     "generalized": ("benchmarks.generalized_recsys",
                     "generalized bandit on recsys scorers"),
+    "serving": ("benchmarks.serving_latency",
+                "RetrievalEngine p50/p99 latency + throughput"),
 }
 STANDALONE = {
     "perf_iterations": ("benchmarks.perf_iterations",
@@ -94,8 +96,8 @@ def main(argv=None):
     n_q = 6 if args.quick else 12
 
     from benchmarks import (fig2_tradeoff, fig4_exploration, fig5_ann_bounds,
-                            generalized_recsys, table1_efficiency,
-                            table2_effectiveness)
+                            generalized_recsys, serving_latency,
+                            table1_efficiency, table2_effectiveness)
     benches = {
         "table1": lambda: table1_efficiency.run(n_docs, n_q),
         "table2": lambda: table2_effectiveness.run(n_docs, n_q),
@@ -103,6 +105,11 @@ def main(argv=None):
         "fig4": lambda: fig4_exploration.run(min(n_docs, 256), min(n_q, 8)),
         "fig5": lambda: fig5_ann_bounds.run(min(n_docs, 256), min(n_q, 8)),
         "generalized": lambda: generalized_recsys.run(),
+        "serving": lambda: serving_latency.run(
+            n_docs=min(n_docs, 96),
+            n_requests=24 if args.quick else 48,
+            batch_sizes=(2, 4) if args.quick else (2, 4, 8),
+            alphas=(0.3,) if args.quick else (0.15, 0.3, 1.0)),
     }
     wanted = [args.only] if args.only else list(benches)
 

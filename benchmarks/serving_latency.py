@@ -1,0 +1,99 @@
+"""Serving-latency harness: p50/p99 latency + throughput of RetrievalEngine.
+
+Closed-loop load (requests submitted back-to-back on the real clock, so
+batches run full) swept over
+
+  * batch size     (dense flavor)   — batching amortization curve, and
+  * alpha_ef       (bandit flavor)  — adaptive-rerank cost knob: smaller
+    alpha_ef widens decision intervals -> more reveals -> higher latency,
+    the serving-side view of the paper's Fig. 2 tradeoff.
+
+Every engine is warmed first, so measured latencies are steady-state
+(compiles_after_warmup is asserted 0 and reported). Registered in
+``benchmarks/run.py`` as ``serving``; also runnable standalone:
+
+  PYTHONPATH=src python -m benchmarks.serving_latency
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.data.synthetic import make_retrieval_dataset
+from repro.serve import EngineConfig, Request, RetrievalEngine
+
+
+def _serve_closed_loop(ds, *, n_requests: int, batch_size: int, flavor: str,
+                       alpha_ef: float, seed: int = 0) -> Dict:
+    rng = np.random.default_rng(seed)
+    cfg = EngineConfig(batch_size=batch_size, deadline_s=0.05,
+                       token_buckets=(16,), cand_buckets=(32,), max_k=10,
+                       flavor=flavor, alpha_ef=alpha_ef,
+                       stage1_candidates=32, seed=seed)
+    engine = RetrievalEngine(ds.doc_embs, ds.doc_mask, cfg)
+    t0 = time.monotonic()
+    engine.warmup()
+    warmup_s = time.monotonic() - t0
+
+    # Closed loop: the whole stream is queued up front (no deadlines), then
+    # drained — batches run full, so the sweep isolates batch-size and
+    # alpha_ef effects from admission-timeout effects.
+    t0 = time.monotonic()
+    for i in range(n_requests):
+        n_tok = int(rng.integers(4, 17))
+        engine.submit(Request(query=ds.queries[i % ds.n_queries][:n_tok],
+                              k=10))
+    done = engine.drain()
+    wall = time.monotonic() - t0
+
+    lat = np.array([c.latency_s for c in done]) * 1e3
+    s = engine.metrics.summary()
+    assert s["compiles_after_warmup"] == 0, s
+    return {
+        "flavor": flavor, "batch_size": batch_size, "alpha_ef": alpha_ef,
+        "n_requests": len(done), "warmup_s": round(warmup_s, 2),
+        "latency_p50_ms": float(np.percentile(lat, 50)),
+        "latency_p99_ms": float(np.percentile(lat, 99)),
+        "throughput_qps": len(done) / max(wall, 1e-9),
+        "mean_occupancy": s["mean_occupancy"],
+        "mean_reveal_fraction": s["mean_reveal_fraction"],
+        "compiles_after_warmup": s["compiles_after_warmup"],
+    }
+
+
+def _print_rows(rows: List[Dict]) -> None:
+    hdr = (f"{'flavor':8s} {'B':>3s} {'alpha':>6s} {'p50 ms':>8s} "
+           f"{'p99 ms':>8s} {'qps':>8s} {'occ':>5s} {'reveal':>7s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['flavor']:8s} {r['batch_size']:3d} {r['alpha_ef']:6.2f} "
+              f"{r['latency_p50_ms']:8.2f} {r['latency_p99_ms']:8.2f} "
+              f"{r['throughput_qps']:8.1f} {r['mean_occupancy']:5.2f} "
+              f"{r['mean_reveal_fraction']:7.2f}")
+
+
+def run(n_docs: int = 96, n_requests: int = 48,
+        batch_sizes: Sequence[int] = (2, 4, 8),
+        alphas: Sequence[float] = (0.15, 0.3, 1.0)) -> Dict:
+    """Sweep latency/throughput vs batch size (dense) and alpha_ef (bandit)."""
+    ds = make_retrieval_dataset(n_docs=n_docs, n_queries=min(n_requests, 32),
+                                doc_len=32, min_doc_len=8, query_len=16,
+                                dim=32, seed=11)
+    rows: List[Dict] = []
+    print(f"corpus: {n_docs} docs; {n_requests} requests per point")
+    for bs in batch_sizes:
+        rows.append(_serve_closed_loop(ds, n_requests=n_requests,
+                                       batch_size=bs, flavor="dense",
+                                       alpha_ef=0.3))
+    for alpha in alphas:
+        rows.append(_serve_closed_loop(ds, n_requests=n_requests,
+                                       batch_size=batch_sizes[-1],
+                                       flavor="bandit", alpha_ef=alpha))
+    _print_rows(rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -62,6 +62,12 @@ class DeadlineBatcher:
     step sees one static shape) and ``n_real`` counts the genuine ones.
     The deadline clock starts at the OLDEST pending request, so a trickle
     of traffic is released within ``deadline_s`` of its first arrival.
+
+    A request may carry its own (tighter) admission deadline via
+    ``add(req, deadline_s=...)``: the pending batch is released as soon as
+    ANY pending request has waited past ``min(deadline_s, its own)`` — the
+    serving engine uses this so a latency-critical request is never held
+    behind the global admission window.
     """
 
     def __init__(self, batch_size: int, deadline_s: float,
@@ -71,26 +77,43 @@ class DeadlineBatcher:
         self.batch_size = int(batch_size)
         self.deadline_s = float(deadline_s)
         self.clock = clock
-        self._pending: deque = deque()          # (arrival_ts, request)
+        self._pending: deque = deque()   # (arrival_ts, deadline_s|None, req)
 
     def __len__(self) -> int:
         return len(self._pending)
 
-    def add(self, request: Any) -> None:
-        self._pending.append((self.clock(), request))
+    def add(self, request: Any, deadline_s: Optional[float] = None) -> None:
+        self._pending.append((self.clock(), deadline_s, request))
+
+    def next_expiry(self) -> Optional[float]:
+        """Earliest absolute time at which ``poll`` will release a partial
+        batch (None when the queue is empty)."""
+        if not self._pending:
+            return None
+        return min(ts + (self.deadline_s if d is None
+                         else min(self.deadline_s, d))
+                   for ts, d, _ in self._pending)
 
     def poll(self) -> Optional[Tuple[List[Any], int]]:
         if not self._pending:
             return None
         if len(self._pending) >= self.batch_size:
-            reqs = [self._pending.popleft()[1]
+            reqs = [self._pending.popleft()[2]
                     for _ in range(self.batch_size)]
             return reqs, self.batch_size
-        oldest_ts = self._pending[0][0]
-        if self.clock() - oldest_ts < self.deadline_s:
+        if self.clock() < self.next_expiry():
             return None
-        reqs = [item for _, item in self._pending]
+        return self.flush()
+
+    def flush(self) -> Optional[Tuple[List[Any], int]]:
+        """Release the oldest pending batch immediately (padded), deadline
+        or not. At most ``batch_size`` real requests per call — the padded
+        static-shape contract holds even when more are pending; call in a
+        loop (or ``poll`` first) to drain completely."""
+        if not self._pending:
+            return None
+        take = min(len(self._pending), self.batch_size)
+        reqs = [self._pending.popleft()[2] for _ in range(take)]
         n_real = len(reqs)
-        self._pending.clear()
         reqs = reqs + [reqs[-1]] * (self.batch_size - n_real)
         return reqs, n_real

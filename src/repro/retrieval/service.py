@@ -43,6 +43,63 @@ def _local_maxsim_scores(doc_embs, doc_mask, queries):
     return jnp.sum(h, axis=-1)
 
 
+# ---------------------------------------------------------------------------
+# Shared candidate-routing / gather / merge path.
+#
+# Every rerank flavor does the same three things around its scorer:
+#   1. gather candidate token embeddings by (possibly -1-padded) doc id,
+#   2. translate shard-local slots to global doc ids (shard_map flavors),
+#   3. merge per-shard scorecards into a global top-K.
+# These helpers are that one path; the step builders below only differ in
+# the scorer they plug into the middle.
+# ---------------------------------------------------------------------------
+
+def gather_candidates(corpus_embs, corpus_mask, cand_ids):
+    """Gather candidate token embeddings by global doc id.
+
+    corpus_embs (C, L, M), corpus_mask (C, L), cand_ids (B, N) with -1
+    padding -> docs (B, N, L, M), dmask (B, N, L) (all-False for padding).
+    """
+    safe = jnp.maximum(cand_ids, 0)
+    docs = jnp.take(corpus_embs, safe, axis=0)
+    dmask = jnp.take(corpus_mask, safe, axis=0) & (cand_ids >= 0)[:, :, None]
+    return docs, dmask
+
+
+def _shard_global_ids(cand, c_loc, every):
+    """Shard-local candidate slot -> global doc id (inside shard_map)."""
+    shard_ix = jnp.int32(0)
+    mul = 1
+    for ax in reversed(every):
+        shard_ix = shard_ix + mul * jax.lax.axis_index(ax)
+        mul = mul * jax.lax.axis_size(ax)
+    return jnp.where(cand >= 0, cand + shard_ix * c_loc, -1)
+
+
+def _merge_scorecards(scores, gids, every, topk):
+    """All-gather (B, N_loc) per-shard scorecards and take the global top-K.
+    The only cross-shard traffic in the corpus-resident flavors."""
+    all_scores = jax.lax.all_gather(scores, every, axis=1, tiled=True)
+    all_gids = jax.lax.all_gather(gids, every, axis=1, tiled=True)
+    best, pos = jax.lax.top_k(all_scores, topk)
+    return best, jnp.take_along_axis(all_gids, pos, axis=1)
+
+
+def _chunked_over_queries(score_chunk, args, chunk=512):
+    """Map ``score_chunk`` over the query batch in bounded-size chunks so the
+    gathered-docs working set stays small; falls back to one call when the
+    batch does not divide evenly."""
+    B = args[0].shape[0]
+    chunk = min(B, chunk)
+    if B % chunk == 0 and B > chunk:
+        nch = B // chunk
+        return jax.lax.map(
+            score_chunk,
+            tuple(x.reshape(nch, chunk, *x.shape[1:]) for x in args)
+        ).reshape(B, -1)
+    return score_chunk(args)
+
+
 def make_rerank_dense_step(mesh: Mesh, *, topk: int = 10):
     """Returns a jit-able step:
     (corpus_embs (C,L,M), corpus_mask (C,L), queries (B,T,M),
@@ -62,36 +119,13 @@ def make_rerank_dense_step(mesh: Mesh, *, topk: int = 10):
 
             def score_chunk(args):
                 q_c, cand_c = args
-                safe = jnp.maximum(cand_c, 0)
-                docs = jnp.take(c_embs, safe, axis=0)         # (b,N_loc,L,M)
-                dmask = (jnp.take(c_mask, safe, axis=0)
-                         & (cand_c >= 0)[:, :, None])
+                docs, dmask = gather_candidates(c_embs, c_mask, cand_c)
                 return _local_maxsim_scores(docs, dmask, q_c)
 
-            B = q.shape[0]
-            chunk = min(B, 512)   # bound the gathered-docs working set
-            if B % chunk == 0 and B > chunk:
-                nch = B // chunk
-                scores = jax.lax.map(
-                    score_chunk,
-                    (q.reshape(nch, chunk, *q.shape[1:]),
-                     cand.reshape(nch, chunk, -1))).reshape(B, -1)
-            else:
-                scores = score_chunk((q, cand))
+            scores = _chunked_over_queries(score_chunk, (q, cand))
             scores = jnp.where(cand >= 0, scores, _NEG)
-            # globalize ids: local slot -> global doc id
-            shard_ix = jnp.int32(0)
-            mul = 1
-            for ax in reversed(every):
-                shard_ix = shard_ix + mul * jax.lax.axis_index(ax)
-                mul = mul * jax.lax.axis_size(ax)
-            c_loc = c_embs.shape[0]
-            gids = jnp.where(cand >= 0, cand + shard_ix * c_loc, -1)
-            # merge across corpus shards: K-sized scorecards only
-            all_scores = jax.lax.all_gather(scores, every, axis=1, tiled=True)
-            all_gids = jax.lax.all_gather(gids, every, axis=1, tiled=True)
-            best, pos = jax.lax.top_k(all_scores, topk)
-            return best, jnp.take_along_axis(all_gids, pos, axis=1)
+            gids = _shard_global_ids(cand, c_embs.shape[0], every)
+            return _merge_scorecards(scores, gids, every, topk)
 
         return jax.shard_map(
             shard_fn, mesh=mesh, check_vma=False,
@@ -105,6 +139,32 @@ def make_rerank_dense_step(mesh: Mesh, *, topk: int = 10):
     return step
 
 
+def _bandit_one_query(cfg: BatchedConfig):
+    """Per-query Col-Bandit over pre-gathered candidate embeddings.
+
+    Returns a closure (docs_q (N,L,M), dmask_q (N,L), q (T,M), cand_q (N,),
+    a_q/b_q (N,T), key) -> (topk_scores (K,), topk_global_ids (K,),
+    coverage ()). The reveal op is the gathered MaxSim einsum — the same
+    cell contract the Pallas ``gather_maxsim`` kernel lowers on TPU."""
+
+    def one_query(docs_q, dmask_q, q, cand_q, a_q, b_q, key):
+        def cells(doc_idx, tok_idx):
+            e = jnp.take(docs_q, doc_idx, axis=0)           # (Bd, L, M)
+            m = jnp.take(dmask_q, doc_idx, axis=0)
+            qq = jnp.take(q, tok_idx, axis=0)               # (Bd, G, M)
+            sims = jnp.einsum("blm,bgm->blg", e.astype(jnp.float32),
+                              qq.astype(jnp.float32))
+            sims = jnp.where(m[:, :, None], sims, _NEG)
+            return jnp.max(sims, axis=1)
+        res = run_batched_bandit(cells, a_q, b_q, key, cfg,
+                                 doc_mask=cand_q >= 0)
+        gids = jnp.where(jnp.take(cand_q, res.topk) >= 0,
+                         jnp.take(cand_q, res.topk), -1)
+        return jnp.take(res.s_hat, res.topk), gids, res.coverage
+
+    return one_query
+
+
 def make_rerank_bandit_step(mesh: Mesh, *, topk: int = 10,
                             alpha_ef: float = 0.3, delta: float = 0.01,
                             block_docs: int = 16, block_tokens: int = 8,
@@ -116,6 +176,7 @@ def make_rerank_bandit_step(mesh: Mesh, *, topk: int = 10,
     cfg = BatchedConfig(k=topk, delta=delta, alpha_ef=alpha_ef,
                         block_docs=block_docs, block_tokens=block_tokens,
                         max_rounds=max_rounds)
+    one_query = _bandit_one_query(cfg)
 
     def step(docs, dmask, queries, cand_ids, a, b):
         """docs (B, N, L, M) pre-gathered candidate embeddings (the routing
@@ -123,25 +184,11 @@ def make_rerank_bandit_step(mesh: Mesh, *, topk: int = 10,
         queries (B, T, M), cand_ids (B, N), a/b (B, N, T) support bounds —
         all sharded over every axis on B.
         Returns (topk_global_ids (B, K), coverage (B,))."""
-
-        def one_query(docs_q, dmask_q, q, cand_q, a_q, b_q, key):
-            def cells(doc_idx, tok_idx):
-                e = jnp.take(docs_q, doc_idx, axis=0)       # (Bd, L, M)
-                m = jnp.take(dmask_q, doc_idx, axis=0)
-                qq = jnp.take(q, tok_idx, axis=0)           # (Bd, G, M)
-                sims = jnp.einsum("blm,bgm->blg", e.astype(jnp.float32),
-                                  qq.astype(jnp.float32))
-                sims = jnp.where(m[:, :, None], sims, _NEG)
-                return jnp.max(sims, axis=1)
-            res = run_batched_bandit(cells, a_q, b_q, key, cfg,
-                                     doc_mask=cand_q >= 0)
-            gids = jnp.where(jnp.take(cand_q, res.topk) >= 0,
-                             jnp.take(cand_q, res.topk), -1)
-            return gids, res.coverage
-
         B = queries.shape[0]
         keys = jax.random.split(jax.random.key(0), B)
-        return jax.vmap(one_query)(docs, dmask, queries, cand_ids, a, b, keys)
+        _, gids, cov = jax.vmap(one_query)(docs, dmask, queries, cand_ids,
+                                           a, b, keys)
+        return gids, cov
 
     in_specs = (P(every, None, None, None),   # docs (B, N, L, M)
                 P(every, None, None),          # dmask (B, N, L)
@@ -174,13 +221,10 @@ def make_rerank_budgeted_step(mesh: Mesh, *, topk: int = 10,
 
             def score_chunk(args):
                 q_c, cand_c, tok_c = args
-                safe = jnp.maximum(cand_c, 0)
-                docs = jnp.take(c_embs, safe, axis=0)         # (b,N,L,M)
-                dmask = (jnp.take(c_mask, safe, axis=0)
-                         & (cand_c >= 0)[:, :, None])
+                docs, dmask = gather_candidates(c_embs, c_mask, cand_c)
                 # gather the selected query tokens per (query, cand)
                 q_sel = jnp.take_along_axis(
-                    q[:, None, :, :],
+                    q_c[:, None, :, :],
                     tok_c[:, :, :, None].astype(jnp.int32), axis=2)
                 sims = jnp.einsum("bnlm,bngm->bnlg",
                                   docs.astype(jnp.float32),
@@ -190,29 +234,10 @@ def make_rerank_budgeted_step(mesh: Mesh, *, topk: int = 10,
                 h = jnp.where(jnp.any(dmask, 2)[:, :, None], h, 0.0)
                 return jnp.sum(h, axis=-1)
 
-            B = q.shape[0]
-            chunk = min(B, 512)
-            if B % chunk == 0 and B > chunk:
-                nch = B // chunk
-                scores = jax.lax.map(
-                    score_chunk,
-                    (q.reshape(nch, chunk, *q.shape[1:]),
-                     cand.reshape(nch, chunk, -1),
-                     toks.reshape(nch, chunk, *toks.shape[1:]))
-                ).reshape(B, -1)
-            else:
-                scores = score_chunk((q, cand, toks))
+            scores = _chunked_over_queries(score_chunk, (q, cand, toks))
             scores = jnp.where(cand >= 0, scores, _NEG)
-            shard_ix = jnp.int32(0)
-            mul = 1
-            for ax in reversed(every):
-                shard_ix = shard_ix + mul * jax.lax.axis_index(ax)
-                mul = mul * jax.lax.axis_size(ax)
-            gids = jnp.where(cand >= 0, cand + shard_ix * c_embs.shape[0], -1)
-            all_scores = jax.lax.all_gather(scores, every, axis=1, tiled=True)
-            all_gids = jax.lax.all_gather(gids, every, axis=1, tiled=True)
-            best, pos = jax.lax.top_k(all_scores, topk)
-            return best, jnp.take_along_axis(all_gids, pos, axis=1)
+            gids = _shard_global_ids(cand, c_embs.shape[0], every)
+            return _merge_scorecards(scores, gids, every, topk)
 
         return jax.shard_map(
             shard_fn, mesh=mesh, check_vma=False,
@@ -257,10 +282,7 @@ def make_rerank_two_phase_step(mesh: Mesh, *, topk: int = 10,
                 # --- phase 2: exact MaxSim for the survivors only ---
                 _, surv_pos = jax.lax.top_k(s1, survivors)    # (b, k2)
                 surv_ids = jnp.take_along_axis(cand_c, surv_pos, axis=1)
-                safe2 = jnp.maximum(surv_ids, 0)
-                docs = jnp.take(c_embs, safe2, axis=0)        # (b,k2,L,M)
-                dmask = (jnp.take(c_mask, safe2, axis=0)
-                         & (surv_ids >= 0)[:, :, None])
+                docs, dmask = gather_candidates(c_embs, c_mask, surv_ids)
                 s2 = _local_maxsim_scores(docs, dmask, q_c)   # (b, k2)
                 s2 = jnp.where(surv_ids >= 0, s2, _NEG)
                 # exact scores override the phase-1 proxies
@@ -269,26 +291,9 @@ def make_rerank_two_phase_step(mesh: Mesh, *, topk: int = 10,
                              surv_pos].set(s2)
                 return out
 
-            B = q.shape[0]
-            chunk = min(B, 512)
-            if B % chunk == 0 and B > chunk:
-                nch = B // chunk
-                scores = jax.lax.map(
-                    score_chunk,
-                    (q.reshape(nch, chunk, *q.shape[1:]),
-                     cand.reshape(nch, chunk, -1))).reshape(B, -1)
-            else:
-                scores = score_chunk((q, cand))
-            shard_ix = jnp.int32(0)
-            mul = 1
-            for ax in reversed(every):
-                shard_ix = shard_ix + mul * jax.lax.axis_index(ax)
-                mul = mul * jax.lax.axis_size(ax)
-            gids = jnp.where(cand >= 0, cand + shard_ix * c_embs.shape[0], -1)
-            all_scores = jax.lax.all_gather(scores, every, axis=1, tiled=True)
-            all_gids = jax.lax.all_gather(gids, every, axis=1, tiled=True)
-            best, pos = jax.lax.top_k(all_scores, topk)
-            return best, jnp.take_along_axis(all_gids, pos, axis=1)
+            scores = _chunked_over_queries(score_chunk, (q, cand))
+            gids = _shard_global_ids(cand, c_embs.shape[0], every)
+            return _merge_scorecards(scores, gids, every, topk)
 
         return jax.shard_map(
             shard_fn, mesh=mesh, check_vma=False,
@@ -298,3 +303,68 @@ def make_rerank_two_phase_step(mesh: Mesh, *, topk: int = 10,
         )(corpus_embs, corpus_mask, corpus_pooled, queries, cand_local)
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# Engine-facing serving steps (repro.serve.RetrievalEngine).
+#
+# Same scorers as the shard_map flavors above, but expressed as plain
+# jit-able programs over a replicated (or host-local) corpus: the engine
+# pads every batch into a small set of static (B, T_bucket, N_bucket)
+# shapes and AOT-compiles one executable per bucket, so these must be pure
+# functions of statically-shaped arrays. Both flavors share the
+# ``gather_candidates`` routing path and one uniform signature:
+#
+#   step(corpus_embs, corpus_mask, queries, cand_ids, a, b, key)
+#     -> (topk_scores (B, K), topk_global_ids (B, K), reveal_frac (B,))
+#
+# ``reveal_frac`` is the fraction of (candidate, token) MaxSim cells the
+# flavor actually computed: 1.0 for dense, the bandit's coverage (Eq. 6)
+# for the adaptive flavor.
+# ---------------------------------------------------------------------------
+
+def rerank_dense_step(corpus_embs, corpus_mask, queries, cand_ids, a, b,
+                      key, *, topk: int = 10):
+    """Exact MaxSim over the candidate list; a/b/key accepted (and ignored)
+    so dense and bandit executables are interchangeable to the engine."""
+    del a, b, key
+    docs, dmask = gather_candidates(corpus_embs, corpus_mask, cand_ids)
+    scores = _local_maxsim_scores(docs, dmask, queries)
+    scores = jnp.where(cand_ids >= 0, scores, _NEG)
+    best, pos = jax.lax.top_k(scores, topk)
+    gids = jnp.take_along_axis(cand_ids, pos, axis=1)
+    gids = jnp.where(best > _NEG / 2, gids, -1)
+    frac = jnp.ones((queries.shape[0],), jnp.float32)
+    return best, gids, frac
+
+
+def rerank_bandit_step(corpus_embs, corpus_mask, queries, cand_ids, a, b,
+                       key, *, topk: int = 10, alpha_ef: float = 0.3,
+                       delta: float = 0.01, block_docs: int = 8,
+                       block_tokens: int = 8, max_rounds: int = -1):
+    """Adaptive Col-Bandit rerank over the candidate list (vmapped)."""
+    cfg = BatchedConfig(k=topk, delta=delta, alpha_ef=alpha_ef,
+                        block_docs=block_docs, block_tokens=block_tokens,
+                        max_rounds=max_rounds)
+    one_query = _bandit_one_query(cfg)
+    docs, dmask = gather_candidates(corpus_embs, corpus_mask, cand_ids)
+    keys = jax.random.split(key, queries.shape[0])
+    return jax.vmap(one_query)(docs, dmask, queries, cand_ids, a, b, keys)
+
+
+def make_serving_step(flavor: str, *, topk: int = 10, alpha_ef: float = 0.3,
+                      delta: float = 0.01, block_docs: int = 8,
+                      block_tokens: int = 8, max_rounds: int = -1):
+    """Shape-bucket-aware step factory the serving engine consumes.
+
+    Returns an un-jitted step with the uniform engine signature; the caller
+    owns compilation (``RetrievalEngine`` AOT-lowers one executable per
+    (flavor, token-bucket, candidate-bucket) and keeps the cache warm)."""
+    if flavor == "dense":
+        return functools.partial(rerank_dense_step, topk=topk)
+    if flavor == "bandit":
+        return functools.partial(
+            rerank_bandit_step, topk=topk, alpha_ef=alpha_ef, delta=delta,
+            block_docs=block_docs, block_tokens=block_tokens,
+            max_rounds=max_rounds)
+    raise ValueError(f"unknown serving flavor: {flavor!r}")

@@ -1,1 +1,17 @@
-"""Serving: LM decode engine + bandit reranking service."""
+"""Serving: streaming retrieval engine + LM decode engine.
+
+``RetrievalEngine`` is the query-stream serving loop (deadline-aware
+batching, static shape buckets, warm jit caches, dense/bandit dispatch);
+``repro.serve.lm`` holds the LM prefill/decode engine.
+"""
+from repro.serve.bucketing import (ShapeBuckets, pad_candidates, pad_queries,
+                                   support_bounds)
+from repro.serve.engine import (BatchRecord, Completion, EngineConfig,
+                                EngineMetrics, Request, RetrievalEngine)
+from repro.serve.lm import generate, serve_step
+
+__all__ = [
+    "ShapeBuckets", "pad_candidates", "pad_queries", "support_bounds",
+    "BatchRecord", "Completion", "EngineConfig", "EngineMetrics", "Request",
+    "RetrievalEngine", "generate", "serve_step",
+]

@@ -1,41 +1,389 @@
-"""LM serving engine: prefill + greedy decode loop over the KV cache."""
+"""Streaming retrieval serving engine with deadline-aware batching.
+
+The request-serving loop the north-star asks for: a stream of
+(query, deadline, k) requests is admitted through
+:class:`repro.dist.fault.DeadlineBatcher` (release on full batch OR tightest
+pending deadline), padded into a small set of static shape buckets
+(:mod:`repro.serve.bucketing`) and dispatched through one of the
+engine-facing rerank steps from :mod:`repro.retrieval.service`:
+
+* ``dense``  — exact MaxSim over the candidate list,
+* ``bandit`` — adaptive Col-Bandit reranking (reveal fraction << 1).
+
+Every (flavor, token-bucket, candidate-bucket) pair is AOT-lowered and
+compiled exactly once — ``warmup()`` pre-compiles every bucket so steady
+state serves with ZERO recompiles; the executable cache and compile counts
+are first-class (``engine.compiled_buckets``, ``metrics.compiles``) so tests
+can assert the no-recompile property instead of trusting it.
+
+Requests either carry a stage-1 candidate list (``cand_ids``) or the engine
+runs its own stage-1 ANN (``repro.retrieval.ann.generate_candidates``,
+vmapped per batch, also bucket-compiled) — the ANN path additionally yields
+Eq. 15 per-cell bounds, which is what makes the bandit flavor effective.
+
+The LM decode engine that used to live here moved to ``repro.serve.lm``.
+"""
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+import dataclasses
+import itertools
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs.base import LMConfig
-from repro.models.transformer import (forward_decode, forward_prefill,
-                                      init_cache)
+from repro.dist.fault import DeadlineBatcher
+from repro.retrieval.ann import generate_candidates
+from repro.retrieval.service import make_serving_step
+from repro.serve.bucketing import (ShapeBuckets, pad_candidates, pad_queries,
+                                   support_bounds)
+from repro.serve.lm import generate, serve_step  # noqa: F401  (back-compat)
 
-Params = Any
-
-
-def generate(params: Params, cfg: LMConfig, prompt: jax.Array, *,
-             max_new_tokens: int = 16, max_seq: int = 0,
-             cache_dtype=jnp.float32) -> jax.Array:
-    """Greedy generation. prompt (B, S) -> (B, S + max_new_tokens)."""
-    B, S = prompt.shape
-    max_seq = max_seq or (S + max_new_tokens)
-    last_logits, cache = forward_prefill(params, cfg, prompt, max_seq,
-                                         cache_dtype=cache_dtype)
-    tok0 = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
-
-    def body(carry, step):
-        tok, cache = carry
-        logits, cache = forward_decode(params, cfg, tok,
-                                       (S + step).astype(jnp.int32), cache)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return (nxt, cache), tok
-
-    (_, _), toks = jax.lax.scan(body, (tok0, cache),
-                                jnp.arange(max_new_tokens))
-    return jnp.concatenate([prompt, toks.T.astype(prompt.dtype)], axis=1)
+SDS = jax.ShapeDtypeStruct
 
 
-def serve_step(params: Params, cfg: LMConfig, token: jax.Array,
-               position: jax.Array, cache) -> Tuple[jax.Array, Any]:
-    """One decode step — THE unit the decode_32k / long_500k cells lower."""
-    return forward_decode(params, cfg, token, position, cache)
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static serving configuration (fixes the compiled shape set)."""
+
+    batch_size: int = 8
+    deadline_s: float = 0.02          # global admission deadline
+    token_buckets: Tuple[int, ...] = (8, 16, 32)
+    cand_buckets: Tuple[int, ...] = (32, 64)
+    max_k: int = 10                   # compiled top-K width (per-request k <=)
+    flavor: str = "auto"              # "dense" | "bandit" | "auto"
+    bandit_min_candidates: int = 64   # auto: bandit when bucket >= this
+    # Col-Bandit knobs (bandit flavor)
+    alpha_ef: float = 0.3
+    delta: float = 0.01
+    block_docs: int = 8
+    block_tokens: int = 8
+    max_rounds: int = -1
+    support: Tuple[float, float] = (0.0, 1.0)
+    # stage-1 ANN (requests without a candidate list)
+    stage1_kprime: int = 8
+    stage1_candidates: int = 0        # 0 => smallest candidate bucket
+    # Admission headroom: a request's completion deadline minus the expected
+    # batch service time (EMA of observed batches, floored by this) is what
+    # the batcher gets — releasing AT the completion deadline would make
+    # every deadline-triggered release a guaranteed miss under a real clock.
+    deadline_headroom_s: float = 0.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    """One retrieval request: (query, deadline, k)."""
+
+    query: np.ndarray                       # (T, M) float32 token embeddings
+    k: int = 10
+    deadline_s: Optional[float] = None      # completion deadline (arrival-rel)
+    cand_ids: Optional[np.ndarray] = None   # (n,) global doc ids; None=stage-1
+    # filled in by the engine
+    rid: int = -1
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    topk_ids: np.ndarray          # (k,) global doc ids, -1 padded
+    topk_scores: np.ndarray       # (k,) f32
+    queue_wait_s: float           # admission latency
+    latency_s: float              # arrival -> results materialized
+    deadline_miss: bool
+    flavor: str
+    bucket: Tuple[int, int]       # (token_bucket, cand_bucket)
+    reveal_fraction: float        # fraction of MaxSim cells computed
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    bucket: Tuple[int, int]
+    flavor: str
+    n_real: int
+    occupancy: float              # n_real / batch_size
+    service_s: float              # release -> results materialized
+    reveal_fraction: float
+
+
+class EngineMetrics:
+    """Serving metrics: per-request, per-batch, and compile accounting."""
+
+    def __init__(self):
+        self.completions: List[Completion] = []
+        self.batches: List[BatchRecord] = []
+        self.compiles: Dict[tuple, int] = {}
+        self.compiles_after_warmup: int = 0
+
+    def record_compile(self, key: tuple, after_warmup: bool) -> None:
+        self.compiles[key] = self.compiles.get(key, 0) + 1
+        if after_warmup:
+            self.compiles_after_warmup += 1
+
+    def summary(self) -> Dict[str, Any]:
+        reqs, bats = self.completions, self.batches
+        waits = np.array([c.queue_wait_s for c in reqs]) if reqs else np.zeros(1)
+        lats = np.array([c.latency_s for c in reqs]) if reqs else np.zeros(1)
+        return {
+            "n_requests": len(reqs),
+            "n_batches": len(bats),
+            "queue_wait_p50_ms": float(np.percentile(waits, 50) * 1e3),
+            "queue_wait_p99_ms": float(np.percentile(waits, 99) * 1e3),
+            "latency_p50_ms": float(np.percentile(lats, 50) * 1e3),
+            "latency_p99_ms": float(np.percentile(lats, 99) * 1e3),
+            "deadline_miss_rate": (float(np.mean([c.deadline_miss
+                                                  for c in reqs]))
+                                   if reqs else 0.0),
+            "mean_occupancy": (float(np.mean([b.occupancy for b in bats]))
+                               if bats else 0.0),
+            "mean_reveal_fraction": (float(np.mean([b.reveal_fraction
+                                                    for b in bats]))
+                                     if bats else 0.0),
+            "compiles": int(sum(self.compiles.values())),
+            "compiles_after_warmup": int(self.compiles_after_warmup),
+        }
+
+
+class RetrievalEngine:
+    """Deadline-batched, shape-bucketed late-interaction serving loop.
+
+    Typical use::
+
+        engine = RetrievalEngine(doc_embs, doc_mask, EngineConfig(...))
+        engine.warmup()                        # compile every bucket
+        rid = engine.submit(Request(query=q, k=5, deadline_s=0.05))
+        done = engine.poll()                   # [] until a batch releases
+        done += engine.drain()                 # end of stream: flush queue
+
+    ``clock`` is injectable so tests and simulations drive virtual time.
+    """
+
+    def __init__(self, corpus_embs, corpus_mask,
+                 config: Optional[EngineConfig] = None, *,
+                 clock: Callable[[], float] = time.monotonic):
+        self.cfg = config or EngineConfig()
+        self.clock = clock
+        self.corpus_embs = jnp.asarray(corpus_embs, jnp.float32)
+        self.corpus_mask = jnp.asarray(corpus_mask, jnp.bool_)
+        if self.corpus_embs.ndim != 3 or self.corpus_mask.ndim != 2:
+            raise ValueError("corpus must be (C, L, M) embs + (C, L) mask")
+        self.buckets = ShapeBuckets(self.cfg.token_buckets,
+                                    self.cfg.cand_buckets)
+        self._stage1_n = (self.cfg.stage1_candidates
+                          or self.buckets.cand_buckets[0])
+        self._stage1_n = self.buckets.cand_bucket(self._stage1_n)
+        self._batcher = DeadlineBatcher(self.cfg.batch_size,
+                                        self.cfg.deadline_s, clock=clock)
+        self._exec: Dict[tuple, Any] = {}
+        self._rid = itertools.count()
+        self._batch_seed = itertools.count(self.cfg.seed)
+        self._warmed = False
+        self._service_ema = 0.0           # observed batch service time (s)
+        self.metrics = EngineMetrics()
+
+    # -- flavor policy ----------------------------------------------------
+
+    def flavor_for(self, cand_bucket: int) -> str:
+        """Dense-vs-bandit dispatch: fixed flavor, or (auto) adaptive
+        reranking once the candidate bucket is large enough for the bandit's
+        sublinear reveal count to beat dense scoring's fixed N*T cost."""
+        if self.cfg.flavor in ("dense", "bandit"):
+            return self.cfg.flavor
+        if self.cfg.flavor != "auto":
+            raise ValueError(f"unknown flavor {self.cfg.flavor!r}")
+        return ("bandit" if cand_bucket >= self.cfg.bandit_min_candidates
+                else "dense")
+
+    # -- compilation cache ------------------------------------------------
+
+    @property
+    def compiled_buckets(self) -> List[tuple]:
+        return sorted(self._exec)
+
+    def _executable(self, key: tuple):
+        """One AOT executable per bucket key; compiles (and counts) on miss."""
+        exe = self._exec.get(key)
+        if exe is not None:
+            return exe
+        cfg = self.cfg
+        B = cfg.batch_size
+        M = self.corpus_embs.shape[2]
+        if key[0] == "step":
+            _, flavor, tb, nb = key
+            step = make_serving_step(
+                flavor, topk=cfg.max_k, alpha_ef=cfg.alpha_ef,
+                delta=cfg.delta, block_docs=cfg.block_docs,
+                block_tokens=cfg.block_tokens, max_rounds=cfg.max_rounds)
+
+            def run(ce, cm, q, cand, a, b, seed):
+                return step(ce, cm, q, cand, a, b, jax.random.key(seed))
+
+            args = (self.corpus_embs, self.corpus_mask,
+                    SDS((B, tb, M), jnp.float32),
+                    SDS((B, nb), jnp.int32),
+                    SDS((B, nb, tb), jnp.float32),
+                    SDS((B, nb, tb), jnp.float32),
+                    SDS((), jnp.int32))
+            exe = jax.jit(run).lower(*args).compile()
+        elif key[0] == "stage1":
+            _, tb = key
+            nb, kp, support = self._stage1_n, cfg.stage1_kprime, cfg.support
+
+            def stage1(ce, cm, q):
+                def one(qq):
+                    cs = generate_candidates(ce, cm, qq, kprime=kp,
+                                             max_candidates=nb,
+                                             support=support)
+                    return cs.doc_ids, cs.a, cs.b
+                return jax.vmap(one)(q)
+
+            args = (self.corpus_embs, self.corpus_mask,
+                    SDS((B, tb, M), jnp.float32))
+            exe = jax.jit(stage1).lower(*args).compile()
+        else:
+            raise KeyError(key)
+        self._exec[key] = exe
+        self.metrics.record_compile(key, after_warmup=self._warmed)
+        return exe
+
+    def warmup(self) -> List[tuple]:
+        """Pre-compile every bucket the policy can reach; after this returns
+        the engine serves any admissible stream with zero recompiles."""
+        for tb in self.buckets.token_buckets:
+            self._executable(("stage1", tb))
+            for nb in self.buckets.cand_buckets:
+                # flavor_for is a pure function of the bucket, so exactly one
+                # flavor is reachable per (tb, nb) — compile just that one.
+                self._executable(("step", self.flavor_for(nb), tb, nb))
+        self._warmed = True
+        return self.compiled_buckets
+
+    # -- request lifecycle ------------------------------------------------
+
+    def submit(self, request: Request) -> int:
+        """Admit one request; returns its rid. Completions surface from
+        ``poll``/``drain`` (requests are served strictly in batches).
+        The caller's Request is not mutated — the engine queues its own
+        copy, so one Request object may be submitted repeatedly."""
+        q = np.asarray(request.query, np.float32)
+        if q.ndim != 2 or q.shape[1] != self.corpus_embs.shape[2]:
+            raise ValueError(f"query must be (T, {self.corpus_embs.shape[2]})")
+        self.buckets.token_bucket(q.shape[0])          # validate fit
+        if request.cand_ids is not None:
+            self.buckets.cand_bucket(len(request.cand_ids))
+        if request.k > self.cfg.max_k:
+            raise ValueError(f"k={request.k} > compiled max_k={self.cfg.max_k}")
+        admitted = dataclasses.replace(request, query=q,
+                                       rid=next(self._rid),
+                                       arrival=self.clock())
+        # Admission deadline = completion deadline - expected service time,
+        # so the batch still has time to EXECUTE before the request is due.
+        admission = None
+        if admitted.deadline_s is not None:
+            headroom = max(self.cfg.deadline_headroom_s, self._service_ema)
+            admission = max(0.0, admitted.deadline_s - headroom)
+        self._batcher.add(admitted, deadline_s=admission)
+        return admitted.rid
+
+    def next_expiry(self) -> Optional[float]:
+        """Absolute clock time at which the pending (partial) batch will be
+        released; None when the queue is empty. Drive your poll loop off
+        this instead of busy-waiting."""
+        return self._batcher.next_expiry()
+
+    def poll(self) -> List[Completion]:
+        """Serve at most one released batch; [] while the admission queue is
+        neither full nor past its tightest deadline."""
+        out = self._batcher.poll()
+        if out is None:
+            return []
+        return self._serve_batch(*out)
+
+    def drain(self) -> List[Completion]:
+        """End of stream: serve every full batch, then flush the remainder
+        (flush releases at most one padded batch per call)."""
+        done: List[Completion] = []
+        while True:
+            out = self._batcher.poll()
+            if out is None:
+                break
+            done.extend(self._serve_batch(*out))
+        while True:
+            out = self._batcher.flush()
+            if out is None:
+                break
+            done.extend(self._serve_batch(*out))
+        return done
+
+    # -- batch execution --------------------------------------------------
+
+    def _serve_batch(self, reqs: Sequence[Request],
+                     n_real: int) -> List[Completion]:
+        cfg = self.cfg
+        t_release = self.clock()
+        real = list(reqs[:n_real])
+        tb = self.buckets.token_bucket(max(r.query.shape[0] for r in real))
+        provided = [r.cand_ids for r in reqs]
+        missing = [c is None for c in provided]
+        n_need = max([len(c) for c in provided if c is not None], default=0)
+        if any(missing):
+            n_need = max(n_need, self._stage1_n)
+        nb = self.buckets.cand_bucket(max(n_need, 1))
+
+        queries = pad_queries([r.query for r in reqs], tb)
+        cand = pad_candidates(provided, nb)
+        n_toks = [r.query.shape[0] for r in reqs]
+        a, b = support_bounds(cand, n_toks, tb, cfg.support)
+
+        if any(missing):
+            ids1, a1, b1 = self._executable(("stage1", tb))(
+                self.corpus_embs, self.corpus_mask, jnp.asarray(queries))
+            ids1, a1, b1 = (np.asarray(ids1), np.asarray(a1), np.asarray(b1))
+            for i, miss in enumerate(missing):
+                if miss:
+                    cand[i, :self._stage1_n] = ids1[i]
+                    cand[i, self._stage1_n:] = -1
+                    a[i, :self._stage1_n] = a1[i]
+                    a[i, self._stage1_n:] = 0.0
+                    b[i, :self._stage1_n] = b1[i]
+                    b[i, self._stage1_n:] = 0.0
+
+        flavor = self.flavor_for(nb)
+        exe = self._executable(("step", flavor, tb, nb))
+        scores, gids, frac = exe(
+            self.corpus_embs, self.corpus_mask, jnp.asarray(queries),
+            jnp.asarray(cand), jnp.asarray(a), jnp.asarray(b),
+            jnp.int32(next(self._batch_seed)))
+        scores, gids, frac = jax.block_until_ready((scores, gids, frac))
+        scores, gids, frac = (np.asarray(scores), np.asarray(gids),
+                              np.asarray(frac))
+        t_done = self.clock()
+
+        service_s = t_done - t_release
+        self._service_ema = (service_s if not self.metrics.batches
+                             else 0.7 * self._service_ema + 0.3 * service_s)
+        self.metrics.batches.append(BatchRecord(
+            bucket=(tb, nb), flavor=flavor, n_real=n_real,
+            occupancy=n_real / cfg.batch_size,
+            service_s=service_s,
+            reveal_fraction=float(np.mean(frac[:n_real]))))
+
+        done: List[Completion] = []
+        for i, r in enumerate(real):
+            latency = t_done - r.arrival
+            comp = Completion(
+                rid=r.rid,
+                topk_ids=gids[i, :r.k].copy(),
+                topk_scores=scores[i, :r.k].copy(),
+                queue_wait_s=t_release - r.arrival,
+                latency_s=latency,
+                deadline_miss=(r.deadline_s is not None
+                               and latency > r.deadline_s + 1e-9),
+                flavor=flavor, bucket=(tb, nb),
+                reveal_fraction=float(frac[i]))
+            done.append(comp)
+        self.metrics.completions.extend(done)
+        return done

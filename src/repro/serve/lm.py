@@ -1,0 +1,41 @@
+"""LM serving engine: prefill + greedy decode loop over the KV cache."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models.transformer import (forward_decode, forward_prefill,
+                                      init_cache)
+
+Params = Any
+
+
+def generate(params: Params, cfg: LMConfig, prompt: jax.Array, *,
+             max_new_tokens: int = 16, max_seq: int = 0,
+             cache_dtype=jnp.float32) -> jax.Array:
+    """Greedy generation. prompt (B, S) -> (B, S + max_new_tokens)."""
+    B, S = prompt.shape
+    max_seq = max_seq or (S + max_new_tokens)
+    last_logits, cache = forward_prefill(params, cfg, prompt, max_seq,
+                                         cache_dtype=cache_dtype)
+    tok0 = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+
+    def body(carry, step):
+        tok, cache = carry
+        logits, cache = forward_decode(params, cfg, tok,
+                                       (S + step).astype(jnp.int32), cache)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, cache), tok
+
+    (_, _), toks = jax.lax.scan(body, (tok0, cache),
+                                jnp.arange(max_new_tokens))
+    return jnp.concatenate([prompt, toks.T.astype(prompt.dtype)], axis=1)
+
+
+def serve_step(params: Params, cfg: LMConfig, token: jax.Array,
+               position: jax.Array, cache) -> Tuple[jax.Array, Any]:
+    """One decode step — THE unit the decode_32k / long_500k cells lower."""
+    return forward_decode(params, cfg, token, position, cache)

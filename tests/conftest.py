@@ -13,6 +13,14 @@ if os.path.isdir(_SRC) and os.path.abspath(_SRC) not in (
 
 try:                                     # real hypothesis when installed
     import hypothesis                    # noqa: F401
+    # Scheduled CI runs the property suite deterministically and harder:
+    # HYPOTHESIS_PROFILE=ci fixes the seed (derandomize) — the example
+    # COUNT is scaled by the tests themselves via REPRO_HYP_EXAMPLES_MULT,
+    # since test-level @settings(max_examples=...) overrides any profile.
+    hypothesis.settings.register_profile(
+        "ci", derandomize=True, deadline=None, print_blob=True)
+    if os.environ.get("HYPOTHESIS_PROFILE"):
+        hypothesis.settings.load_profile(os.environ["HYPOTHESIS_PROFILE"])
 except ModuleNotFoundError:              # hermetic fallback (same API subset)
     from repro.testing import hypothesis_fallback
     hypothesis_fallback.install()

@@ -1,0 +1,78 @@
+"""ISSUE 2 satellite: sequential (paper Alg. 1) vs block-synchronous bandit.
+
+With a full reveal budget and conservative radii (alpha_ef -> inf puts both
+variants in pure hard-bound mode, where stopping implies provable
+separation), both must return the IDENTICAL top-K set — and it must be the
+exact one. Also checks the observation-set accounting invariants shared by
+both control loops: every revealed cell is counted exactly once, and docs
+dropped by the candidate mask are never revealed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import exact_topk, run_bandit, run_batched_oracle
+
+
+def _make_h(seed, N=48, T=24):
+    rng = np.random.default_rng(seed)
+    H = rng.uniform(0.1, 0.6, (N, T)).astype(np.float32)
+    winners = rng.choice(N, 6, replace=False)
+    H[winners] += 0.3
+    return jnp.asarray(np.clip(H, 0, 1))
+
+
+def _run_both(H, *, k, seed=0, doc_mask=None):
+    a = jnp.zeros(H.shape)
+    b = jnp.ones(H.shape)
+    seq = run_bandit(H, a, b, jax.random.key(seed), k=k, alpha_ef=1e9,
+                     doc_mask=doc_mask)
+    blk = run_batched_oracle(H, a, b, jax.random.key(seed), k=k,
+                             alpha_ef=1e9, block_docs=8, block_tokens=4,
+                             doc_mask=doc_mask)
+    return seq, blk
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_full_budget_topk_sets_identical(seed):
+    H = _make_h(seed)
+    k = 5
+    seq, blk = _run_both(H, k=k, seed=seed)
+    exact, _ = exact_topk(H, k=k)
+    want = set(int(i) for i in np.asarray(exact))
+    assert set(int(i) for i in np.asarray(seq.topk)) == want
+    assert set(int(i) for i in np.asarray(blk.topk)) == want
+    # hard-bound mode: both must have stopped via provable separation
+    assert bool(seq.separated) and bool(blk.separated)
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_reveal_accounting_no_double_count(seed):
+    """reveals == |Omega| exactly: re-reveals are no-ops in both variants,
+    so the scalar counter and the boolean observation set always agree."""
+    H = _make_h(seed)
+    for res in _run_both(H, k=5, seed=seed):
+        rev = np.asarray(res.revealed)
+        assert int(res.reveals) == int(rev.sum())
+        n_cells = rev.size
+        np.testing.assert_allclose(float(res.coverage),
+                                   rev.sum() / n_cells, atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", [5, 6])
+def test_dropped_docs_never_revealed(seed):
+    """Docs outside the candidate mask are dropped before the loop starts;
+    neither variant may spend a single reveal on them, and neither may
+    return one in the top-K."""
+    N = 48
+    H = _make_h(seed, N=N)
+    doc_mask = jnp.asarray(np.arange(N) < 36)
+    seq, blk = _run_both(H, k=5, seed=seed, doc_mask=doc_mask)
+    exact, _ = exact_topk(jnp.where(doc_mask[:, None], H, -1.0), k=5)
+    want = set(int(i) for i in np.asarray(exact))
+    for res in (seq, blk):
+        rev = np.asarray(res.revealed)
+        assert not rev[36:].any()
+        assert set(int(i) for i in np.asarray(res.topk)) == want
+        assert all(int(i) < 36 for i in np.asarray(res.topk))

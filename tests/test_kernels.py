@@ -94,3 +94,75 @@ def test_maxsim_property_sweep(N, L, T, seed):
     h = maxsim_op(E, mask, Q, block_n=8, block_l=64)
     h_ref = ref.maxsim_ref(E, mask, Q)
     np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 2 satellite: gather/masked kernel parity on non-multiple-of-block
+# shapes (the padding path inside kernels/ops.py) and all-masked documents.
+# ---------------------------------------------------------------------------
+
+ODD_SHAPES = [
+    (13, 37, 128, 11),    # odd everything
+    (7, 129, 128, 5),     # L just past one block
+    (9, 63, 128, 17),     # L one short of a block
+]
+
+
+@pytest.mark.parametrize("shape", ODD_SHAPES)
+def test_gather_maxsim_odd_shapes_matches_ref(shape):
+    N, L, M, T = shape
+    E, mask, Q = _inputs(N, L, M, T, jnp.float32, seed=7)
+    rng = np.random.default_rng(8)
+    B, G = 5, 3                                    # odd batch too
+    di = jnp.asarray(rng.integers(0, N, B), jnp.int32)
+    ti = jnp.asarray(rng.integers(0, T, (B, G)), jnp.int32)
+    out = gather_maxsim_op(E, mask, Q, di, ti, block_b=4, block_l=32)
+    out_ref = ref.gather_maxsim_ref(E, mask, Q, di, ti)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", ODD_SHAPES)
+def test_masked_maxsim_odd_shapes_matches_ref(shape):
+    N, L, M, T = shape
+    E, mask, Q = _inputs(N, L, M, T, jnp.float32, seed=9)
+    bn, bt = 8, 8
+    gi, gj = -(-N // bn), -(-T // bt)
+    rng = np.random.default_rng(10)
+    tm = jnp.asarray(rng.random((gi, gj)) > 0.4)
+    h = masked_maxsim_op(E, mask, Q, tm, block_n=bn, block_t=bt, block_l=32)
+    full = np.repeat(np.repeat(np.asarray(tm), bn, 0), bt, 1)[:N, :T]
+    h_ref = np.where(full, np.asarray(ref.maxsim_ref(E, mask, Q)), 0.0)
+    np.testing.assert_allclose(np.asarray(h), h_ref, atol=1e-5)
+
+
+def test_gather_maxsim_all_masked_documents():
+    """A document with every token masked must yield the ref sentinel (the
+    running max never observes a valid token), not garbage from padding."""
+    N, L, M, T = 10, 48, 128, 9
+    E, mask, Q = _inputs(N, L, M, T, jnp.float32, seed=11)
+    mask = jnp.asarray(np.asarray(mask).copy())
+    dead = jnp.asarray([2, 7])
+    mask = mask.at[dead].set(False)
+    rng = np.random.default_rng(12)
+    di = jnp.asarray([2, 7, 0, 5], jnp.int32)      # dead docs included
+    ti = jnp.asarray(rng.integers(0, T, (4, 2)), jnp.int32)
+    out = gather_maxsim_op(E, mask, Q, di, ti, block_b=2, block_l=16)
+    out_ref = ref.gather_maxsim_ref(E, mask, Q, di, ti)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               atol=1e-5)
+    assert (np.asarray(out)[:2] < -1e37).all()     # dead rows hit _NEG
+
+
+def test_masked_maxsim_all_masked_documents():
+    N, L, M, T = 11, 40, 128, 10
+    E, mask, Q = _inputs(N, L, M, T, jnp.float32, seed=13)
+    mask = jnp.asarray(np.asarray(mask).copy())
+    mask = mask.at[jnp.asarray([0, 4, 10])].set(False)
+    bn, bt = 4, 4
+    gi, gj = -(-N // bn), -(-T // bt)
+    tm = jnp.ones((gi, gj), bool)                  # all tiles active
+    h = masked_maxsim_op(E, mask, Q, tm, block_n=bn, block_t=bt, block_l=16)
+    h_ref = np.asarray(ref.maxsim_ref(E, mask, Q))
+    np.testing.assert_allclose(np.asarray(h), h_ref, atol=1e-5)
+    assert (np.asarray(h)[[0, 4, 10]] < -1e37).all()

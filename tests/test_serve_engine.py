@@ -1,0 +1,242 @@
+"""Streaming RetrievalEngine: deadline accounting, shape buckets, and the
+zero-recompile serving contract (ISSUE 2 acceptance)."""
+import numpy as np
+import pytest
+
+from repro.data.synthetic import make_retrieval_dataset
+from repro.kernels import ref as kref
+from repro.serve import EngineConfig, Request, RetrievalEngine, ShapeBuckets
+
+
+class ManualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_retrieval_dataset(n_docs=48, n_queries=16, doc_len=16,
+                                  min_doc_len=6, query_len=16, dim=16,
+                                  seed=3)
+
+
+def _dense_cfg(**kw):
+    base = dict(batch_size=4, deadline_s=0.5, token_buckets=(8, 16),
+                cand_buckets=(16,), max_k=5, flavor="dense",
+                stage1_candidates=16, stage1_kprime=4)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# shape buckets
+# ---------------------------------------------------------------------------
+
+def test_shape_buckets_fit_and_validate():
+    b = ShapeBuckets((16, 8), (32,))
+    assert b.token_buckets == (8, 16)            # sorted + deduped
+    assert b.token_bucket(1) == 8
+    assert b.token_bucket(9) == 16
+    assert b.cand_bucket(32) == 32
+    with pytest.raises(ValueError):
+        b.token_bucket(17)
+    with pytest.raises(ValueError):
+        ShapeBuckets((), (8,))
+
+
+def test_submit_validation(corpus):
+    eng = RetrievalEngine(corpus.doc_embs, corpus.doc_mask, _dense_cfg())
+    with pytest.raises(ValueError):              # too many query tokens
+        eng.submit(Request(query=np.zeros((17, 16), np.float32)))
+    with pytest.raises(ValueError):              # k beyond compiled width
+        eng.submit(Request(query=np.zeros((4, 16), np.float32), k=9))
+    with pytest.raises(ValueError):              # wrong embedding dim
+        eng.submit(Request(query=np.zeros((4, 8), np.float32)))
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware admission + deadline-miss accounting
+# ---------------------------------------------------------------------------
+
+def test_deadline_miss_accounting(corpus):
+    clock = ManualClock()
+    eng = RetrievalEngine(corpus.doc_embs, corpus.doc_mask,
+                          _dense_cfg(deadline_s=1.0), clock=clock)
+    eng.warmup()
+    q = corpus.queries[0][:8]
+
+    # two requests with a 50 ms deadline; the engine only gets to poll
+    # 200 ms later -> both are released late and accounted as misses.
+    eng.submit(Request(query=q, k=5, deadline_s=0.05))
+    eng.submit(Request(query=q, k=5, deadline_s=0.05))
+    assert eng.poll() == []                      # not full, not expired yet
+    clock.advance(0.2)
+    done = eng.poll()
+    assert len(done) == 2
+    assert all(c.deadline_miss for c in done)
+    assert all(abs(c.queue_wait_s - 0.2) < 1e-9 for c in done)
+
+    # a relaxed request released exactly at its per-request deadline is NOT
+    # a miss (and is NOT held for the engine-wide 1 s admission window).
+    eng.submit(Request(query=q, k=5, deadline_s=0.3))
+    assert eng.next_expiry() == pytest.approx(clock.t + 0.3)
+    clock.advance(0.3)
+    done = eng.poll()
+    assert len(done) == 1 and not done[0].deadline_miss
+
+    # a full batch releases immediately -> no waiting, no misses.
+    for _ in range(4):
+        eng.submit(Request(query=q, k=5, deadline_s=0.05))
+    done = eng.poll()
+    assert len(done) == 4
+    assert not any(c.deadline_miss for c in done)
+    assert all(c.queue_wait_s == 0.0 for c in done)
+
+    s = eng.metrics.summary()
+    assert s["n_requests"] == 7
+    assert s["deadline_miss_rate"] == pytest.approx(2 / 7)
+
+
+def test_batcher_flush_respects_batch_size():
+    """flush never exceeds the padded static batch shape, however much is
+    pending — drain it with repeated calls."""
+    from repro.dist.fault import DeadlineBatcher
+    t = [0.0]
+    b = DeadlineBatcher(batch_size=4, deadline_s=1.0, clock=lambda: t[0])
+    for x in "abcdef":
+        b.add(x)
+    reqs, n_real = b.flush()
+    assert (reqs, n_real) == (["a", "b", "c", "d"], 4)
+    reqs, n_real = b.flush()
+    assert (reqs, n_real) == (["e", "f", "f", "f"], 2)
+    assert b.flush() is None
+
+
+def test_submit_does_not_mutate_caller_request(corpus):
+    """One Request object may be submitted repeatedly: the engine queues
+    its own copies, each with a fresh rid and arrival stamp."""
+    clock = ManualClock()
+    eng = RetrievalEngine(corpus.doc_embs, corpus.doc_mask,
+                          _dense_cfg(batch_size=2), clock=clock)
+    req = Request(query=corpus.queries[0][:8], k=5,
+                  cand_ids=np.arange(8, dtype=np.int32))
+    r0 = eng.submit(req)
+    clock.advance(0.1)
+    r1 = eng.submit(req)
+    assert req.rid == -1 and req.arrival == 0.0      # caller copy untouched
+    done = {c.rid: c for c in eng.poll()}
+    assert set(done) == {r0, r1} and r0 != r1
+    assert done[r0].queue_wait_s == pytest.approx(0.1)
+    assert done[r1].queue_wait_s == pytest.approx(0.0)
+
+
+def test_admission_leaves_service_headroom(corpus):
+    """The batcher must release EARLY enough for the batch to execute
+    before the completion deadline: admission = deadline - headroom."""
+    clock = ManualClock()
+    eng = RetrievalEngine(corpus.doc_embs, corpus.doc_mask,
+                          _dense_cfg(deadline_headroom_s=0.02), clock=clock)
+    eng.submit(Request(query=corpus.queries[0][:8], k=5, deadline_s=0.05))
+    assert eng.next_expiry() == pytest.approx(0.03)
+
+
+# ---------------------------------------------------------------------------
+# compile accounting: one compile per bucket, zero after warmup
+# ---------------------------------------------------------------------------
+
+def test_cold_engine_compiles_each_bucket_exactly_once(corpus):
+    """Without warmup, the first batch per bucket compiles; every later hit
+    of the same bucket reuses the cached executable."""
+    eng = RetrievalEngine(corpus.doc_embs, corpus.doc_mask, _dense_cfg())
+    q_small, q_large = corpus.queries[0][:6], corpus.queries[1][:12]
+    for _ in range(3):                           # 3 batches per bucket
+        for q in (q_small, q_small, q_small, q_small):
+            eng.submit(Request(query=q, k=5))
+        eng.poll()
+        for q in (q_large, q_large, q_large, q_large):
+            eng.submit(Request(query=q, k=5))
+        eng.poll()
+    assert len(eng.metrics.completions) == 24
+    assert all(count == 1 for count in eng.metrics.compiles.values())
+    used = {c.bucket for c in eng.metrics.completions}
+    assert used == {(8, 16), (16, 16)}
+
+
+def test_warm_engine_serves_64_request_mixed_stream_with_zero_recompiles(
+        corpus):
+    """ISSUE 2 acceptance: warmup() pre-compiles every bucket; a 64-request
+    stream of mixed query lengths and mixed candidate provenance then
+    serves without a single extra compile."""
+    clock = ManualClock()
+    eng = RetrievalEngine(corpus.doc_embs, corpus.doc_mask,
+                          _dense_cfg(deadline_s=0.01), clock=clock)
+    eng.warmup()
+    compiled = dict(eng.metrics.compiles)
+    assert compiled and all(n == 1 for n in compiled.values())
+
+    rng = np.random.default_rng(0)
+    done = []
+    for i in range(64):
+        n_tok = int(rng.integers(2, 17))
+        cand = (rng.choice(48, int(rng.integers(4, 17)), replace=False)
+                if i % 2 else None)
+        eng.submit(Request(query=corpus.queries[i % 16][:n_tok], k=5,
+                           deadline_s=0.05, cand_ids=cand))
+        clock.advance(float(rng.uniform(0, 0.01)))
+        done += eng.poll()
+    done += eng.drain()
+
+    assert len(done) == 64
+    assert eng.metrics.compiles_after_warmup == 0
+    assert dict(eng.metrics.compiles) == compiled   # cache untouched
+    assert {c.bucket[0] for c in done} == {8, 16}   # both buckets exercised
+    s = eng.metrics.summary()
+    assert s["n_requests"] == 64 and s["compiles_after_warmup"] == 0
+
+
+# ---------------------------------------------------------------------------
+# correctness of served results
+# ---------------------------------------------------------------------------
+
+def test_dense_results_match_reference(corpus):
+    eng = RetrievalEngine(corpus.doc_embs, corpus.doc_mask, _dense_cfg())
+    cand = np.arange(16, dtype=np.int32)
+    q = corpus.queries[2][:8]
+    eng.submit(Request(query=q, k=5, cand_ids=cand))
+    done = eng.drain()
+    assert len(done) == 1
+    h = kref.maxsim_ref(corpus.doc_embs[cand], corpus.doc_mask[cand],
+                        np.asarray(q, np.float32))
+    s_ref = np.asarray(h.sum(-1))
+    order = cand[np.argsort(-s_ref)]
+    assert int(done[0].topk_ids[0]) == int(order[0])
+    np.testing.assert_allclose(done[0].topk_scores[0], s_ref.max(),
+                               atol=1e-4)
+    assert done[0].reveal_fraction == pytest.approx(1.0)
+
+
+@pytest.mark.slow
+def test_bandit_flavor_conservative_matches_dense_top1(corpus):
+    """alpha_ef -> inf puts the bandit in hard-bound mode: its top-1 must
+    agree with dense scoring, at a reveal fraction <= 1."""
+    cfg = _dense_cfg(flavor="bandit", alpha_ef=1e9, batch_size=2,
+                     token_buckets=(8,), block_docs=4, block_tokens=4)
+    eng = RetrievalEngine(corpus.doc_embs, corpus.doc_mask, cfg)
+    dense = RetrievalEngine(corpus.doc_embs, corpus.doc_mask, _dense_cfg())
+    cand = np.arange(16, dtype=np.int32)
+    for qi in (0, 1):
+        q = corpus.queries[qi][:8]
+        eng.submit(Request(query=q, k=5, cand_ids=cand))
+        dense.submit(Request(query=q, k=5, cand_ids=cand))
+    got = {c.rid: c for c in eng.drain()}
+    want = {c.rid: c for c in dense.drain()}
+    for rid, c in got.items():
+        assert int(c.topk_ids[0]) == int(want[rid].topk_ids[0])
+        assert 0.0 < c.reveal_fraction <= 1.0
+        assert c.flavor == "bandit" and want[rid].flavor == "dense"
