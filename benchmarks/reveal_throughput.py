@@ -1,0 +1,210 @@
+"""Reveal-engine throughput: pooled cross-query frontier vs vmapped lockstep.
+
+The serving question this answers: on a mixed-difficulty batch, how many
+reveal rounds does the batch actually PAY, and how fast do revealed cells
+come out of the engine?
+
+  * ``vmapped`` — jax.vmap(solo bandit): every query rides the global
+    while_loop to the SLOWEST query's round count (lockstep), so the batch
+    pays Q * max(rounds) round-slots.
+  * ``pooled`` — repro.core.frontier: one global loop, per-query retirement;
+    the batch pays sum(rounds) round-slots and the frontier occupancy
+    reports how full the shared reveal kernel runs.
+  * ``pooled+grow`` — retired queries' slots are reallocated to the
+    stragglers (max_block_docs), shrinking the global trip count itself.
+
+Also verifies the two serving-side acceptance properties:
+  * full-budget parity — in hard-bound mode (alpha_ef -> inf) pooled and
+    vmapped return the IDENTICAL top-K set per query;
+  * the compiled dense serving step materializes no (B, N, L, T)
+    similarity intermediate (``launch.hlo_analysis.peak_buffer_bytes``
+    against the einsum formulation it replaced).
+
+Registered in ``benchmarks/run.py`` as ``reveal``; standalone:
+
+  PYTHONPATH=src python -m benchmarks.reveal_throughput
+
+Emits ``BENCH_reveal.json`` (cells/s, total rounds, lockstep waste).
+
+Caveat on cells/s: oracle mode on CPU measures control-loop op dispatch,
+where the pooled body pays extra compaction/scatter ops per trip; the
+launch-consolidation win (one gather_maxsim kernel per round for the whole
+batch instead of Q per-query reveals) is a TPU property. The rounds /
+waste / trips / occupancy columns are engine-invariant scheduling facts.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import run_batched_oracle, run_pooled_oracle
+from repro.data.synthetic import make_mixed_difficulty_h
+from repro.launch.hlo_analysis import peak_buffer_bytes
+
+
+def _run_engines(H, keys, *, k: int, alpha_ef: float, block_docs: int,
+                 block_tokens: int, grow: int) -> Dict[str, Dict]:
+    Q, N, T = H.shape
+    a = jnp.zeros(H.shape, jnp.float32)
+    b = jnp.ones(H.shape, jnp.float32)
+    kw = dict(k=k, alpha_ef=alpha_ef, block_docs=block_docs,
+              block_tokens=block_tokens)
+
+    solo = functools.partial(run_batched_oracle, **kw)
+    runners = {
+        "vmapped": lambda: jax.vmap(solo)(H, a, b, keys),
+        "pooled": lambda: run_pooled_oracle(H, a, b, keys, **kw),
+        "pooled_grow": lambda: run_pooled_oracle(H, a, b, keys,
+                                                 max_block_docs=grow, **kw),
+    }
+    out: Dict[str, Dict] = {}
+    for name, fn in runners.items():
+        jax.block_until_ready(fn())              # compile + warm
+        t0 = time.perf_counter()
+        res = jax.block_until_ready(fn())
+        wall = time.perf_counter() - t0
+        rounds = np.asarray(res.rounds)
+        reveals = int(np.asarray(res.reveals).sum())
+        row = {
+            "wall_s": wall,
+            "cells_per_s": reveals / max(wall, 1e-9),
+            "total_reveals": reveals,
+            "rounds_mean": float(rounds.mean()),
+            "rounds_max": int(rounds.max()),
+            "total_rounds": int(rounds.sum()),
+            "lockstep_rounds": int(Q * rounds.max()),
+            "lockstep_waste": int(Q * rounds.max() - rounds.sum()),
+        }
+        if hasattr(res, "occupancy"):
+            row["trips"] = int(res.trips)
+            row["frontier_occupancy"] = float(res.occupancy)
+        out[name] = row
+    return out
+
+
+def _topk_parity(H, keys, *, k: int, block_docs: int,
+                 block_tokens: int) -> bool:
+    """Hard-bound full-budget mode: pooled and vmapped must return the
+    identical top-K SET for every query."""
+    a = jnp.zeros(H.shape, jnp.float32)
+    b = jnp.ones(H.shape, jnp.float32)
+    kw = dict(k=k, alpha_ef=1e9, block_docs=block_docs,
+              block_tokens=block_tokens)
+    vm = jax.vmap(functools.partial(run_batched_oracle, **kw))(H, a, b, keys)
+    pl = run_pooled_oracle(H, a, b, keys, **kw)
+    vm_tk, pl_tk = np.asarray(vm.topk), np.asarray(pl.topk)
+    return all(set(vm_tk[q]) == set(pl_tk[q]) for q in range(H.shape[0]))
+
+
+def _dense_peak_buffer(*, B=8, C=64, N=32, L=512, M=16, T=64) -> Dict:
+    """Compile the engine-facing dense step under REPRO_KERNEL_IMPL=ref
+    (the L-chunked scorer every non-TPU CI lane runs; the Pallas path tiles
+    through VMEM by construction) and check its peak temp buffer stays
+    below one (B, N, L, T) f32 tensor — the intermediate the einsum
+    formulation it replaced always materialized."""
+    from repro.retrieval.service import gather_candidates, rerank_dense_step
+
+    SDS = jax.ShapeDtypeStruct
+    args = (SDS((C, L, M), jnp.float32), SDS((C, L), jnp.bool_),
+            SDS((B, T, M), jnp.float32), SDS((B, N), jnp.int32),
+            SDS((B, N, T), jnp.float32), SDS((B, N, T), jnp.float32),
+            SDS((), jnp.int32))
+
+    def step(ce, cm, q, cand, a, b, seed):
+        return rerank_dense_step(ce, cm, q, cand, a, b,
+                                 jax.random.key(seed), topk=10)
+
+    def einsum_step(ce, cm, q, cand, a, b, seed):   # the replaced path
+        del a, b, seed
+        docs, dmask = gather_candidates(ce, cm, cand)
+        sims = jnp.einsum("bnlm,btm->bnlt", docs, q)
+        sims = jnp.where(dmask[:, :, :, None], sims, -3e38)
+        h = jnp.max(sims, axis=2)
+        return jnp.sum(jnp.where(jnp.any(dmask, 2)[:, :, None], h, 0.0), -1)
+
+    prev = os.environ.get("REPRO_KERNEL_IMPL")
+    os.environ["REPRO_KERNEL_IMPL"] = "ref"
+    try:
+        peak = peak_buffer_bytes(jax.jit(step).lower(*args).compile())
+        peak_einsum = peak_buffer_bytes(
+            jax.jit(einsum_step).lower(*args).compile())
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_KERNEL_IMPL", None)
+        else:
+            os.environ["REPRO_KERNEL_IMPL"] = prev
+    bnlt = B * N * L * T * 4
+    return {
+        "shape": {"B": B, "N": N, "L": L, "M": M, "T": T},
+        "bnlt_bytes": bnlt,
+        "peak_temp_bytes": peak,
+        "peak_temp_bytes_einsum": peak_einsum,
+        "no_bnlt_intermediate": peak < bnlt,
+    }
+
+
+def run(Q: int = 64, n_docs: int = 64, n_tokens: int = 32, k: int = 10,
+        alpha_ef: float = 0.3, block_docs: int = 16, block_tokens: int = 4,
+        grow: int = 48, seed: int = 0,
+        out: str = "BENCH_reveal.json") -> Dict:
+    H = jnp.asarray(make_mixed_difficulty_h(Q, n_docs, n_tokens, k=k,
+                                            seed=seed))
+    keys = jax.random.split(jax.random.key(seed), Q)
+
+    print(f"mixed-difficulty batch: Q={Q}, N={n_docs}, T={n_tokens}, "
+          f"block={block_docs}x{block_tokens}, alpha_ef={alpha_ef}")
+    engines = _run_engines(H, keys, k=k, alpha_ef=alpha_ef,
+                           block_docs=block_docs,
+                           block_tokens=block_tokens, grow=grow)
+    hdr = (f"{'engine':12s} {'cells/s':>12s} {'rounds':>7s} {'lockstep':>9s} "
+           f"{'waste':>6s} {'trips':>6s} {'occ':>5s}")
+    print(hdr)
+    for name, r in engines.items():
+        print(f"{name:12s} {r['cells_per_s']:12.0f} {r['total_rounds']:7d} "
+              f"{r['lockstep_rounds']:9d} {r['lockstep_waste']:6d} "
+              f"{r.get('trips', r['rounds_max']):6d} "
+              f"{r.get('frontier_occupancy', float('nan')):5.2f}")
+
+    parity = _topk_parity(H, keys, k=k, block_docs=block_docs,
+                          block_tokens=block_tokens)
+    dense = _dense_peak_buffer()
+    pooled = engines["pooled"]
+    accept = {
+        # Q * max(per-query rounds) is what lockstep pays; the pooled
+        # engine's attributable rounds must come in strictly below it.
+        "total_rounds_below_lockstep":
+            pooled["total_rounds"] < pooled["lockstep_rounds"],
+        "full_budget_topk_parity": parity,
+        "dense_no_bnlt_intermediate": dense["no_bnlt_intermediate"],
+    }
+    print(f"parity(full budget): {parity}   dense peak "
+          f"{dense['peak_temp_bytes']/2**20:.1f} MiB vs BNLT "
+          f"{dense['bnlt_bytes']/2**20:.1f} MiB (einsum path was "
+          f"{dense['peak_temp_bytes_einsum']/2**20:.1f} MiB)")
+
+    result = {
+        "config": {"Q": Q, "N": n_docs, "T": n_tokens, "k": k,
+                   "alpha_ef": alpha_ef, "block_docs": block_docs,
+                   "block_tokens": block_tokens, "grow": grow,
+                   "seed": seed},
+        "engines": engines,
+        "dense_peak_buffer": dense,
+        "accept": accept,
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {out}")
+    assert all(accept.values()), accept
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -43,6 +43,8 @@ HARNESSES = {
                     "generalized bandit on recsys scorers"),
     "serving": ("benchmarks.serving_latency",
                 "RetrievalEngine p50/p99 latency + throughput"),
+    "reveal": ("benchmarks.reveal_throughput",
+               "pooled frontier vs vmapped lockstep reveal engine"),
 }
 STANDALONE = {
     "perf_iterations": ("benchmarks.perf_iterations",
@@ -96,8 +98,9 @@ def main(argv=None):
     n_q = 6 if args.quick else 12
 
     from benchmarks import (fig2_tradeoff, fig4_exploration, fig5_ann_bounds,
-                            generalized_recsys, serving_latency,
-                            table1_efficiency, table2_effectiveness)
+                            generalized_recsys, reveal_throughput,
+                            serving_latency, table1_efficiency,
+                            table2_effectiveness)
     benches = {
         "table1": lambda: table1_efficiency.run(n_docs, n_q),
         "table2": lambda: table2_effectiveness.run(n_docs, n_q),
@@ -110,6 +113,8 @@ def main(argv=None):
             n_requests=24 if args.quick else 48,
             batch_sizes=(2, 4) if args.quick else (2, 4, 8),
             alphas=(0.3,) if args.quick else (0.15, 0.3, 1.0)),
+        "reveal": lambda: reveal_throughput.run(
+            Q=16 if args.quick else 64, n_docs=min(n_docs, 96)),
     }
     wanted = [args.only] if args.only else list(benches)
 

@@ -48,6 +48,12 @@ class BatchedConfig(NamedTuple):
     block_docs: int = 8       # B
     block_tokens: int = 8     # G
     max_rounds: int = -1      # -1 => ceil(N*T / (B*G)) + margin
+    # Pooled cross-query engine only (repro.core.frontier): when > block_docs,
+    # queries that retire from the shared frontier free their reveal slots and
+    # still-active queries may grow their per-round doc block up to this many
+    # docs. 0 (default) keeps blocks fixed at ``block_docs``, which preserves
+    # exact per-query trajectory parity with ``run_batched_bandit``.
+    max_block_docs: int = 0
 
 
 def _apply_block_reveal(state: BanditState, doc_idx: jax.Array,
@@ -55,7 +61,12 @@ def _apply_block_reveal(state: BanditState, doc_idx: jax.Array,
                         valid: jax.Array) -> BanditState:
     """Vectorized reveal of cells {(doc_idx[b], tok_idx[b,g])}: scatter the
     values + update running (n, total, total_sq). Skips already-revealed and
-    invalid entries."""
+    invalid entries.
+
+    Only touches the statistics fields (values/revealed/n/total/total_sq);
+    key/rounds/done pass through untouched, so the pooled cross-query engine
+    can hold its stacked (Q*N, T) statistics in the same ``BanditState``
+    container and reuse this scatter unchanged with query-offset doc ids."""
     already = state.revealed[doc_idx[:, None], tok_idx]        # (B, G)
     new = valid & ~already
     newf = new.astype(jnp.float32)
@@ -64,13 +75,71 @@ def _apply_block_reveal(state: BanditState, doc_idx: jax.Array,
     # writes each value exactly once (works for negative similarities too).
     values = state.values.at[doc_idx[:, None], tok_idx].add(
         jnp.where(new, vals, 0.0))
-    revealed = state.revealed.at[doc_idx[:, None], tok_idx].set(
+    # Scatter-OR (max), not set: the pooled frontier points its empty slots
+    # at (doc 0, tok 0) with valid=False, so that cell can receive BOTH a
+    # live True and an empty slot's pass-through — duplicate scatter-set
+    # writes would race and could clobber the reveal.
+    revealed = state.revealed.at[doc_idx[:, None], tok_idx].max(
         new | already)
     n = state.n.at[doc_idx].add(jnp.sum(new, axis=-1).astype(jnp.int32))
     total = state.total.at[doc_idx].add(jnp.sum(newf * vals, axis=-1))
     total_sq = state.total_sq.at[doc_idx].add(jnp.sum(newf * vals * vals, axis=-1))
     return state._replace(values=values, revealed=revealed, n=n, total=total,
                           total_sq=total_sq)
+
+
+class RoundSelection(NamedTuple):
+    """One round's block selection — the policy output shared by the solo
+    loop below and the pooled cross-query engine (repro.core.frontier)."""
+
+    key: jax.Array        # advanced PRNG key (next round's state key)
+    doc_idx: jax.Array    # (2*half,) i32 selected docs (winners ++ losers)
+    tok_idx: jax.Array    # (2*half, G) i32 selected tokens per doc
+    cell_ok: jax.Array    # (2*half, G) bool — cell is fresh and selectable
+    stop: jax.Array       # () bool — LUCB separation reached this round
+
+
+def _round_select(key: jax.Array, iv: B.Intervals, revealed: jax.Array,
+                  n: jax.Array, a: jax.Array, b: jax.Array,
+                  doc_mask: jax.Array, *, k: int, epsilon: float, half: int,
+                  G: int) -> RoundSelection:
+    """LUCB block selection (Sec. 4.3, batched): ``half`` weakest winners +
+    ``half`` strongest losers, G epsilon-greedy max-width tokens per doc.
+
+    Pure function of (key, statistics) so the solo ``run_batched_bandit``
+    and the pooled frontier engine (which vmaps it over queries) make
+    bit-identical choices from identical per-query state — the property the
+    frontier-retirement tests pin down."""
+    T = a.shape[1]
+    tk_mask, _ = _topk_mask(iv.s_hat, k)
+    i_plus, i_minus = _select_arms(iv, tk_mask, doc_mask)
+    stop = iv.lcb[i_plus] >= iv.ucb[i_minus]
+
+    has_unrev = n < T
+    # half weakest winners: smallest LCB within the current top-K.
+    win_score = jnp.where(tk_mask & doc_mask & has_unrev, -iv.lcb, _NEG)
+    _, win_idx = jax.lax.top_k(win_score, half)
+    win_ok = jnp.take(win_score, win_idx) > _NEG / 2
+    # half strongest losers: largest UCB outside the top-K.
+    lose_score = jnp.where(~tk_mask & doc_mask & has_unrev, iv.ucb, _NEG)
+    _, lose_idx = jax.lax.top_k(lose_score, half)
+    lose_ok = jnp.take(lose_score, lose_idx) > _NEG / 2
+
+    doc_idx = jnp.concatenate([win_idx, lose_idx]).astype(jnp.int32)
+    doc_ok = jnp.concatenate([win_ok, lose_ok])            # (2*half,)
+
+    # Token choice per selected doc: epsilon-greedy max-width, top-G.
+    key, k_eps, k_tok = jax.random.split(key, 3)
+    unrev = ~revealed[doc_idx]                             # (2*half, T)
+    width = jnp.where(unrev, b[doc_idx] - a[doc_idx], _NEG)
+    gumbel = jnp.where(unrev, jax.random.gumbel(k_tok, width.shape), _NEG)
+    explore = jax.random.uniform(k_eps, (doc_idx.shape[0], 1)) < epsilon
+    sel_score = jnp.where(explore, gumbel, width)
+    top_w, tok_idx = jax.lax.top_k(sel_score, G)           # (2*half, G)
+    cell_ok = (top_w > _NEG / 2) & doc_ok[:, None]
+    return RoundSelection(key=key, doc_idx=doc_idx,
+                          tok_idx=tok_idx.astype(jnp.int32),
+                          cell_ok=cell_ok, stop=stop)
 
 
 def run_batched_bandit(
@@ -124,43 +193,18 @@ def run_batched_bandit(
 
     def body(st: BanditState) -> BanditState:
         iv = get_intervals(st)
-        tk_mask, _ = _topk_mask(iv.s_hat, k)
-        i_plus, i_minus = _select_arms(iv, tk_mask, doc_mask)
-        stop = iv.lcb[i_plus] >= iv.ucb[i_minus]
-
-        has_unrev = st.n < T
-        # B/2 weakest winners: smallest LCB within the current top-K.
-        win_score = jnp.where(tk_mask & doc_mask & has_unrev, -iv.lcb, _NEG)
-        _, win_idx = jax.lax.top_k(win_score, half)
-        win_ok = jnp.take(win_score, win_idx) > _NEG / 2
-        # B/2 strongest losers: largest UCB outside the top-K.
-        lose_score = jnp.where(~tk_mask & doc_mask & has_unrev, iv.ucb, _NEG)
-        _, lose_idx = jax.lax.top_k(lose_score, half)
-        lose_ok = jnp.take(lose_score, lose_idx) > _NEG / 2
-
-        doc_idx = jnp.concatenate([win_idx, lose_idx]).astype(jnp.int32)
-        doc_ok = jnp.concatenate([win_ok, lose_ok])            # (B,)
-
-        # Token choice per selected doc: epsilon-greedy max-width, top-G.
-        key, k_eps, k_tok = jax.random.split(st.key, 3)
-        unrev = ~st.revealed[doc_idx]                          # (B, T)
-        width = jnp.where(unrev, b[doc_idx] - a[doc_idx], _NEG)
-        gumbel = jnp.where(unrev, jax.random.gumbel(k_tok, width.shape), _NEG)
-        explore = jax.random.uniform(k_eps, (doc_idx.shape[0], 1)) < cfg.epsilon
-        sel_score = jnp.where(explore, gumbel, width)
-        top_w, tok_idx = jax.lax.top_k(sel_score, G)           # (B, G)
-        cell_ok = (top_w > _NEG / 2) & doc_ok[:, None]
-
-        vals = compute_cells(doc_idx, tok_idx.astype(jnp.int32))
-        nxt = _apply_block_reveal(st, doc_idx, tok_idx.astype(jnp.int32),
-                                  vals, cell_ok)
-        no_progress = ~jnp.any(cell_ok)
-        nxt = nxt._replace(key=key, rounds=st.rounds + 1,
-                           done=stop | no_progress)
+        sel = _round_select(st.key, iv, st.revealed, st.n, a, b, doc_mask,
+                            k=k, epsilon=cfg.epsilon, half=half, G=G)
+        vals = compute_cells(sel.doc_idx, sel.tok_idx)
+        nxt = _apply_block_reveal(st, sel.doc_idx, sel.tok_idx, vals,
+                                  sel.cell_ok)
+        no_progress = ~jnp.any(sel.cell_ok)
+        nxt = nxt._replace(key=sel.key, rounds=st.rounds + 1,
+                           done=sel.stop | no_progress)
         # On stop, keep the pre-reveal observation set (don't pay for it).
         return jax.lax.cond(
-            stop,
-            lambda s: s._replace(key=key, rounds=s.rounds + 1, done=True),
+            sel.stop,
+            lambda s: s._replace(key=sel.key, rounds=s.rounds + 1, done=True),
             lambda s: nxt,
             st)
 

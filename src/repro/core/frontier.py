@@ -1,0 +1,272 @@
+"""Pooled cross-query reveal engine — continuous batching for Col-Bandit.
+
+``jax.vmap(one_query)`` over a ``while_loop`` runs every query of a serving
+batch in lockstep to the SLOWEST query's round count: converged queries keep
+burning reveal-kernel slots until the last straggler separates. This module
+replaces that with one global ``while_loop`` driving all Q queries at once:
+
+  1. every round, each still-active query runs the shared LUCB block
+     selection (``repro.core.batched._round_select`` — bit-identical policy
+     and PRNG stream to the solo bandit),
+  2. the selected (doc, token) blocks of ALL active queries are pooled into
+     a single fixed-capacity frontier: doc ids are query-offset into the
+     stacked (Q*N, L, M) candidate tensor, token ids into the stacked
+     (Q*T, M) query-token table, and valid slots are compacted to the front,
+  3. the whole frontier lowers through ONE ``compute_cells`` call — in
+     serving, one ``kernels.ops.gather_maxsim_op`` kernel launch per round
+     instead of Q per-query einsums,
+  4. per-query done-masks retire finished queries: their slots drop out of
+     the frontier (occupancy is measured), their round counters freeze, and
+     — with ``cfg.max_block_docs > block_docs`` — their freed slots are
+     reallocated to still-active queries, which then reveal bigger blocks
+     per round and converge in fewer global loop trips.
+
+Statistics live STACKED as one (Q*N, T) ``BanditState`` so the frontier's
+query-offset scatter is the ordinary ``_apply_block_reveal``; per-query
+views (Q, N, T) feed the vmapped interval/selection math.
+
+With ``max_block_docs == 0`` (the default) each query's reveal trajectory is
+exactly the solo ``run_batched_bandit`` trajectory under the same key —
+pooling changes WHERE cells are computed (one kernel launch), never WHICH
+cells a query reveals. That invariant is what the frontier-retirement tests
+pin down, and why full-budget top-K parity with the vmapped path is exact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bounds as B
+from repro.core.bandit import _select_arms, _topk_mask
+from repro.core.batched import (BatchedConfig, _apply_block_reveal,
+                                _round_select)
+from repro.core.state import BanditState
+
+_NEG = jnp.float32(-3e38)
+
+# Cell contract (pooled): compute_cells(flat_doc (S,), flat_tok (S, G))
+# -> (S, G), where flat_doc indexes the stacked (Q*N, ...) doc axis and
+# flat_tok the stacked (Q*T, ...) query-token axis (doc q*N+i pairs only
+# with tokens q*T+t of the SAME query q). This is exactly the contract
+# ``kernels.ops.gather_maxsim_op`` lowers on the stacked tensors.
+
+
+class PooledResult(NamedTuple):
+    topk: jax.Array            # (Q, K) i32 — per-query top-K doc slots
+    s_hat: jax.Array           # (Q, N) f32 — final score estimates
+    coverage: jax.Array        # (Q,) f32 — Eq. 6 per query
+    reveals: jax.Array         # (Q,) i32 — |Omega_q|
+    rounds: jax.Array          # (Q,) i32 — per-query LUCB rounds (frozen at
+                               #   retirement; == solo rounds when blocks
+                               #   are fixed)
+    separated: jax.Array       # (Q,) bool — stopped via LCB >= UCB
+    revealed: jax.Array        # (Q, N, T) bool — final observation sets
+    trips: jax.Array           # () i32 — global while_loop iterations
+                               #   (== max(rounds) by construction)
+    total_rounds: jax.Array    # () i32 — sum(rounds): reveal rounds actually
+                               #   attributable to queries
+    lockstep_waste: jax.Array  # () i32 — Q*trips - total_rounds: rounds a
+                               #   vmapped lockstep loop would have burned on
+                               #   already-converged queries
+    occupancy: jax.Array       # () f32 — mean fraction of frontier slots
+                               #   holding live reveal work across trips
+
+
+def run_pooled_bandit(
+    compute_cells,
+    a: jax.Array,                # (Q, N, T) lower support per cell
+    b: jax.Array,                # (Q, N, T) upper support per cell
+    keys: jax.Array,             # (Q,) per-query PRNG keys
+    cfg: BatchedConfig,
+    *,
+    doc_mask: Optional[jax.Array] = None,   # (Q, N) bool valid candidates
+) -> PooledResult:
+    Q, N, T = a.shape
+    k = cfg.k
+    G = cfg.block_tokens
+    half = max(cfg.block_docs // 2, 1)
+    # Selection width per query: fixed (== solo) unless growth is enabled.
+    # Clamped to N: a query can never hold more than its N candidate rows,
+    # and an unclamped width would surface as an opaque top_k shape error
+    # (reachable from EngineConfig.max_block_docs alone on small buckets).
+    half_w = min(max(cfg.max_block_docs // 2, half), max(N, 1))
+    W = 2 * half_w                           # per-query selection rows
+    F = Q * 2 * half                         # frontier capacity (slots)
+    max_rounds = cfg.max_rounds
+    if max_rounds <= 0:
+        max_rounds = (N * T) // max(cfg.block_docs * G, 1) + T + 8
+    if doc_mask is None:
+        doc_mask = jnp.ones((Q, N), jnp.bool_)
+    a = jnp.where(doc_mask[:, :, None], a, 0.0).astype(jnp.float32)
+    b = jnp.where(doc_mask[:, :, None], b, 0.0).astype(jnp.float32)
+
+    q_doc_off = (jnp.arange(Q, dtype=jnp.int32) * N)[:, None]       # (Q, 1)
+
+    # Per-query init split — same stream as run_batched_bandit's
+    # ``key, k_init = split(key)`` so trajectories line up query by query.
+    split2 = jax.vmap(lambda kk: tuple(jax.random.split(kk)))
+    state_keys, k_init = split2(keys)
+
+    state = BanditState(
+        values=jnp.zeros((Q * N, T), jnp.float32),
+        revealed=(~doc_mask[:, :, None]).reshape(Q * N, 1)
+        & jnp.ones((Q * N, T), jnp.bool_),
+        n=jnp.zeros((Q * N,), jnp.int32),
+        total=jnp.zeros((Q * N,), jnp.float32),
+        total_sq=jnp.zeros((Q * N,), jnp.float32),
+        key=state_keys,                     # (Q,) keys — per-query streams
+        rounds=jnp.zeros((Q,), jnp.int32),  # per-query round counters
+        done=jnp.zeros((Q,), jnp.bool_),    # per-query retirement flags
+    )
+
+    # Init reveal (paper footnote 2): one random cell per doc, all queries
+    # pooled into a single (Q*N, 1) compute_cells call.
+    t0 = jax.vmap(lambda kk: jax.random.randint(kk, (N,), 0, T))(k_init)
+    all_docs = jnp.arange(Q * N, dtype=jnp.int32)
+    flat_t0 = t0.reshape(Q * N, 1)
+    init_vals = compute_cells(all_docs,
+                              flat_t0 + (all_docs // N * T)[:, None])
+    state = _apply_block_reveal(state, all_docs, flat_t0, init_vals,
+                                doc_mask.reshape(Q * N, 1))
+
+    iv_kwargs = dict(T=T, N=N, delta=cfg.delta, alpha_ef=cfg.alpha_ef,
+                     c=cfg.radius_c, bias_kappa=cfg.bias_kappa)
+
+    def get_intervals_q(n_q, total_q, total_sq_q, revealed_q, a_q, b_q,
+                        mask_q) -> B.Intervals:
+        iv = B.intervals(n_q, total_q, total_sq_q, revealed_q, a_q, b_q,
+                         **iv_kwargs)
+        return iv._replace(
+            s_hat=jnp.where(mask_q, iv.s_hat, _NEG),
+            lcb=jnp.where(mask_q, iv.lcb, _NEG),
+            ucb=jnp.where(mask_q, iv.ucb, _NEG),
+        )
+
+    def per_query_intervals(st: BanditState) -> B.Intervals:
+        return jax.vmap(get_intervals_q)(
+            st.n.reshape(Q, N), st.total.reshape(Q, N),
+            st.total_sq.reshape(Q, N), st.revealed.reshape(Q, N, T),
+            a, b, doc_mask)
+
+    select_q = functools.partial(_round_select, k=k, epsilon=cfg.epsilon,
+                                 half=half_w, G=G)
+
+    def cond(carry):
+        st, _, _ = carry
+        return jnp.any((~st.done) & (st.rounds < max_rounds))
+
+    def body(carry):
+        st, trips, occ_sum = carry
+        active = (~st.done) & (st.rounds < max_rounds)          # (Q,)
+
+        iv = per_query_intervals(st)
+        sel = jax.vmap(select_q)(st.key, iv, st.revealed.reshape(Q, N, T),
+                                 st.n.reshape(Q, N), a, b, doc_mask)
+
+        # Slot allotment: with growth enabled, freed capacity is split
+        # evenly among active queries (never below the solo width, never
+        # above the selection width) — continuous batching for rounds.
+        n_active = jnp.maximum(jnp.sum(active.astype(jnp.int32)), 1)
+        per_group = jnp.clip(F // (2 * n_active), half, half_w)
+        grp_en = jnp.arange(half_w, dtype=jnp.int32) < per_group
+        enabled = jnp.concatenate([grp_en, grp_en])             # (W,)
+
+        live = active & ~sel.stop                               # (Q,)
+        cell_en = (sel.cell_ok & enabled[None, :, None]
+                   & live[:, None, None])                       # (Q, W, G)
+
+        # Pool + compact: scatter live slots to the frontier front; the
+        # overflow index F is dropped, so retired queries simply vanish.
+        flat_doc = (sel.doc_idx + q_doc_off).reshape(Q * W)
+        flat_tok = sel.tok_idx.reshape(Q * W, G)
+        flat_cell = cell_en.reshape(Q * W, G)
+        slot_live = jnp.any(flat_cell, axis=-1)                 # (Q*W,)
+        pos = jnp.cumsum(slot_live.astype(jnp.int32)) - 1
+        dump = jnp.where(slot_live, pos, F)
+        f_doc = jnp.zeros((F,), jnp.int32).at[dump].set(flat_doc,
+                                                        mode="drop")
+        f_tok = jnp.zeros((F, G), jnp.int32).at[dump].set(flat_tok,
+                                                          mode="drop")
+        f_cell = jnp.zeros((F, G), jnp.bool_).at[dump].set(flat_cell,
+                                                           mode="drop")
+
+        # ONE pooled reveal for the whole batch round.
+        vals = compute_cells(f_doc, f_tok + (f_doc // N * T)[:, None])
+        nxt = _apply_block_reveal(st, f_doc, f_tok, vals, f_cell)
+
+        # Per-query bookkeeping — mirrors the solo loop's cond/stop exactly:
+        # a query that separates this round reveals nothing (its slots were
+        # masked out of the frontier) and retires with rounds+1.
+        no_progress = ~jnp.any(sel.cell_ok & enabled[None, :, None],
+                               axis=(1, 2))
+        nxt = nxt._replace(
+            key=sel.key,
+            rounds=st.rounds + active.astype(jnp.int32),
+            done=st.done | (active & (sel.stop | no_progress)),
+        )
+        occ = jnp.sum(slot_live.astype(jnp.float32)) / jnp.float32(F)
+        return nxt, trips + 1, occ_sum + occ
+
+    state, trips, occ_sum = jax.lax.while_loop(
+        cond, body, (state, jnp.zeros((), jnp.int32),
+                     jnp.zeros((), jnp.float32)))
+
+    iv = per_query_intervals(state)
+    tk = jax.vmap(functools.partial(_topk_mask, k=k))(iv.s_hat)
+    topk_idx = tk[1]
+    sep = jax.vmap(lambda iv_q, m_q: _select_arms(iv_q, _topk_mask(
+        iv_q.s_hat, k)[0], m_q))(iv, doc_mask)
+    separated = jax.vmap(lambda iv_q, ip, im: iv_q.lcb[ip] >= iv_q.ucb[im])(
+        iv, sep[0], sep[1])
+
+    rev_q = state.revealed.reshape(Q, N, T) & doc_mask[:, :, None]
+    n_rev = jnp.sum(rev_q, axis=(1, 2))
+    n_cells = jnp.maximum(jnp.sum(doc_mask, axis=1) * T, 1)
+    total_rounds = jnp.sum(state.rounds)
+    return PooledResult(
+        topk=topk_idx,
+        s_hat=iv.s_hat,
+        coverage=n_rev.astype(jnp.float32) / n_cells.astype(jnp.float32),
+        reveals=n_rev.astype(jnp.int32),
+        rounds=state.rounds,
+        separated=separated,
+        revealed=rev_q,
+        trips=trips,
+        total_rounds=total_rounds,
+        lockstep_waste=Q * trips - total_rounds,
+        occupancy=occ_sum / jnp.maximum(trips.astype(jnp.float32), 1.0),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "delta", "alpha_ef", "epsilon", "radius_c",
+                     "block_docs", "block_tokens", "max_rounds",
+                     "bias_kappa", "max_block_docs"),
+)
+def run_pooled_oracle(
+    h_full: jax.Array, a: jax.Array, b: jax.Array, keys: jax.Array, *,
+    k: int, delta: float = 0.01, alpha_ef: float = 0.3, epsilon: float = 0.1,
+    radius_c: float = 1.0, bias_kappa: float = 0.0, block_docs: int = 8,
+    block_tokens: int = 8, max_rounds: int = -1, max_block_docs: int = 0,
+    doc_mask: Optional[jax.Array] = None,
+) -> PooledResult:
+    """Oracle-mode pooled engine: cells come from a precomputed (Q, N, T)
+    H tensor. The flat token ids are mapped back to each slot's own query
+    (doc q*N+i only ever pairs with tokens q*T+t), mirroring the stacked
+    gather_maxsim contract."""
+    Q, N, T = h_full.shape
+    cfg = BatchedConfig(k=k, delta=delta, alpha_ef=alpha_ef, epsilon=epsilon,
+                        radius_c=radius_c, bias_kappa=bias_kappa,
+                        block_docs=block_docs, block_tokens=block_tokens,
+                        max_rounds=max_rounds, max_block_docs=max_block_docs)
+    h_flat = h_full.reshape(Q * N, T)
+
+    def cells(flat_doc: jax.Array, flat_tok: jax.Array) -> jax.Array:
+        t_local = flat_tok - (flat_doc // N * T)[:, None]
+        return h_flat[flat_doc[:, None], jnp.clip(t_local, 0, T - 1)]
+
+    return run_pooled_bandit(cells, a, b, keys, cfg, doc_mask=doc_mask)

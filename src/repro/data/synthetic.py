@@ -115,3 +115,27 @@ def make_retrieval_dataset(
     return RetrievalDataset(doc_embs=doc_embs, doc_mask=doc_mask,
                             doc_lens=doc_lens, queries=queries, qrels=qrels,
                             topics=topics)
+
+
+def make_mixed_difficulty_h(n_queries: int, n_docs: int, n_tokens: int, *,
+                            k: int = 10, hard_frac: float = 0.25,
+                            seed: int = 0) -> np.ndarray:
+    """Oracle MaxSim tensor H (Q, N, T) with a controlled difficulty mix.
+
+    Most queries have their top-k separated by a wide margin at rank k
+    (the bandit separates them in few rounds); the last ``hard_frac`` of
+    queries have ~2k near-tied contenders straddling rank k (many rounds).
+    This is the straggler mix that makes lockstep reveal waste visible —
+    shared by the frontier-retirement tests and the reveal benchmark so
+    the workload they pin is one and the same.
+    """
+    rng = np.random.default_rng(seed)
+    H = rng.uniform(0.1, 0.4,
+                    (n_queries, n_docs, n_tokens)).astype(np.float32)
+    n_hard = int(round(hard_frac * n_queries))   # 0.0 -> all-easy batch
+    for q in range(n_queries):
+        if q < n_queries - n_hard:               # easy: clear top-k margin
+            H[q, rng.choice(n_docs, k, replace=False)] += 0.5
+        else:                                    # hard: 2k near-ties
+            H[q, rng.choice(n_docs, 2 * k, replace=False)] += 0.3
+    return np.clip(H, 0.0, 1.0)

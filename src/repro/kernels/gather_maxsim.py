@@ -61,7 +61,12 @@ def gather_maxsim(doc_embs: jax.Array, doc_tok_mask: jax.Array,
 
     bb = min(block_b, B)
     bl = min(block_l, L)
-    assert B % bb == 0 and L % bl == 0, (B, L, bb, bl)
+    if B % bb != 0 or L % bl != 0:
+        raise ValueError(
+            f"gather_maxsim needs pre-padded shapes: B={B} must be a "
+            f"multiple of block_b={bb} and L={L} of block_l={bl} — call it "
+            "through repro.kernels.ops.gather_maxsim_op, which pads both "
+            "axes (and documents the padding contract).")
     n_l_blocks = L // bl
 
     grid = (B // bb, n_l_blocks)

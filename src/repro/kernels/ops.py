@@ -84,6 +84,19 @@ def gather_maxsim_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
                      queries: jax.Array, doc_idx: jax.Array,
                      tok_idx: jax.Array, *, block_b: int = 8,
                      block_l: int = 256) -> jax.Array:
+    """Gathered MaxSim for the bandit reveal: out[s, g] = max_j
+    <E[doc_idx[s], j], Q[tok_idx[s, g]]> over valid j.
+
+    Padding contract: when the selection batch B is not a multiple of
+    ``block_b``, the pad rows REPLICATE the last (doc_idx, tok_idx) row —
+    a valid index whose doc block the kernel is touching anyway — instead
+    of defaulting to doc 0, which would gather (and score) an unrelated
+    document's embeddings per padded row. Pad rows are sliced off before
+    returning; callers never observe them. ``doc_idx``/``tok_idx`` must be
+    in-range for ``doc_embs``/``queries`` — the pooled frontier engine
+    passes query-offset ids into stacked (Q*N, L, M) / (Q*T, M) tensors and
+    this op is oblivious to the stacking.
+    """
     impl = _impl()
     if impl == "ref":
         return ref.gather_maxsim_ref(doc_embs, doc_tok_mask, queries,
@@ -95,11 +108,43 @@ def gather_maxsim_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
     e = _pad_to(doc_embs, 1, bl)
     m = _pad_to(doc_tok_mask, 1, bl)
     pad_b = (-B) % bb
-    di = jnp.pad(doc_idx, (0, pad_b))
-    ti = jnp.pad(tok_idx, ((0, pad_b), (0, 0)))
+    di = jnp.concatenate([doc_idx,
+                          jnp.broadcast_to(doc_idx[-1:], (pad_b,))])
+    ti = jnp.concatenate([tok_idx,
+                          jnp.broadcast_to(tok_idx[-1:], (pad_b, G))])
     out = gather_maxsim(e, m, queries, di, ti, block_b=bb, block_l=bl,
                         interpret=(impl == "interpret"))
     return out[:B]
+
+
+def maxsim_batch_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
+                    queries: jax.Array, *, block_n: int = 8,
+                    block_t: int = 8, block_l: int = 128) -> jax.Array:
+    """Per-query-batched MaxSim H (B, N, T) — the dense serving scorer.
+
+    Every dispatch target streams document tokens instead of materializing
+    the (B, N, L, T) similarity tensor: ``pallas``/``interpret`` vmap the
+    tiled ``maxsim`` kernel over the query batch (vmap adds a batch grid
+    dimension; L is tiled through VMEM with a running max), and ``ref``
+    uses the L-chunked running-max oracle. All-masked docs yield the _NEG
+    sentinel in every mode; callers zero them as needed.
+    """
+    impl = _impl()
+    if impl == "ref":
+        return ref.maxsim_batch_ref(doc_embs, doc_tok_mask, queries,
+                                    block_l=block_l)
+    Bq, N, L, M = doc_embs.shape
+    T = queries.shape[1]
+    bn = min(block_n, max(N, 1))
+    bt = min(block_t, max(T, 1))
+    bl = min(block_l, max(L, 1))
+    e = _pad_to(_pad_to(doc_embs, 1, bn), 2, bl)
+    m = _pad_to(_pad_to(doc_tok_mask, 1, bn), 2, bl)  # pads False => masked
+    q = _pad_to(queries, 1, bt)
+    h = jax.vmap(lambda eb, mb, qb: maxsim(
+        eb, mb, qb, block_n=bn, block_t=bt, block_l=bl,
+        interpret=(impl == "interpret")))(e, m, q)
+    return h[:, :N, :T]
 
 
 def maxsim_scores_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,

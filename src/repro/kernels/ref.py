@@ -43,7 +43,47 @@ def masked_maxsim_ref(doc_embs: jax.Array, doc_tok_mask: jax.Array,
     """
     h = maxsim_ref(doc_embs, doc_tok_mask, queries)
     full = jnp.repeat(jnp.repeat(tile_mask, block_n, axis=0), block_t, axis=1)
-    return jnp.where(full, h, 0.0)
+    # tile_mask covers the padded grid; truncate to the real (N, T) so
+    # unaligned shapes broadcast (latent bug caught by the ref CI lane).
+    return jnp.where(full[:h.shape[0], :h.shape[1]], h, 0.0)
+
+
+def maxsim_batch_ref(doc_embs: jax.Array, doc_tok_mask: jax.Array,
+                     queries: jax.Array, *, block_l: int = 64) -> jax.Array:
+    """Per-query-batched MaxSim, streamed over document tokens.
+
+    doc_embs (B, N, L, M), doc_tok_mask (B, N, L), queries (B, T, M)
+    -> H (B, N, T) with H[b, i, t] = max_j <e_bij, q_bt> over valid j.
+
+    Deliberately NOT ``vmap(maxsim_ref)``: that would materialize the full
+    (B, N, L, T) similarity tensor, the exact intermediate the serving path
+    exists to avoid. Instead the L axis is walked in ``block_l`` chunks with
+    a running max, so the peak temporary is (B, N, block_l, T) — the jnp
+    mirror of the Pallas kernel's VMEM tiling, and the escape-hatch path the
+    REPRO_KERNEL_IMPL=ref serving step compiles to.
+    """
+    Bq, N, L, M = doc_embs.shape
+    T = queries.shape[1]
+    e = doc_embs.astype(jnp.float32)
+    q = queries.astype(jnp.float32)
+    bl = min(block_l, max(L, 1))
+    pad = (-L) % bl
+    if pad:
+        e = jnp.pad(e, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        m = jnp.pad(doc_tok_mask, ((0, 0), (0, 0), (0, pad)))
+    else:
+        m = doc_tok_mask
+    n_blocks = e.shape[2] // bl
+
+    def step(l, h):
+        e_c = jax.lax.dynamic_slice_in_dim(e, l * bl, bl, axis=2)
+        m_c = jax.lax.dynamic_slice_in_dim(m, l * bl, bl, axis=2)
+        sims = jnp.einsum("bnlm,btm->bnlt", e_c, q)
+        sims = jnp.where(m_c[:, :, :, None], sims, _NEG)
+        return jnp.maximum(h, jnp.max(sims, axis=2))
+
+    h0 = jnp.full((Bq, N, T), _NEG, jnp.float32)
+    return jax.lax.fori_loop(0, n_blocks, step, h0)
 
 
 def gather_maxsim_ref(doc_embs: jax.Array, doc_tok_mask: jax.Array,

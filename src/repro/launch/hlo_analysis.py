@@ -76,6 +76,17 @@ def flops_and_bytes(compiled) -> Dict[str, float]:
     return {"hlo_flops": flops, "hlo_bytes": nbytes}
 
 
+def peak_buffer_bytes(compiled) -> float:
+    """Peak temporary-buffer footprint of a compiled executable.
+
+    ``temp_size_in_bytes`` is XLA's allocation for every intermediate the
+    program materializes — the number that blows up when a formulation
+    keeps a (B, N, L, T) similarity tensor live instead of streaming it.
+    Used by the reveal benchmark / tests to assert the dense serving step
+    stays under the materialized-intermediate threshold."""
+    return float(compiled.memory_analysis().temp_size_in_bytes)
+
+
 def memory_stats(compiled) -> Dict[str, float]:
     ma = compiled.memory_analysis()
     out = {}

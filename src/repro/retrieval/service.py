@@ -15,9 +15,11 @@ rerank_dense_step (corpus-resident scoring)
 rerank_bandit_step (query-resident adaptive scoring)
     Queries are sharded over EVERY axis; each device gathers its queries'
     candidate embeddings once (collective gather from the sharded corpus)
-    and then runs the block-synchronous Col-Bandit locally (vmapped over its
-    queries) — the technique's FLOP savings apply on-chip, and with
-    ANN-prereveal the gather itself can skip never-revealed docs (§Perf).
+    and then runs the block-synchronous Col-Bandit locally through the
+    pooled cross-query reveal engine (``repro.core.frontier``): one global
+    round loop for the device's whole query shard, every round's frontier
+    lowered through a single ``gather_maxsim`` kernel launch, converged
+    queries retired instead of riding lockstep to the slowest query.
 """
 from __future__ import annotations
 
@@ -29,16 +31,19 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.batched import BatchedConfig, run_batched_bandit
+from repro.core.frontier import run_pooled_bandit
+from repro.kernels.ops import gather_maxsim_op, maxsim_batch_op
 
 _NEG = jnp.float32(-3e38)
 
 
 def _local_maxsim_scores(doc_embs, doc_mask, queries):
-    """(B, N, L, M) x (B, T, M) -> scores (B, N) = sum_t max_l sims."""
-    sims = jnp.einsum("bnlm,btm->bnlt", doc_embs.astype(jnp.float32),
-                      queries.astype(jnp.float32))
-    sims = jnp.where(doc_mask[:, :, :, None], sims, _NEG)
-    h = jnp.max(sims, axis=2)                                 # (B, N, T)
+    """(B, N, L, M) x (B, T, M) -> scores (B, N) = sum_t max_l sims.
+
+    Lowered through the tiled ``maxsim_batch_op`` kernel path (Pallas on
+    TPU, interpret on CPU, L-chunked jnp under REPRO_KERNEL_IMPL=ref) —
+    no dispatch target materializes the (B, N, L, T) similarity tensor."""
+    h = maxsim_batch_op(doc_embs, doc_mask, queries)          # (B, N, T)
     h = jnp.where(jnp.any(doc_mask, axis=2)[:, :, None], h, 0.0)
     return jnp.sum(h, axis=-1)
 
@@ -88,16 +93,34 @@ def _merge_scorecards(scores, gids, every, topk):
 def _chunked_over_queries(score_chunk, args, chunk=512):
     """Map ``score_chunk`` over the query batch in bounded-size chunks so the
     gathered-docs working set stays small; falls back to one call when the
-    batch does not divide evenly."""
+    batch does not divide evenly.
+
+    ``score_chunk`` MUST return exactly one 2-D (chunk_size, n_scores)
+    array per chunk: the chunked path re-assembles with a flat
+    ``reshape(B, -1)``, which would silently flatten any extra trailing
+    axes (e.g. a frontier-backed scorer returning per-round diagnostics)
+    into the score axis. Checked at trace time so new scorers fail loudly
+    instead of corrupting the scorecard merge."""
     B = args[0].shape[0]
     chunk = min(B, chunk)
     if B % chunk == 0 and B > chunk:
         nch = B // chunk
-        return jax.lax.map(
+        out = jax.lax.map(
             score_chunk,
-            tuple(x.reshape(nch, chunk, *x.shape[1:]) for x in args)
-        ).reshape(B, -1)
-    return score_chunk(args)
+            tuple(x.reshape(nch, chunk, *x.shape[1:]) for x in args))
+        if out.ndim != 3:
+            raise ValueError(
+                "_chunked_over_queries: score_chunk must return a single "
+                f"2-D (chunk, n_scores) array per chunk; got mapped shape "
+                f"{out.shape}. Return diagnostics through a separate "
+                "un-chunked path instead.")
+        return out.reshape(B, -1)
+    out = score_chunk(args)
+    if out.ndim != 2:
+        raise ValueError(
+            "_chunked_over_queries: score_chunk must return a 2-D "
+            f"(batch, n_scores) array; got shape {out.shape}.")
+    return out
 
 
 def make_rerank_dense_step(mesh: Mesh, *, topk: int = 10):
@@ -140,12 +163,14 @@ def make_rerank_dense_step(mesh: Mesh, *, topk: int = 10):
 
 
 def _bandit_one_query(cfg: BatchedConfig):
-    """Per-query Col-Bandit over pre-gathered candidate embeddings.
+    """Per-query Col-Bandit over pre-gathered candidate embeddings — the
+    legacy lockstep engine (kept for A/B benchmarking against the pooled
+    frontier; select with ``engine="vmapped"``).
 
     Returns a closure (docs_q (N,L,M), dmask_q (N,L), q (T,M), cand_q (N,),
     a_q/b_q (N,T), key) -> (topk_scores (K,), topk_global_ids (K,),
-    coverage ()). The reveal op is the gathered MaxSim einsum — the same
-    cell contract the Pallas ``gather_maxsim`` kernel lowers on TPU."""
+    coverage ()). The reveal op is the gathered MaxSim einsum; under vmap
+    every query pays the slowest query's round count."""
 
     def one_query(docs_q, dmask_q, q, cand_q, a_q, b_q, key):
         def cells(doc_idx, tok_idx):
@@ -160,23 +185,90 @@ def _bandit_one_query(cfg: BatchedConfig):
                                  doc_mask=cand_q >= 0)
         gids = jnp.where(jnp.take(cand_q, res.topk) >= 0,
                          jnp.take(cand_q, res.topk), -1)
-        return jnp.take(res.s_hat, res.topk), gids, res.coverage
+        return jnp.take(res.s_hat, res.topk), gids, res.coverage, res.rounds
 
     return one_query
+
+
+def _vmapped_rerank(docs, dmask, queries, cand_ids, a, b, keys,
+                    cfg: BatchedConfig):
+    """Lockstep engine: vmap the solo bandit over the query batch."""
+    scores, gids, cov, rounds = jax.vmap(_bandit_one_query(cfg))(
+        docs, dmask, queries, cand_ids, a, b, keys)
+    return scores, gids, cov, _lockstep_stats(rounds)
+
+
+def _lockstep_stats(rounds):
+    """(occupancy, total_rounds, lockstep_waste) for a vmapped run: the
+    while_loop executes every query to max(rounds), so waste is what the
+    batch PAID for already-converged queries."""
+    Bq = rounds.shape[0]
+    total = jnp.sum(rounds)
+    trips = jnp.max(rounds)
+    paid = jnp.maximum(Bq * trips, 1)
+    return jnp.stack([total.astype(jnp.float32) / paid.astype(jnp.float32),
+                      total.astype(jnp.float32),
+                      (paid - total).astype(jnp.float32)])
+
+
+def _pooled_rerank(docs, dmask, queries, cand_ids, a, b, keys,
+                   cfg: BatchedConfig):
+    """Pooled frontier engine over pre-gathered candidates.
+
+    Stacks the (B, N, L, M) candidates to (B*N, L, M) and the query tokens
+    to (B*T, M); every bandit round then reveals ALL queries' selected
+    blocks with one ``gather_maxsim_op`` launch on query-offset indices —
+    the dense-as-the-hardware-allows reveal the paper's FLOP savings need.
+    Returns (topk_scores (B, K), topk_global_ids (B, K), coverage (B,),
+    stats (3,) = [frontier occupancy, total rounds, lockstep waste])."""
+    Bq, N, L, M = docs.shape
+    T = queries.shape[1]
+    stacked = docs.reshape(Bq * N, L, M)
+    stacked_mask = dmask.reshape(Bq * N, L)
+    flat_q = queries.reshape(Bq * T, M)
+
+    def cells(flat_doc, flat_tok):
+        return gather_maxsim_op(stacked, stacked_mask, flat_q,
+                                flat_doc, flat_tok)
+
+    res = run_pooled_bandit(cells, a, b, keys, cfg, doc_mask=cand_ids >= 0)
+    scores = jnp.take_along_axis(res.s_hat, res.topk, axis=1)
+    picked = jnp.take_along_axis(cand_ids, res.topk, axis=1)
+    gids = jnp.where(picked >= 0, picked, -1)
+    stats = jnp.stack([res.occupancy,
+                       res.total_rounds.astype(jnp.float32),
+                       res.lockstep_waste.astype(jnp.float32)])
+    return scores, gids, res.coverage, stats
+
+
+_RERANK_ENGINES = {"pooled": _pooled_rerank, "vmapped": _vmapped_rerank}
+
+
+def _rerank_engine(engine: str):
+    try:
+        return _RERANK_ENGINES[engine]
+    except KeyError:
+        raise ValueError(f"unknown reveal engine: {engine!r} "
+                         f"(expected one of {sorted(_RERANK_ENGINES)})"
+                         ) from None
 
 
 def make_rerank_bandit_step(mesh: Mesh, *, topk: int = 10,
                             alpha_ef: float = 0.3, delta: float = 0.01,
                             block_docs: int = 16, block_tokens: int = 8,
-                            max_rounds: int = 64):
-    """Adaptive reranking step: gather-then-bandit per query shard."""
+                            max_rounds: int = 64, engine: str = "pooled"):
+    """Adaptive reranking step: gather-then-pooled-bandit per query shard.
+
+    Each device runs ONE pooled frontier loop over its whole query shard
+    (``engine="pooled"``, the default) instead of vmapping a per-query
+    loop; ``engine="vmapped"`` keeps the legacy lockstep path for A/B."""
     names = tuple(mesh.axis_names)
     every = tuple(names)
 
     cfg = BatchedConfig(k=topk, delta=delta, alpha_ef=alpha_ef,
                         block_docs=block_docs, block_tokens=block_tokens,
                         max_rounds=max_rounds)
-    one_query = _bandit_one_query(cfg)
+    rerank = _rerank_engine(engine)
 
     def step(docs, dmask, queries, cand_ids, a, b):
         """docs (B, N, L, M) pre-gathered candidate embeddings (the routing
@@ -186,8 +278,8 @@ def make_rerank_bandit_step(mesh: Mesh, *, topk: int = 10,
         Returns (topk_global_ids (B, K), coverage (B,))."""
         B = queries.shape[0]
         keys = jax.random.split(jax.random.key(0), B)
-        _, gids, cov = jax.vmap(one_query)(docs, dmask, queries, cand_ids,
-                                           a, b, keys)
+        _, gids, cov, _ = rerank(docs, dmask, queries, cand_ids, a, b,
+                                 keys, cfg)
         return gids, cov
 
     in_specs = (P(every, None, None, None),   # docs (B, N, L, M)
@@ -316,11 +408,16 @@ def make_rerank_two_phase_step(mesh: Mesh, *, topk: int = 10,
 # ``gather_candidates`` routing path and one uniform signature:
 #
 #   step(corpus_embs, corpus_mask, queries, cand_ids, a, b, key)
-#     -> (topk_scores (B, K), topk_global_ids (B, K), reveal_frac (B,))
+#     -> (topk_scores (B, K), topk_global_ids (B, K), reveal_frac (B,),
+#         stats (3,))
 #
 # ``reveal_frac`` is the fraction of (candidate, token) MaxSim cells the
 # flavor actually computed: 1.0 for dense, the bandit's coverage (Eq. 6)
-# for the adaptive flavor.
+# for the adaptive flavor. ``stats`` is the reveal-engine diagnostic
+# vector [frontier_occupancy, total_rounds, lockstep_waste]: for the
+# pooled engine, occupancy is the measured live-slot fraction of the
+# shared frontier; for the vmapped engine it is the lockstep duty cycle
+# sum(rounds) / (B * max(rounds)); dense reports [1, 0, 0].
 # ---------------------------------------------------------------------------
 
 def rerank_dense_step(corpus_embs, corpus_mask, queries, cand_ids, a, b,
@@ -335,36 +432,49 @@ def rerank_dense_step(corpus_embs, corpus_mask, queries, cand_ids, a, b,
     gids = jnp.take_along_axis(cand_ids, pos, axis=1)
     gids = jnp.where(best > _NEG / 2, gids, -1)
     frac = jnp.ones((queries.shape[0],), jnp.float32)
-    return best, gids, frac
+    stats = jnp.array([1.0, 0.0, 0.0], jnp.float32)
+    return best, gids, frac, stats
 
 
 def rerank_bandit_step(corpus_embs, corpus_mask, queries, cand_ids, a, b,
                        key, *, topk: int = 10, alpha_ef: float = 0.3,
                        delta: float = 0.01, block_docs: int = 8,
-                       block_tokens: int = 8, max_rounds: int = -1):
-    """Adaptive Col-Bandit rerank over the candidate list (vmapped)."""
+                       block_tokens: int = 8, max_rounds: int = -1,
+                       max_block_docs: int = 0, engine: str = "pooled"):
+    """Adaptive Col-Bandit rerank over the candidate list.
+
+    ``engine="pooled"`` (default) drives the whole batch through one
+    pooled frontier loop — one gather_maxsim kernel launch per round,
+    converged queries retired (and, with ``max_block_docs`` >
+    ``block_docs``, their reveal slots redistributed to the stragglers).
+    ``engine="vmapped"`` is the legacy per-query lockstep loop."""
+    rerank = _rerank_engine(engine)
     cfg = BatchedConfig(k=topk, delta=delta, alpha_ef=alpha_ef,
                         block_docs=block_docs, block_tokens=block_tokens,
-                        max_rounds=max_rounds)
-    one_query = _bandit_one_query(cfg)
+                        max_rounds=max_rounds, max_block_docs=max_block_docs)
     docs, dmask = gather_candidates(corpus_embs, corpus_mask, cand_ids)
     keys = jax.random.split(key, queries.shape[0])
-    return jax.vmap(one_query)(docs, dmask, queries, cand_ids, a, b, keys)
+    return rerank(docs, dmask, queries, cand_ids, a, b, keys, cfg)
 
 
 def make_serving_step(flavor: str, *, topk: int = 10, alpha_ef: float = 0.3,
                       delta: float = 0.01, block_docs: int = 8,
-                      block_tokens: int = 8, max_rounds: int = -1):
+                      block_tokens: int = 8, max_rounds: int = -1,
+                      max_block_docs: int = 0, engine: str = "pooled"):
     """Shape-bucket-aware step factory the serving engine consumes.
 
     Returns an un-jitted step with the uniform engine signature; the caller
     owns compilation (``RetrievalEngine`` AOT-lowers one executable per
-    (flavor, token-bucket, candidate-bucket) and keeps the cache warm)."""
+    (flavor, token-bucket, candidate-bucket) and keeps the cache warm).
+    ``engine`` picks the bandit reveal engine (pooled frontier vs legacy
+    vmapped lockstep); dense ignores it."""
+    _rerank_engine(engine)
     if flavor == "dense":
         return functools.partial(rerank_dense_step, topk=topk)
     if flavor == "bandit":
         return functools.partial(
             rerank_bandit_step, topk=topk, alpha_ef=alpha_ef, delta=delta,
             block_docs=block_docs, block_tokens=block_tokens,
-            max_rounds=max_rounds)
+            max_rounds=max_rounds, max_block_docs=max_block_docs,
+            engine=engine)
     raise ValueError(f"unknown serving flavor: {flavor!r}")

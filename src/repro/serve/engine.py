@@ -62,6 +62,14 @@ class EngineConfig:
     block_tokens: int = 8
     max_rounds: int = -1
     support: Tuple[float, float] = (0.0, 1.0)
+    # Reveal engine for the bandit flavor: "pooled" (one cross-query
+    # frontier loop + one gather_maxsim launch per round, converged queries
+    # retired) or "vmapped" (legacy per-query lockstep loop, kept for A/B).
+    bandit_engine: str = "pooled"
+    # Pooled engine only: let active queries grow their per-round doc block
+    # up to this many docs out of slots freed by retired queries (0 = fixed
+    # blocks, exact per-query parity with the solo bandit).
+    max_block_docs: int = 0
     # stage-1 ANN (requests without a candidate list)
     stage1_kprime: int = 8
     stage1_candidates: int = 0        # 0 => smallest candidate bucket
@@ -107,6 +115,14 @@ class BatchRecord:
     occupancy: float              # n_real / batch_size
     service_s: float              # release -> results materialized
     reveal_fraction: float
+    # Reveal-engine diagnostics (service.py stats vector): live-slot
+    # fraction of the pooled frontier (or lockstep duty cycle for the
+    # vmapped engine), per-query reveal rounds actually attributable to
+    # queries, and the rounds a lockstep loop would have wasted on
+    # already-converged queries. Dense batches report (1, 0, 0).
+    frontier_occupancy: float = 1.0
+    total_rounds: float = 0.0
+    lockstep_waste: float = 0.0
 
 
 class EngineMetrics:
@@ -125,6 +141,7 @@ class EngineMetrics:
 
     def summary(self) -> Dict[str, Any]:
         reqs, bats = self.completions, self.batches
+        bandit_bats = [b for b in bats if b.flavor == "bandit"]
         waits = np.array([c.queue_wait_s for c in reqs]) if reqs else np.zeros(1)
         lats = np.array([c.latency_s for c in reqs]) if reqs else np.zeros(1)
         return {
@@ -142,6 +159,14 @@ class EngineMetrics:
             "mean_reveal_fraction": (float(np.mean([b.reveal_fraction
                                                     for b in bats]))
                                      if bats else 0.0),
+            # Bandit batches only: dense batches report a placeholder 1.0
+            # that would dilute the frontier diagnostic under mixed traffic.
+            "mean_frontier_occupancy": (float(np.mean(
+                [b.frontier_occupancy for b in bandit_bats]))
+                if bandit_bats else 0.0),
+            "total_reveal_rounds": float(sum(b.total_rounds for b in bats)),
+            "total_lockstep_waste": float(sum(b.lockstep_waste
+                                              for b in bats)),
             "compiles": int(sum(self.compiles.values())),
             "compiles_after_warmup": int(self.compiles_after_warmup),
         }
@@ -216,7 +241,9 @@ class RetrievalEngine:
             step = make_serving_step(
                 flavor, topk=cfg.max_k, alpha_ef=cfg.alpha_ef,
                 delta=cfg.delta, block_docs=cfg.block_docs,
-                block_tokens=cfg.block_tokens, max_rounds=cfg.max_rounds)
+                block_tokens=cfg.block_tokens, max_rounds=cfg.max_rounds,
+                max_block_docs=cfg.max_block_docs,
+                engine=cfg.bandit_engine)
 
             def run(ce, cm, q, cand, a, b, seed):
                 return step(ce, cm, q, cand, a, b, jax.random.key(seed))
@@ -353,13 +380,14 @@ class RetrievalEngine:
 
         flavor = self.flavor_for(nb)
         exe = self._executable(("step", flavor, tb, nb))
-        scores, gids, frac = exe(
+        scores, gids, frac, stats = exe(
             self.corpus_embs, self.corpus_mask, jnp.asarray(queries),
             jnp.asarray(cand), jnp.asarray(a), jnp.asarray(b),
             jnp.int32(next(self._batch_seed)))
-        scores, gids, frac = jax.block_until_ready((scores, gids, frac))
-        scores, gids, frac = (np.asarray(scores), np.asarray(gids),
-                              np.asarray(frac))
+        scores, gids, frac, stats = jax.block_until_ready(
+            (scores, gids, frac, stats))
+        scores, gids, frac, stats = (np.asarray(scores), np.asarray(gids),
+                                     np.asarray(frac), np.asarray(stats))
         t_done = self.clock()
 
         service_s = t_done - t_release
@@ -369,7 +397,10 @@ class RetrievalEngine:
             bucket=(tb, nb), flavor=flavor, n_real=n_real,
             occupancy=n_real / cfg.batch_size,
             service_s=service_s,
-            reveal_fraction=float(np.mean(frac[:n_real]))))
+            reveal_fraction=float(np.mean(frac[:n_real])),
+            frontier_occupancy=float(stats[0]),
+            total_rounds=float(stats[1]),
+            lockstep_waste=float(stats[2])))
 
         done: List[Completion] = []
         for i, r in enumerate(real):

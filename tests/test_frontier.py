@@ -1,0 +1,239 @@
+"""ISSUE 3: pooled cross-query reveal engine (repro.core.frontier).
+
+Three contracts:
+  * full-budget parity — with hard bounds (alpha_ef -> inf) and an
+    unconstrained budget, the pooled engine returns the IDENTICAL top-K set
+    per query as ``run_batched_bandit`` vmapped per query (both exact);
+  * frontier retirement — each query's reveal trajectory in the pooled
+    engine (fixed blocks) is bit-identical to its SOLO run under the same
+    key: easy queries pay exactly their solo reveal/round counts no matter
+    how hard their batchmates are, and the retirement accounting
+    (total_rounds vs Q*max) reflects it;
+  * serving integration — rerank_bandit_step's pooled and vmapped engines
+    agree, and the pooled gather path (stacked query-offset indices through
+    gather_maxsim_op) matches the oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (exact_topk, run_batched_oracle, run_pooled_oracle)
+from repro.data.synthetic import make_mixed_difficulty_h
+
+
+def _mixed_h(seed, Q=6, N=40, T=16, k=5, n_hard=1):
+    """Easy queries: clear margin at rank k. Hard queries: 2k near-ties.
+    Same generator the reveal benchmark runs, so the workload the tests
+    pin is the workload BENCH_reveal.json reports."""
+    return jnp.asarray(make_mixed_difficulty_h(
+        Q, N, T, k=k, hard_frac=n_hard / Q if n_hard else 0.0, seed=seed))
+
+
+def _bounds(H):
+    return jnp.zeros(H.shape, jnp.float32), jnp.ones(H.shape, jnp.float32)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_full_budget_topk_parity_with_vmapped(seed):
+    """Hard-bound mode, full budget: pooled == vmapped == exact, per query."""
+    H = _mixed_h(seed)
+    a, b = _bounds(H)
+    Q, k = H.shape[0], 5
+    keys = jax.random.split(jax.random.key(seed), Q)
+    kw = dict(k=k, alpha_ef=1e9, block_docs=8, block_tokens=4)
+    pooled = run_pooled_oracle(H, a, b, keys, **kw)
+    solo = [run_batched_oracle(H[q], a[q], b[q], keys[q], **kw)
+            for q in range(Q)]
+    for q in range(Q):
+        want = set(map(int, np.asarray(exact_topk(H[q], k=k)[0])))
+        assert set(map(int, np.asarray(pooled.topk[q]))) == want
+        assert set(map(int, np.asarray(solo[q].topk))) == want
+    assert bool(np.asarray(pooled.separated).all())
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_frontier_retirement_matches_solo_trajectories(seed):
+    """One hard + many easy queries: every query's reveal count AND round
+    count in the pooled engine equal its solo run exactly — retirement
+    means easy queries never pay extra for the straggler."""
+    H = _mixed_h(seed, Q=6, n_hard=1)
+    a, b = _bounds(H)
+    Q = H.shape[0]
+    keys = jax.random.split(jax.random.key(seed), Q)
+    kw = dict(k=5, alpha_ef=0.3, block_docs=8, block_tokens=4)
+    pooled = run_pooled_oracle(H, a, b, keys, **kw)
+    solo_rounds, solo_reveals = [], []
+    for q in range(Q):
+        r = run_batched_oracle(H[q], a[q], b[q], keys[q], **kw)
+        solo_rounds.append(int(r.rounds))
+        solo_reveals.append(int(r.reveals))
+    np.testing.assert_array_equal(np.asarray(pooled.rounds), solo_rounds)
+    np.testing.assert_array_equal(np.asarray(pooled.reveals), solo_reveals)
+    # the straggler dominates the trip count; easy queries retired early
+    assert int(pooled.trips) == max(solo_rounds)
+    assert int(pooled.total_rounds) == sum(solo_rounds)
+    assert int(pooled.total_rounds) < Q * max(solo_rounds)
+    assert int(pooled.lockstep_waste) == Q * max(solo_rounds) - sum(solo_rounds)
+    assert 0.0 < float(pooled.occupancy) <= 1.0
+
+
+def test_retirement_unaffected_by_batchmates():
+    """An easy query's trajectory must not change when the rest of the
+    batch swaps between easy and hard batchmates (same per-query key)."""
+    H_easy = _mixed_h(7, Q=4, n_hard=0)
+    H_mixed = jnp.concatenate([H_easy[:2], _mixed_h(8, Q=2, n_hard=2)])
+    a, b = _bounds(H_easy)
+    keys = jax.random.split(jax.random.key(9), 4)
+    kw = dict(k=5, alpha_ef=0.3, block_docs=8, block_tokens=4)
+    r_easy = run_pooled_oracle(H_easy, a, b, keys, **kw)
+    r_mixed = run_pooled_oracle(H_mixed, a, b, keys, **kw)
+    np.testing.assert_array_equal(np.asarray(r_easy.reveals[:2]),
+                                  np.asarray(r_mixed.reveals[:2]))
+    np.testing.assert_array_equal(np.asarray(r_easy.revealed[:2]),
+                                  np.asarray(r_mixed.revealed[:2]))
+
+
+def test_slot_growth_reduces_trips_and_keeps_exactness():
+    """max_block_docs > block_docs: freed slots go to the stragglers, the
+    global trip count shrinks (never grows), and full-budget top-K stays
+    exact."""
+    H = _mixed_h(10, Q=8, N=40, T=16, n_hard=2)
+    a, b = _bounds(H)
+    keys = jax.random.split(jax.random.key(11), 8)
+    kw = dict(k=5, alpha_ef=1e9, block_docs=8, block_tokens=4)
+    fixed = run_pooled_oracle(H, a, b, keys, **kw)
+    grown = run_pooled_oracle(H, a, b, keys, max_block_docs=24, **kw)
+    assert int(grown.trips) <= int(fixed.trips)
+    for q in range(8):
+        want = set(map(int, np.asarray(exact_topk(H[q], k=5)[0])))
+        assert set(map(int, np.asarray(grown.topk[q]))) == want
+
+
+def test_oversized_max_block_docs_clamped_to_candidates():
+    """max_block_docs beyond 2N must clamp to the candidate count, not
+    surface as an opaque top_k shape error (reachable from EngineConfig
+    alone on a small candidate bucket)."""
+    H = _mixed_h(20, Q=4, N=16, T=8)
+    a, b = _bounds(H)
+    keys = jax.random.split(jax.random.key(21), 4)
+    res = run_pooled_oracle(H, a, b, keys, k=5, alpha_ef=1e9, block_docs=8,
+                            block_tokens=4, max_block_docs=40)
+    for q in range(4):
+        want = set(map(int, np.asarray(exact_topk(H[q], k=5)[0])))
+        assert set(map(int, np.asarray(res.topk[q]))) == want
+
+
+def test_unknown_engine_name_raises_value_error():
+    from repro.retrieval.service import make_serving_step, rerank_bandit_step
+    with pytest.raises(ValueError, match="unknown reveal engine"):
+        make_serving_step("bandit", engine="pool")
+    with pytest.raises(ValueError, match="unknown reveal engine"):
+        rerank_bandit_step(None, None, None, None, None, None, None,
+                           engine="pool")
+
+
+def test_doc_mask_padding_never_revealed():
+    """-1-padded candidates (doc_mask False) get no reveals and never enter
+    the top-K, exactly as in the solo engine."""
+    H = _mixed_h(12, Q=3, N=32, T=12)
+    a, b = _bounds(H)
+    doc_mask = jnp.asarray(np.arange(32) < 24)[None, :].repeat(3, axis=0)
+    keys = jax.random.split(jax.random.key(13), 3)
+    res = run_pooled_oracle(H, a, b, keys, k=5, alpha_ef=1e9, block_docs=8,
+                            block_tokens=4, doc_mask=doc_mask)
+    rev = np.asarray(res.revealed)
+    assert not rev[:, 24:, :].any()
+    assert (np.asarray(res.topk) < 24).all()
+    for q in range(3):
+        want = set(map(int, np.asarray(
+            exact_topk(jnp.where(doc_mask[q][:, None], H[q], -1.0), k=5)[0])))
+        assert set(map(int, np.asarray(res.topk[q]))) == want
+
+
+# ---------------------------------------------------------------------------
+# serving integration: rerank_bandit_step over both engines + stacked gather
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serving_setup():
+    from repro.data.synthetic import make_retrieval_dataset
+    ds = make_retrieval_dataset(n_docs=48, n_queries=4, doc_len=16,
+                                min_doc_len=6, query_len=8, dim=16, seed=3)
+    rng = np.random.default_rng(0)
+    B, N, T = 4, 16, 8
+    cand = jnp.asarray(np.stack([rng.choice(48, N, replace=False)
+                                 for _ in range(B)]), jnp.int32)
+    q = jnp.asarray(ds.queries[:B, :T])
+    a = jnp.zeros((B, N, T), jnp.float32)
+    b = jnp.ones((B, N, T), jnp.float32)
+    return ds, q, cand, a, b
+
+
+def test_rerank_bandit_step_engines_agree(serving_setup):
+    """Hard-bound full budget: pooled and vmapped serving engines return
+    the identical per-query top-K set, and the stats vector is coherent."""
+    from repro.retrieval.service import rerank_bandit_step
+    ds, q, cand, a, b = serving_setup
+    key = jax.random.key(0)
+    out = {}
+    for eng in ("pooled", "vmapped"):
+        s, g, f, st = rerank_bandit_step(
+            ds.doc_embs, ds.doc_mask, q, cand, a, b, key, topk=5,
+            alpha_ef=1e9, block_docs=4, block_tokens=4, engine=eng)
+        assert st.shape == (3,)
+        assert 0.0 < float(st[0]) <= 1.0
+        assert ((np.asarray(f) > 0) & (np.asarray(f) <= 1)).all()
+        out[eng] = np.asarray(g)
+    for i in range(q.shape[0]):
+        assert set(out["pooled"][i]) == set(out["vmapped"][i])
+
+
+def test_pooled_serving_matches_oracle_cells(serving_setup):
+    """The stacked gather path (gather_maxsim_op on query-offset indices)
+    must reveal the same values the precomputed-H oracle reveals: identical
+    top-K and identical per-query coverage under the same keys."""
+    from repro.kernels import ref as kref
+    from repro.retrieval.service import gather_candidates, rerank_bandit_step
+    ds, q, cand, a, b = serving_setup
+    key = jax.random.key(1)
+    _, gids, frac, _ = rerank_bandit_step(
+        ds.doc_embs, ds.doc_mask, q, cand, a, b, key, topk=5,
+        alpha_ef=1e9, block_docs=4, block_tokens=4, engine="pooled")
+    docs, dmask = gather_candidates(ds.doc_embs, ds.doc_mask, cand)
+    H = jnp.stack([kref.maxsim_ref(docs[i], dmask[i], q[i])
+                   for i in range(q.shape[0])])
+    # all-masked padding rows score 0 in the serving contract
+    H = jnp.where(jnp.any(dmask, -1)[:, :, None], H, 0.0)
+    keys = jax.random.split(key, q.shape[0])
+    res = run_pooled_oracle(H, a, b, keys, k=5, alpha_ef=1e9, block_docs=4,
+                            block_tokens=4, doc_mask=cand >= 0)
+    want = np.take_along_axis(np.asarray(cand), np.asarray(res.topk), axis=1)
+    for i in range(q.shape[0]):
+        assert set(np.asarray(gids)[i]) == set(want[i])
+    np.testing.assert_allclose(np.asarray(frac), np.asarray(res.coverage),
+                               atol=1e-6)
+
+
+def test_dense_step_has_no_bnlt_intermediate(monkeypatch):
+    """ISSUE 3 acceptance: the compiled dense serving step must not
+    materialize a (B, N, L, T) similarity tensor — its peak temp buffer
+    stays strictly below that threshold (the einsum path it replaced always
+    crossed it)."""
+    from repro.launch.hlo_analysis import peak_buffer_bytes
+    from repro.retrieval.service import rerank_dense_step
+
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "ref")
+    B, C, N, L, M, T = 4, 32, 16, 512, 16, 64
+    SDS = jax.ShapeDtypeStruct
+    args = (SDS((C, L, M), jnp.float32), SDS((C, L), jnp.bool_),
+            SDS((B, T, M), jnp.float32), SDS((B, N), jnp.int32),
+            SDS((B, N, T), jnp.float32), SDS((B, N, T), jnp.float32),
+            SDS((), jnp.int32))
+
+    def step(ce, cm, q, cand, a, b, seed):
+        return rerank_dense_step(ce, cm, q, cand, a, b,
+                                 jax.random.key(seed), topk=10)
+
+    peak = peak_buffer_bytes(jax.jit(step).lower(*args).compile())
+    assert peak < B * N * L * T * 4, (peak, B * N * L * T * 4)

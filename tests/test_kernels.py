@@ -6,8 +6,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
-from repro.kernels.ops import (gather_maxsim_op, masked_maxsim_op, maxsim_op,
-                               maxsim_scores_op)
+from repro.kernels.ops import (gather_maxsim_op, masked_maxsim_op,
+                               maxsim_batch_op, maxsim_op, maxsim_scores_op)
 
 
 def _inputs(N, L, M, T, dtype, seed=0):
@@ -166,3 +166,81 @@ def test_masked_maxsim_all_masked_documents():
     h_ref = np.asarray(ref.maxsim_ref(E, mask, Q))
     np.testing.assert_allclose(np.asarray(h), h_ref, atol=1e-5)
     assert (np.asarray(h)[[0, 4, 10]] < -1e37).all()
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 3 satellites: stacked-offset gather indexing (the pooled frontier's
+# cell contract), the gather padding contract, the batched dense scorer, and
+# the lifted block-divisibility error.
+# ---------------------------------------------------------------------------
+
+def _stacked(Bq, N, L, M, T, seed):
+    """Per-query inputs stacked the way the pooled frontier stacks them:
+    docs (Bq*N, L, M), queries (Bq*T, M)."""
+    rng = np.random.default_rng(seed)
+    parts = [_inputs(N, L, M, T, jnp.float32, seed=seed + i)
+             for i in range(Bq)]
+    E = jnp.concatenate([p[0] for p in parts])
+    mask = jnp.concatenate([p[1] for p in parts])
+    Q = jnp.concatenate([p[2] for p in parts])
+    # query-offset selections: doc q*N+i pairs only with tokens q*T+t
+    S, G = 7, 3                                    # odd S: pad path active
+    qid = rng.integers(0, Bq, S)
+    di = jnp.asarray(qid * N + rng.integers(0, N, S), jnp.int32)
+    ti = jnp.asarray(qid[:, None] * T + rng.integers(0, T, (S, G)), jnp.int32)
+    return E, mask, Q, di, ti
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_gather_maxsim_stacked_offset_parity(impl, monkeypatch):
+    """ref/interpret parity on query-offset indices into stacked tensors —
+    the exact indexing the pooled reveal engine emits every round."""
+    E, mask, Q, di, ti = _stacked(3, 8, 48, 128, 6, seed=21)
+    want = np.asarray(ref.gather_maxsim_ref(E, mask, Q, di, ti))
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", impl)
+    out = gather_maxsim_op(E, mask, Q, di, ti, block_b=4, block_l=16)
+    np.testing.assert_allclose(np.asarray(out), want, atol=1e-5)
+
+
+def test_gather_maxsim_pad_rows_replicate_last_index(monkeypatch):
+    """B not a multiple of block_b: pad rows replicate the last selection
+    (not doc 0) and are sliced off — results must match ref even when doc 0
+    is all-masked (the old zero-padding's gather target)."""
+    N, L, M, T = 9, 32, 128, 8
+    E, mask, Q = _inputs(N, L, M, T, jnp.float32, seed=22)
+    mask = jnp.asarray(np.asarray(mask).copy()).at[0].set(False)
+    rng = np.random.default_rng(23)
+    di = jnp.asarray(rng.integers(1, N, 5), jnp.int32)   # B=5, block_b=4
+    ti = jnp.asarray(rng.integers(0, T, (5, 2)), jnp.int32)
+    want = np.asarray(ref.gather_maxsim_ref(E, mask, Q, di, ti))
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "interpret")
+    out = gather_maxsim_op(E, mask, Q, di, ti, block_b=4, block_l=16)
+    np.testing.assert_allclose(np.asarray(out), want, atol=1e-5)
+
+
+def test_gather_maxsim_unpadded_shapes_raise_clearly():
+    from repro.kernels.gather_maxsim import gather_maxsim
+    E, mask, Q = _inputs(8, 32, 128, 8, jnp.float32, seed=24)
+    di = jnp.zeros((5,), jnp.int32)                # 5 % 4 != 0
+    ti = jnp.zeros((5, 2), jnp.int32)
+    with pytest.raises(ValueError, match="gather_maxsim_op"):
+        gather_maxsim(E, mask, Q, di, ti, block_b=4, block_l=16,
+                      interpret=True)
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+@pytest.mark.parametrize("shape", [(2, 8, 64, 128, 16), (3, 7, 37, 128, 11)])
+def test_maxsim_batch_matches_per_query_ref(impl, shape, monkeypatch):
+    """The batched dense scorer equals per-query maxsim_ref in every
+    dispatch mode, including all-masked docs (sentinel rows)."""
+    Bq, N, L, M, T = shape
+    rng = np.random.default_rng(25)
+    E = jnp.asarray(rng.standard_normal((Bq, N, L, M)), jnp.float32)
+    mask = jnp.asarray(rng.random((Bq, N, L)) > 0.3)
+    mask = mask.at[0, 1].set(False)
+    Q = jnp.asarray(rng.standard_normal((Bq, T, M)), jnp.float32)
+    want = np.asarray(jax.vmap(ref.maxsim_ref)(E, mask, Q))
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", impl)
+    got = np.asarray(maxsim_batch_op(E, mask, Q, block_l=16))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    assert (got[0, 1] < -1e37).all()
