@@ -45,6 +45,8 @@ HARNESSES = {
                 "RetrievalEngine p50/p99 latency + throughput"),
     "reveal": ("benchmarks.reveal_throughput",
                "pooled frontier vs vmapped lockstep reveal engine"),
+    "sharded": ("benchmarks.sharded_serving",
+                "corpus-sharded pooled-bandit serving, 1/4/16 shards"),
 }
 STANDALONE = {
     "perf_iterations": ("benchmarks.perf_iterations",
@@ -99,8 +101,8 @@ def main(argv=None):
 
     from benchmarks import (fig2_tradeoff, fig4_exploration, fig5_ann_bounds,
                             generalized_recsys, reveal_throughput,
-                            serving_latency, table1_efficiency,
-                            table2_effectiveness)
+                            serving_latency, sharded_serving,
+                            table1_efficiency, table2_effectiveness)
     benches = {
         "table1": lambda: table1_efficiency.run(n_docs, n_q),
         "table2": lambda: table2_effectiveness.run(n_docs, n_q),
@@ -115,6 +117,11 @@ def main(argv=None):
             alphas=(0.3,) if args.quick else (0.15, 0.3, 1.0)),
         "reveal": lambda: reveal_throughput.run(
             Q=16 if args.quick else 64, n_docs=min(n_docs, 96)),
+        # spawns one subprocess per shard count (each pins its own XLA
+        # host device count), so it is safe to run from this single-device
+        # process.
+        "sharded": lambda: sharded_serving.run(
+            shard_counts=(1, 4) if args.quick else (1, 4, 16)),
     }
     wanted = [args.only] if args.only else list(benches)
 

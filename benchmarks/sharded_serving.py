@@ -1,0 +1,208 @@
+"""Sharded-corpus serving throughput: 1 / 4 / 16 shards on the CPU mesh.
+
+The serving question this answers: when the (C, L, M) token index is
+sharded over a real mesh and every shard runs the pooled frontier engine
+over its OWN resident candidates (cross-shard traffic = K-sized scorecards
+only), what does the corpus-resident pooled-bandit step sustain, and how is
+frontier work distributed over the shards?
+
+Each shard count runs in its own subprocess with that many XLA host
+placeholder devices (the parent process must stay single-device, same
+discipline as tests/_subproc.py), building the mesh via
+``repro.launch.mesh.make_host_mesh``, a RAGGED ShardedCorpus (C chosen so
+the tail shard is short — the valid_docs clamp is on the measured path),
+and the ``make_sharded_serving_step`` bandit flavor.
+
+Reported per shard count: queries/s, reveal fraction, per-shard bandit
+round counts and frontier occupancy, plus a hard-bound (alpha_ef -> inf)
+parity check against exact dense top-K — the acceptance gate.
+
+Caveat: on the CPU host platform the per-shard programs timeshare one
+machine, so walltime does NOT improve with shard count here; the numbers
+pin scheduling facts (rounds, occupancy, scorecard-only traffic) and give
+the shape of the throughput curve a real mesh would see.
+
+Registered in ``benchmarks/run.py`` as ``sharded``; standalone:
+
+  PYTHONPATH=src python -m benchmarks.sharded_serving
+
+Emits ``BENCH_sharded.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Dict
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _worker(n_shards: int, n_docs: int, B: int, N: int, T: int, L: int,
+            M: int, k: int, alpha_ef: float, n_batches: int,
+            seed: int) -> Dict:
+    """Runs inside the subprocess that owns ``n_shards`` host devices."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.launch.mesh import make_host_mesh
+    from repro.retrieval.service import (make_rerank_dense_step,
+                                         make_sharded_serving_step)
+    from repro.retrieval.sharded import (route_aligned, route_candidates,
+                                         shard_corpus)
+
+    assert len(jax.devices()) == n_shards, (len(jax.devices()), n_shards)
+    rng = np.random.default_rng(seed)
+    emb = rng.standard_normal((n_docs, L, M)).astype(np.float32)
+    emb /= np.linalg.norm(emb, axis=-1, keepdims=True)
+    msk = np.arange(L)[None] < rng.integers(L // 2, L + 1, n_docs)[:, None]
+    mesh = make_host_mesh(n_shards)
+    sc = shard_corpus(emb, msk, mesh)
+
+    def batch(i):
+        r = np.random.default_rng(1000 + i)
+        q = r.standard_normal((B, T, M)).astype(np.float32)
+        q /= np.linalg.norm(q, axis=-1, keepdims=True)
+        cand = np.stack([r.choice(n_docs, N, replace=False)
+                         for _ in range(B)]).astype(np.int32)
+        cand_l = route_candidates(cand, sc.docs_per_shard, sc.n_shards)
+        # valid per-cell support: normalized docs x normalized query tokens
+        a = np.full((B, N, T), -1.0, np.float32)
+        b = np.ones((B, N, T), np.float32)
+        a_l = route_aligned(a, cand, cand_l, sc.docs_per_shard)
+        b_l = route_aligned(b, cand, cand_l, sc.docs_per_shard)
+        return (q, cand, jnp.asarray(cand_l), jnp.asarray(a_l),
+                jnp.asarray(b_l))
+
+    step = jax.jit(make_sharded_serving_step(
+        mesh, "bandit", topk=k, alpha_ef=alpha_ef, block_docs=8,
+        block_tokens=4))
+    vd = sc.valid_docs_device()
+
+    batches = [batch(i) for i in range(n_batches)]
+    q0, _, cl0, al0, bl0 = batches[0]
+    jax.block_until_ready(step(sc.embs, sc.mask, jnp.asarray(q0), cl0, al0,
+                               bl0, vd, jnp.int32(0)))        # compile+warm
+    t0 = time.perf_counter()
+    frac_sum, stats_last = 0.0, None
+    for i, (q, _, cl, al, bl) in enumerate(batches):
+        _, _, frac, stats = jax.block_until_ready(
+            step(sc.embs, sc.mask, jnp.asarray(q), cl, al, bl, vd,
+                 jnp.int32(i)))
+        frac_sum += float(np.mean(np.asarray(frac)))
+        stats_last = np.asarray(stats)
+    wall = time.perf_counter() - t0
+
+    # hard-bound parity vs exact dense, on the last batch
+    hb = jax.jit(make_sharded_serving_step(
+        mesh, "bandit", topk=k, alpha_ef=1e9, block_docs=8, block_tokens=4))
+    q, cand, cl, al, bl = batches[-1]
+    _, ids, _, _ = hb(sc.embs, sc.mask, jnp.asarray(q), cl, al, bl, vd,
+                      jnp.int32(0))
+    dense1 = make_rerank_dense_step(jax.make_mesh((1,), ("data",)), topk=k)
+    _, want = dense1(jnp.asarray(emb), jnp.asarray(msk), jnp.asarray(q),
+                     jnp.asarray(cand[:, None, :]))
+    parity = all(set(np.asarray(ids)[b]) == set(np.asarray(want)[b])
+                 for b in range(B))
+
+    return {
+        "n_shards": n_shards,
+        "mesh": {a: int(n) for a, n in mesh.shape.items()},
+        "docs_per_shard": sc.docs_per_shard,
+        "valid_docs": [int(v) for v in sc.valid_docs],
+        "queries_per_s": B * n_batches / max(wall, 1e-9),
+        "wall_s": wall,
+        "mean_reveal_fraction": frac_sum / n_batches,
+        "shard_rounds": [float(x) for x in stats_last[:, 1]],
+        "shard_occupancy": [float(x) for x in stats_last[:, 0]],
+        "hard_bound_topk_parity": bool(parity),
+    }
+
+
+def run(shard_counts=(1, 4, 16), n_docs: int = 93, B: int = 8, N: int = 16,
+        T: int = 8, L: int = 16, M: int = 16, k: int = 5,
+        alpha_ef: float = 0.3, n_batches: int = 4, seed: int = 0,
+        out: str = "BENCH_sharded.json") -> Dict:
+    """Spawn one subprocess per shard count (each pins its own XLA host
+    device count BEFORE importing jax) and collect the rows."""
+    rows = {}
+    for s in shard_counts:
+        cmd = [sys.executable, "-m", "benchmarks.sharded_serving",
+               "--worker", str(s), "--n-docs", str(n_docs), "--batch",
+               str(B), "--cands", str(N), "--tokens", str(T),
+               "--doc-len", str(L), "--dim", str(M), "--topk", str(k),
+               "--alpha-ef", str(alpha_ef), "--batches", str(n_batches),
+               "--seed", str(seed)]
+        env = dict(os.environ,
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count={s}",
+                   JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"),
+                   PYTHONPATH=os.pathsep.join(
+                       [os.path.join(_ROOT, "src"), _ROOT,
+                        os.environ.get("PYTHONPATH", "")]).rstrip(os.pathsep))
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=900, cwd=_ROOT, env=env)
+        if proc.returncode != 0:
+            raise RuntimeError(f"{s}-shard worker failed:\n"
+                               f"{proc.stderr[-3000:]}")
+        row = json.loads(proc.stdout.strip().splitlines()[-1])
+        rows[str(s)] = row
+        print(f"{s:3d} shards: {row['queries_per_s']:8.1f} q/s  "
+              f"reveal {row['mean_reveal_fraction']:.3f}  "
+              f"rounds/shard {row['shard_rounds']}  "
+              f"parity {row['hard_bound_topk_parity']}")
+
+    accept = {"hard_bound_topk_parity_all":
+              all(r["hard_bound_topk_parity"] for r in rows.values()),
+              "every_shard_count_served":
+              len(rows) == len(tuple(shard_counts))}
+    result = {
+        "config": {"n_docs": n_docs, "B": B, "N": N, "T": T, "L": L, "M": M,
+                   "k": k, "alpha_ef": alpha_ef, "n_batches": n_batches,
+                   "shard_counts": list(shard_counts), "seed": seed},
+        "shards": rows,
+        "accept": accept,
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {out}")
+    assert all(accept.values()), accept
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", type=int, default=0,
+                    help="internal: run the measurement for N shards "
+                         "in-process (device count set by the parent)")
+    ap.add_argument("--n-docs", type=int, default=93)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--cands", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--doc-len", type=int, default=16)
+    ap.add_argument("--dim", type=int, default=16)
+    ap.add_argument("--topk", type=int, default=5)
+    ap.add_argument("--alpha-ef", type=float, default=0.3)
+    ap.add_argument("--batches", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    if args.worker:
+        row = _worker(args.worker, args.n_docs, args.batch, args.cands,
+                      args.tokens, args.doc_len, args.dim, args.topk,
+                      args.alpha_ef, args.batches, args.seed)
+        print(json.dumps(row))
+        return 0
+    run(shard_counts=(1, 4) if args.quick else (1, 4, 16),
+        n_docs=args.n_docs, B=args.batch, N=args.cands, T=args.tokens,
+        L=args.doc_len, M=args.dim, k=args.topk, alpha_ef=args.alpha_ef,
+        n_batches=args.batches, seed=args.seed)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -119,7 +119,11 @@ def run_pooled_bandit(
         total_sq=jnp.zeros((Q * N,), jnp.float32),
         key=state_keys,                     # (Q,) keys — per-query streams
         rounds=jnp.zeros((Q,), jnp.int32),  # per-query round counters
-        done=jnp.zeros((Q,), jnp.bool_),    # per-query retirement flags
+        # Queries with NO valid candidate start retired (rounds stay 0):
+        # routine on a sharded corpus, where a query's candidates may all be
+        # resident elsewhere — an empty query must not hold frontier slots
+        # or inflate the per-shard round/occupancy accounting.
+        done=~jnp.any(doc_mask, axis=1),    # per-query retirement flags
     )
 
     # Init reveal (paper footnote 2): one random cell per doc, all queries

@@ -194,6 +194,29 @@ def lm_cache_specs(mesh, batch: int) -> Dict[str, P]:
 
 
 # ---------------------------------------------------------------------------
+# Retrieval corpus rules
+# ---------------------------------------------------------------------------
+
+def corpus_axes(mesh) -> Tuple[str, ...]:
+    """The axis group the corpus token index shards its doc dim over: EVERY
+    mesh axis. The (C, L, M) index is the big object in late-interaction
+    serving (C ~ 10^7 docs x L x M fp32 dwarfs queries and scorecards), so
+    it takes the whole machine; queries replicate across it and the only
+    cross-shard traffic is K-sized scorecards (retrieval/service.py)."""
+    return tuple(mesh.axis_names)
+
+
+def corpus_specs(mesh) -> Dict[str, P]:
+    """PartitionSpecs for the corpus-resident arrays, keyed by field name of
+    ``repro.retrieval.sharded.ShardedCorpus``: doc dim over every axis,
+    token/embedding dims replicated."""
+    every = corpus_axes(mesh)
+    return {"embs": P(every, None, None),     # (C, L, M)
+            "mask": P(every, None),           # (C, L)
+            "pooled": P(every, None)}         # (C, M) two-phase summaries
+
+
+# ---------------------------------------------------------------------------
 # GNN / RecSys rules
 # ---------------------------------------------------------------------------
 

@@ -95,8 +95,15 @@ def gather_maxsim_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
     returning; callers never observe them. ``doc_idx``/``tok_idx`` must be
     in-range for ``doc_embs``/``queries`` — the pooled frontier engine
     passes query-offset ids into stacked (Q*N, L, M) / (Q*T, M) tensors and
-    this op is oblivious to the stacking.
+    this op is oblivious to the stacking — the budgeted rerank flavor
+    (``retrieval.service._budgeted_scores``) feeds it the same stacked
+    contract with (batch*candidate)-major rows.
     """
+    if doc_idx.shape[0] != tok_idx.shape[0]:
+        raise ValueError(
+            f"gather_maxsim_op: doc_idx has {doc_idx.shape[0]} rows but "
+            f"tok_idx has {tok_idx.shape[0]} — every selection row needs "
+            "one doc id and one token block")
     impl = _impl()
     if impl == "ref":
         return ref.gather_maxsim_ref(doc_embs, doc_tok_mask, queries,

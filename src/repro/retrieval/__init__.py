@@ -2,3 +2,6 @@
 from repro.retrieval.ann import CandidateSet, generate_candidates, generic_bounds
 from repro.retrieval.index import TokenIndex, build_index, build_index_from_ragged
 from repro.retrieval.pipeline import RerankResult, evaluate_dataset, rerank_query
+from repro.retrieval.sharded import (ShardedCorpus, route_aligned,
+                                     route_batch, route_candidates,
+                                     shard_corpus)

@@ -71,23 +71,50 @@ def gather_candidates(corpus_embs, corpus_mask, cand_ids):
     return docs, dmask
 
 
-def _shard_global_ids(cand, c_loc, every):
-    """Shard-local candidate slot -> global doc id (inside shard_map)."""
+def _shard_index(every):
+    """Linearized position of this shard in the (row-major) mesh axis group
+    — the doc-dim shard number ``jax.sharding`` assigns this device."""
     shard_ix = jnp.int32(0)
     mul = 1
     for ax in reversed(every):
         shard_ix = shard_ix + mul * jax.lax.axis_index(ax)
         mul = mul * jax.lax.axis_size(ax)
-    return jnp.where(cand >= 0, cand + shard_ix * c_loc, -1)
+    return shard_ix
+
+
+def _shard_global_ids(cand, c_loc, every, valid_docs=None):
+    """Shard-local candidate slot -> global doc id (inside shard_map).
+
+    ``valid_docs`` is the (n_shards,) replicated ragged-tail table from
+    :class:`repro.retrieval.sharded.ShardedCorpus`: shard ``s`` genuinely
+    owns only ``valid_docs[s]`` of its ``c_loc`` padded rows, so a slot
+    pointing past that count maps to -1 instead of a padded-tail global id
+    (which, unclamped, would be a perfectly in-range id that scores the
+    zero embedding — or, with an unpadded ``c_loc``, alias a real doc on
+    another shard). ``None`` keeps the legacy every-shard-full contract.
+    """
+    shard_ix = _shard_index(every)
+    owned = jnp.int32(c_loc) if valid_docs is None else valid_docs[shard_ix]
+    ok = (cand >= 0) & (cand < owned)
+    return jnp.where(ok, cand + shard_ix * c_loc, -1)
 
 
 def _merge_scorecards(scores, gids, every, topk):
     """All-gather (B, N_loc) per-shard scorecards and take the global top-K.
-    The only cross-shard traffic in the corpus-resident flavors."""
+    The only cross-shard traffic in the corpus-resident flavors.
+
+    Pad entries (gid < 0: -1-padded slots, ragged-tail clamps, short
+    per-shard top-K lists) are masked to the -inf sentinel HERE, not left
+    to each scorer: a shard with fewer than ``topk`` valid candidates used
+    to ship its pads' raw scores into the gather, where a 0.0 pad could
+    outrank a genuinely negative real score. Result sets with fewer than
+    ``topk`` valid candidates overall return -1 ids for the shortfall."""
     all_scores = jax.lax.all_gather(scores, every, axis=1, tiled=True)
     all_gids = jax.lax.all_gather(gids, every, axis=1, tiled=True)
+    all_scores = jnp.where(all_gids >= 0, all_scores, _NEG)
     best, pos = jax.lax.top_k(all_scores, topk)
-    return best, jnp.take_along_axis(all_gids, pos, axis=1)
+    ids = jnp.take_along_axis(all_gids, pos, axis=1)
+    return best, jnp.where(best > _NEG / 2, ids, -1)
 
 
 def _chunked_over_queries(score_chunk, args, chunk=512):
@@ -123,7 +150,8 @@ def _chunked_over_queries(score_chunk, args, chunk=512):
     return out
 
 
-def make_rerank_dense_step(mesh: Mesh, *, topk: int = 10):
+def make_rerank_dense_step(mesh: Mesh, *, topk: int = 10,
+                           valid_docs=None):
     """Returns a jit-able step:
     (corpus_embs (C,L,M), corpus_mask (C,L), queries (B,T,M),
      cand_local (B, n_shards, N_loc) local slot ids, -1 pad)
@@ -132,13 +160,18 @@ def make_rerank_dense_step(mesh: Mesh, *, topk: int = 10):
     Corpus docs shard over EVERY mesh axis (the index is the big object);
     queries are replicated (33 MB at B=4096 — cheap) so each corpus shard
     scores its resident candidates for all queries; the only cross-shard
-    traffic is the (B, n_shards*N_loc) scorecard all-gather."""
+    traffic is the (B, n_shards*N_loc) scorecard all-gather.
+
+    ``valid_docs`` is ShardedCorpus's (n_shards,) ragged-tail table (see
+    ``_shard_global_ids``); omit it for an exactly-divisible corpus."""
     every = tuple(mesh.axis_names)
+    vd = None if valid_docs is None else jnp.asarray(valid_docs, jnp.int32)
 
     def step(corpus_embs, corpus_mask, queries, cand_local):
         def shard_fn(c_embs, c_mask, q, cand):
             # c_embs: (C_loc, L, M); q: (B, T, M) full; cand: (B, 1, N_loc)
             cand = cand[:, 0, :]                              # (B, N_loc)
+            gids = _shard_global_ids(cand, c_embs.shape[0], every, vd)
 
             def score_chunk(args):
                 q_c, cand_c = args
@@ -146,8 +179,7 @@ def make_rerank_dense_step(mesh: Mesh, *, topk: int = 10):
                 return _local_maxsim_scores(docs, dmask, q_c)
 
             scores = _chunked_over_queries(score_chunk, (q, cand))
-            scores = jnp.where(cand >= 0, scores, _NEG)
-            gids = _shard_global_ids(cand, c_embs.shape[0], every)
+            scores = jnp.where(gids >= 0, scores, _NEG)
             return _merge_scorecards(scores, gids, every, topk)
 
         return jax.shard_map(
@@ -256,12 +288,33 @@ def _rerank_engine(engine: str):
 def make_rerank_bandit_step(mesh: Mesh, *, topk: int = 10,
                             alpha_ef: float = 0.3, delta: float = 0.01,
                             block_docs: int = 16, block_tokens: int = 8,
-                            max_rounds: int = 64, engine: str = "pooled"):
-    """Adaptive reranking step: gather-then-pooled-bandit per query shard.
+                            max_rounds: int = 64, engine: str = "pooled",
+                            placement: str = "query", base_seed: int = 0):
+    """Adaptive reranking step: the Col-Bandit over a sharded machine.
 
-    Each device runs ONE pooled frontier loop over its whole query shard
-    (``engine="pooled"``, the default) instead of vmapping a per-query
-    loop; ``engine="vmapped"`` keeps the legacy lockstep path for A/B."""
+    ``placement`` picks which side of the gather stays resident:
+
+    * ``"query"`` (default) — queries shard over every axis; each device
+      gathers its queries' candidate embeddings once and runs ONE pooled
+      frontier loop over its whole query shard (``engine="pooled"``;
+      ``engine="vmapped"`` keeps the legacy lockstep path for A/B).
+      Returns ``(step, in_specs, out_specs)`` for the caller to lower.
+    * ``"corpus"`` — the corpus-resident shard_map flavor: the (C, L, M)
+      index shards over every axis, queries replicate, and every shard
+      runs the pooled frontier engine over its OWN resident candidates;
+      the per-shard K-sized scorecards are the only cross-shard traffic
+      (``_merge_scorecards``). Returns the shard_map-applied step with the
+      ``make_sharded_serving_step`` signature (it IS that factory's
+      ``flavor="bandit"``), including the ragged-tail ``valid_docs`` clamp.
+    """
+    if placement == "corpus":
+        return make_sharded_serving_step(
+            mesh, "bandit", topk=topk, alpha_ef=alpha_ef, delta=delta,
+            block_docs=block_docs, block_tokens=block_tokens,
+            max_rounds=max_rounds, engine=engine, base_seed=base_seed)
+    if placement != "query":
+        raise ValueError(f"unknown placement: {placement!r} "
+                         "(expected 'query' or 'corpus')")
     names = tuple(mesh.axis_names)
     every = tuple(names)
 
@@ -293,42 +346,61 @@ def make_rerank_bandit_step(mesh: Mesh, *, topk: int = 10,
     return step, in_specs, out_specs
 
 
+def _budgeted_scores(docs, dmask, queries, toks):
+    """Budgeted MaxSim over the selected query tokens, lowered through the
+    ``gather_maxsim_op`` kernel path (the bandit's reveal kernel — a
+    FLASH-MAXSIM-style fused gather+score instead of materializing the
+    (b, N, L, G') similarity tensor the einsum formulation paid for).
+
+    docs (b, N, L, M), dmask (b, N, L), queries (b, T, M),
+    toks (b, N, G') -> scores (b, N) = sum over the G' selected cells.
+    """
+    b, N, L, M = docs.shape
+    T = queries.shape[1]
+    G = toks.shape[-1]
+    doc_idx = jnp.arange(b * N, dtype=jnp.int32)
+    # Query-offset token ids into the stacked (b*T, M) table — the same
+    # stacking contract the pooled frontier feeds this kernel. Clamp
+    # BEFORE offsetting: a -1 pad would otherwise land on q*T - 1, the
+    # previous query's last token (the einsum path this replaced clamped
+    # via take_along_axis, so keep that contract).
+    tok_flat = (jnp.clip(toks.reshape(b * N, G).astype(jnp.int32), 0, T - 1)
+                + (doc_idx // N * T)[:, None])
+    h = gather_maxsim_op(docs.reshape(b * N, L, M), dmask.reshape(b * N, L),
+                         queries.reshape(b * T, M), doc_idx, tok_flat)
+    h = h.reshape(b, N, G)                                # _NEG where no
+    h = jnp.where(jnp.any(dmask, 2)[:, :, None], h, 0.0)  # valid doc token
+    return jnp.sum(h, axis=-1)
+
+
 def make_rerank_budgeted_step(mesh: Mesh, *, topk: int = 10,
-                              tokens_per_doc: int = 10):
+                              tokens_per_doc: int = 10, valid_docs=None):
     """§Perf: the paper's pruning INSIDE the sharded serving step.
 
     Identical layout to make_rerank_dense_step, but each (query, candidate)
     pair scores only ``tokens_per_doc`` of the T query tokens — the ones the
     bounds machinery selected (Doc-TopMargin order offline, or the bandit's
-    reveal set online), supplied as ``tok_idx``. The einsum contracts a
-    (B, N_loc, G', M) gathered query tensor instead of the full (B, T, M),
-    so compiled FLOPs/bytes drop by ~G'/T — Col-Bandit's coverage savings
+    reveal set online), supplied as ``tok_idx``. The scorer gathers exactly
+    the selected (candidate, token) cells through ``gather_maxsim_op``
+    (Pallas on TPU) instead of contracting a gathered query einsum, so
+    compiled FLOPs/bytes drop by ~G'/T — Col-Bandit's coverage savings
     made visible to the roofline."""
     every = tuple(mesh.axis_names)
+    vd = None if valid_docs is None else jnp.asarray(valid_docs, jnp.int32)
 
     def step(corpus_embs, corpus_mask, queries, cand_local, tok_idx):
         def shard_fn(c_embs, c_mask, q, cand, toks):
             cand = cand[:, 0, :]                              # (B, N_loc)
             toks = toks[:, 0, :, :]                           # (B, N_loc, G')
+            gids = _shard_global_ids(cand, c_embs.shape[0], every, vd)
 
             def score_chunk(args):
                 q_c, cand_c, tok_c = args
                 docs, dmask = gather_candidates(c_embs, c_mask, cand_c)
-                # gather the selected query tokens per (query, cand)
-                q_sel = jnp.take_along_axis(
-                    q_c[:, None, :, :],
-                    tok_c[:, :, :, None].astype(jnp.int32), axis=2)
-                sims = jnp.einsum("bnlm,bngm->bnlg",
-                                  docs.astype(jnp.float32),
-                                  q_sel.astype(jnp.float32))
-                sims = jnp.where(dmask[:, :, :, None], sims, _NEG)
-                h = jnp.max(sims, axis=2)                     # (b, N, G')
-                h = jnp.where(jnp.any(dmask, 2)[:, :, None], h, 0.0)
-                return jnp.sum(h, axis=-1)
+                return _budgeted_scores(docs, dmask, q_c, tok_c)
 
             scores = _chunked_over_queries(score_chunk, (q, cand, toks))
-            scores = jnp.where(cand >= 0, scores, _NEG)
-            gids = _shard_global_ids(cand, c_embs.shape[0], every)
+            scores = jnp.where(gids >= 0, scores, _NEG)
             return _merge_scorecards(scores, gids, every, topk)
 
         return jax.shard_map(
@@ -343,7 +415,7 @@ def make_rerank_budgeted_step(mesh: Mesh, *, topk: int = 10,
 
 
 def make_rerank_two_phase_step(mesh: Mesh, *, topk: int = 10,
-                               survivors: int = 2):
+                               survivors: int = 2, valid_docs=None):
     """§Perf H3 iteration 2: PLAID-style two-phase scoring.
 
     H3 iteration 1 (token pruning) taught us the dominant memory term is
@@ -355,12 +427,17 @@ def make_rerank_two_phase_step(mesh: Mesh, *, topk: int = 10,
     (L x M)-byte reads shrink by survivors/N_loc.
 
     Non-survivors keep their phase-1 score in the global merge (standard
-    multi-stage retrieval semantics: monotone-ish, not exact)."""
+    multi-stage retrieval semantics: monotone-ish, not exact). Phase 2
+    (exact MaxSim on the survivors) lowers through ``maxsim_batch_op`` via
+    ``_local_maxsim_scores``; phase 1 is a plain (b, N, M) matmul with no
+    token axis to tile, so it stays jnp."""
     every = tuple(mesh.axis_names)
+    vd = None if valid_docs is None else jnp.asarray(valid_docs, jnp.int32)
 
     def step(corpus_embs, corpus_mask, corpus_pooled, queries, cand_local):
         def shard_fn(c_embs, c_mask, c_pool, q, cand):
             cand = cand[:, 0, :]                              # (B, N_loc)
+            gids = _shard_global_ids(cand, c_embs.shape[0], every, vd)
 
             def score_chunk(args):
                 q_c, cand_c = args                            # (b,T,M),(b,N)
@@ -384,7 +461,6 @@ def make_rerank_two_phase_step(mesh: Mesh, *, topk: int = 10,
                 return out
 
             scores = _chunked_over_queries(score_chunk, (q, cand))
-            gids = _shard_global_ids(cand, c_embs.shape[0], every)
             return _merge_scorecards(scores, gids, every, topk)
 
         return jax.shard_map(
@@ -478,3 +554,106 @@ def make_serving_step(flavor: str, *, topk: int = 10, alpha_ef: float = 0.3,
             max_rounds=max_rounds, max_block_docs=max_block_docs,
             engine=engine)
     raise ValueError(f"unknown serving flavor: {flavor!r}")
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded engine-facing serving steps.
+#
+# Same contract as the un-sharded engine steps above, but the corpus lives
+# sharded over EVERY mesh axis (repro.retrieval.sharded.ShardedCorpus) and
+# candidates arrive pre-routed to their resident shard:
+#
+#   step(corpus_embs (C_pad, L, M), corpus_mask (C_pad, L),
+#        queries (B, T, M), cand_local (B, n_shards, N_loc),
+#        a_local/b_local (B, n_shards, N_loc, T),
+#        valid_docs (n_shards,), seed ())
+#     -> (topk_scores (B, K), topk_global_ids (B, K), reveal_frac (B,),
+#         stats (n_shards, 3))
+#
+# Every shard scores (dense) or pooled-frontier-reranks (bandit) its OWN
+# resident candidates; the only cross-shard traffic is the per-shard
+# K-sized scorecard all-gather plus two scalar psums for the reveal
+# fraction. ``stats`` keeps the [frontier_occupancy, total_rounds,
+# lockstep_waste] vector but PER SHARD, so the engine can surface shard
+# skew (a shard whose frontier idles is a routing-imbalance signal).
+# ---------------------------------------------------------------------------
+
+def make_sharded_serving_step(mesh: Mesh, flavor: str, *, topk: int = 10,
+                              alpha_ef: float = 0.3, delta: float = 0.01,
+                              block_docs: int = 8, block_tokens: int = 8,
+                              max_rounds: int = -1, max_block_docs: int = 0,
+                              engine: str = "pooled", base_seed: int = 0):
+    """Corpus-resident shard_map serving step (dense | bandit).
+
+    The per-batch PRNG key is ``fold_in(key(base_seed), seed)`` with the
+    shard index folded on top, so every (batch, shard) pair reveals an
+    independent cell trajectory while the whole step stays a deterministic
+    function of (base_seed, seed, inputs)."""
+    every = tuple(mesh.axis_names)
+    n_shards = 1
+    for ax in every:
+        n_shards *= int(mesh.shape[ax])
+    if flavor not in ("dense", "bandit"):
+        raise ValueError(f"unknown sharded serving flavor: {flavor!r}")
+    rerank = _rerank_engine(engine)
+
+    def step(corpus_embs, corpus_mask, queries, cand_local, a_local,
+             b_local, valid_docs, seed):
+        B, S, NL = cand_local.shape
+        T = queries.shape[1]
+        k_shard = min(topk, NL)
+        if S != n_shards:
+            raise ValueError(f"cand_local routed for {S} shards on a "
+                             f"{n_shards}-shard mesh")
+        if n_shards * k_shard < topk:
+            raise ValueError(
+                f"cannot assemble a global top-{topk} from {n_shards} "
+                f"shards x {k_shard} candidate slots; raise N_loc")
+
+        cfg = BatchedConfig(k=k_shard, delta=delta, alpha_ef=alpha_ef,
+                            block_docs=block_docs, block_tokens=block_tokens,
+                            max_rounds=max_rounds,
+                            max_block_docs=max_block_docs)
+
+        def shard_fn(c_embs, c_mask, q, cand, a_l, b_l, vd, sd):
+            cand = cand[:, 0, :]                            # (B, N_loc)
+            a_l, b_l = a_l[:, 0], b_l[:, 0]                 # (B, N_loc, T)
+            gids = _shard_global_ids(cand, c_embs.shape[0], every, vd)
+            valid = gids >= 0
+            docs, dmask = gather_candidates(c_embs, c_mask, cand)
+            dmask = dmask & valid[:, :, None]
+            n_cells = (jnp.sum(valid, axis=1) * T).astype(jnp.float32)
+
+            if flavor == "dense":
+                s = _local_maxsim_scores(docs, dmask, q)
+                s = jnp.where(valid, s, _NEG)
+                best, pos = jax.lax.top_k(s, k_shard)
+                bg = jnp.take_along_axis(gids, pos, axis=1)
+                n_rev = n_cells
+                stats_loc = jnp.array([1.0, 0.0, 0.0], jnp.float32)
+            else:
+                key = jax.random.fold_in(jax.random.key(base_seed), sd)
+                key = jax.random.fold_in(key, _shard_index(every))
+                keys = jax.random.split(key, cand.shape[0])
+                best, bg, cov, stats_loc = rerank(
+                    docs, dmask, q, gids, a_l, b_l, keys, cfg)
+                n_rev = cov * n_cells
+
+            tot_rev = jax.lax.psum(n_rev, every)
+            tot_cells = jax.lax.psum(n_cells, every)
+            frac = tot_rev / jnp.maximum(tot_cells, 1.0)
+            g_best, g_ids = _merge_scorecards(best, bg, every, topk)
+            return g_best, g_ids, frac, stats_loc[None, :]
+
+        return jax.shard_map(
+            shard_fn, mesh=mesh, check_vma=False,
+            in_specs=(P(every, None, None), P(every, None),
+                      P(None, None, None), P(None, every, None),
+                      P(None, every, None, None), P(None, every, None, None),
+                      P(None), P()),
+            out_specs=(P(None, None), P(None, None), P(None),
+                       P(every, None)),
+        )(corpus_embs, corpus_mask, queries, cand_local, a_local, b_local,
+          valid_docs, seed)
+
+    return step

@@ -36,7 +36,9 @@ import numpy as np
 
 from repro.dist.fault import DeadlineBatcher
 from repro.retrieval.ann import generate_candidates
-from repro.retrieval.service import make_serving_step
+from repro.retrieval.service import (make_serving_step,
+                                     make_sharded_serving_step)
+from repro.retrieval.sharded import ShardedCorpus, route_batch, shard_corpus
 from repro.serve.bucketing import (ShapeBuckets, pad_candidates, pad_queries,
                                    support_bounds)
 from repro.serve.lm import generate, serve_step  # noqa: F401  (back-compat)
@@ -70,6 +72,13 @@ class EngineConfig:
     # up to this many docs out of slots freed by retired queries (0 = fixed
     # blocks, exact per-query parity with the solo bandit).
     max_block_docs: int = 0
+    # Corpus mesh: () serves from one device (the seed path); a non-empty
+    # axis spec like (("data", 2), ("model", 2)) builds that mesh, places
+    # the corpus over EVERY axis as a ShardedCorpus (ragged tail padded +
+    # tracked), and routes every bucket through the corpus-resident
+    # shard_map steps — per-shard scorecards are the only cross-shard
+    # traffic, and warmup()'s zero-recompile contract is unchanged.
+    mesh_axes: Tuple[Tuple[str, int], ...] = ()
     # stage-1 ANN (requests without a candidate list)
     stage1_kprime: int = 8
     stage1_candidates: int = 0        # 0 => smallest candidate bucket
@@ -92,6 +101,12 @@ class Request:
     # filled in by the engine
     rid: int = -1
     arrival: float = 0.0
+    # Absolute completion deadline (clock frame), stamped once at admission.
+    # Equivalent to arrival + deadline_s, but carried explicitly so the
+    # serve-time miss decision (t_done > deadline_abs) has exactly one
+    # source of truth — the contract the stale-next_expiry admission test
+    # pins down.
+    deadline_abs: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -120,9 +135,14 @@ class BatchRecord:
     # vmapped engine), per-query reveal rounds actually attributable to
     # queries, and the rounds a lockstep loop would have wasted on
     # already-converged queries. Dense batches report (1, 0, 0).
+    # On a sharded corpus these aggregate over shards (mean occupancy of
+    # the shards that did bandit work, summed rounds/waste) and the raw
+    # per-shard vectors land in shard_occupancy / shard_rounds.
     frontier_occupancy: float = 1.0
     total_rounds: float = 0.0
     lockstep_waste: float = 0.0
+    shard_occupancy: Optional[Tuple[float, ...]] = None
+    shard_rounds: Optional[Tuple[float, ...]] = None
 
 
 class EngineMetrics:
@@ -169,6 +189,22 @@ class EngineMetrics:
                                               for b in bats)),
             "compiles": int(sum(self.compiles.values())),
             "compiles_after_warmup": int(self.compiles_after_warmup),
+            **self._shard_summary(),
+        }
+
+    def _shard_summary(self) -> Dict[str, Any]:
+        """Per-shard aggregates over the sharded-corpus batches: summed
+        bandit rounds and mean frontier occupancy per shard — the routing
+        skew / straggler signal the mesh operator watches."""
+        sharded = [b for b in self.batches if b.shard_rounds is not None]
+        if not sharded:
+            return {}
+        rounds = np.sum([b.shard_rounds for b in sharded], axis=0)
+        occ = np.mean([b.shard_occupancy for b in sharded], axis=0)
+        return {
+            "n_shards": len(rounds),
+            "shard_rounds_total": [float(r) for r in rounds],
+            "shard_occupancy_mean": [float(o) for o in occ],
         }
 
 
@@ -191,8 +227,18 @@ class RetrievalEngine:
                  clock: Callable[[], float] = time.monotonic):
         self.cfg = config or EngineConfig()
         self.clock = clock
-        self.corpus_embs = jnp.asarray(corpus_embs, jnp.float32)
-        self.corpus_mask = jnp.asarray(corpus_mask, jnp.bool_)
+        self.sharded: Optional[ShardedCorpus] = None
+        if self.cfg.mesh_axes:
+            names = tuple(a for a, _ in self.cfg.mesh_axes)
+            shape = tuple(int(n) for _, n in self.cfg.mesh_axes)
+            mesh = jax.make_mesh(shape, names)
+            self.sharded = shard_corpus(corpus_embs, corpus_mask, mesh)
+            self.corpus_embs = self.sharded.embs
+            self.corpus_mask = self.sharded.mask
+            self._valid_docs = self.sharded.valid_docs_device()
+        else:
+            self.corpus_embs = jnp.asarray(corpus_embs, jnp.float32)
+            self.corpus_mask = jnp.asarray(corpus_mask, jnp.bool_)
         if self.corpus_embs.ndim != 3 or self.corpus_mask.ndim != 2:
             raise ValueError("corpus must be (C, L, M) embs + (C, L) mask")
         self.buckets = ShapeBuckets(self.cfg.token_buckets,
@@ -204,7 +250,11 @@ class RetrievalEngine:
                                         self.cfg.deadline_s, clock=clock)
         self._exec: Dict[tuple, Any] = {}
         self._rid = itertools.count()
-        self._batch_seed = itertools.count(self.cfg.seed)
+        # Batch ORDINAL, not a raw seed: the executable folds it into the
+        # key(cfg.seed) stream, so every batch (whatever its shape bucket)
+        # reveals a distinct cell trajectory and the whole stream replays
+        # bit-identically from the same config.
+        self._batch_seed = itertools.count()
         self._warmed = False
         self._service_ema = 0.0           # observed batch service time (s)
         self.metrics = EngineMetrics()
@@ -238,23 +288,47 @@ class RetrievalEngine:
         M = self.corpus_embs.shape[2]
         if key[0] == "step":
             _, flavor, tb, nb = key
-            step = make_serving_step(
-                flavor, topk=cfg.max_k, alpha_ef=cfg.alpha_ef,
-                delta=cfg.delta, block_docs=cfg.block_docs,
-                block_tokens=cfg.block_tokens, max_rounds=cfg.max_rounds,
-                max_block_docs=cfg.max_block_docs,
-                engine=cfg.bandit_engine)
+            if self.sharded is not None:
+                S = self.sharded.n_shards
+                step = make_sharded_serving_step(
+                    self.sharded.mesh, flavor, topk=cfg.max_k,
+                    alpha_ef=cfg.alpha_ef, delta=cfg.delta,
+                    block_docs=cfg.block_docs,
+                    block_tokens=cfg.block_tokens,
+                    max_rounds=cfg.max_rounds,
+                    max_block_docs=cfg.max_block_docs,
+                    engine=cfg.bandit_engine, base_seed=cfg.seed)
+                args = (self.corpus_embs, self.corpus_mask,
+                        SDS((B, tb, M), jnp.float32),
+                        SDS((B, S, nb), jnp.int32),
+                        SDS((B, S, nb, tb), jnp.float32),
+                        SDS((B, S, nb, tb), jnp.float32),
+                        SDS((S,), jnp.int32),
+                        SDS((), jnp.int32))
+                exe = jax.jit(step).lower(*args).compile()
+            else:
+                step = make_serving_step(
+                    flavor, topk=cfg.max_k, alpha_ef=cfg.alpha_ef,
+                    delta=cfg.delta, block_docs=cfg.block_docs,
+                    block_tokens=cfg.block_tokens, max_rounds=cfg.max_rounds,
+                    max_block_docs=cfg.max_block_docs,
+                    engine=cfg.bandit_engine)
+                base = cfg.seed
 
-            def run(ce, cm, q, cand, a, b, seed):
-                return step(ce, cm, q, cand, a, b, jax.random.key(seed))
+                def run(ce, cm, q, cand, a, b, seed):
+                    # Per-batch PRNG: fold the batch ordinal into the
+                    # engine-seed stream (never key(seed + ordinal), which
+                    # aliases across engines with nearby seeds).
+                    k = jax.random.fold_in(jax.random.key(base), seed)
+                    return step(ce, cm, q, cand, a, b, k)
 
-            args = (self.corpus_embs, self.corpus_mask,
-                    SDS((B, tb, M), jnp.float32),
-                    SDS((B, nb), jnp.int32),
-                    SDS((B, nb, tb), jnp.float32),
-                    SDS((B, nb, tb), jnp.float32),
-                    SDS((), jnp.int32))
-            exe = jax.jit(run).lower(*args).compile()
+                args = (self.corpus_embs, self.corpus_mask,
+                        SDS((B, tb, M), jnp.float32),
+                        SDS((B, nb), jnp.int32),
+                        SDS((B, nb, tb), jnp.float32),
+                        SDS((B, nb, tb), jnp.float32),
+                        SDS((), jnp.int32))
+                exe = jax.jit(run).lower(*args).compile()
         elif key[0] == "stage1":
             _, tb = key
             nb, kp, support = self._stage1_n, cfg.stage1_kprime, cfg.support
@@ -301,11 +375,23 @@ class RetrievalEngine:
         self.buckets.token_bucket(q.shape[0])          # validate fit
         if request.cand_ids is not None:
             self.buckets.cand_bucket(len(request.cand_ids))
+            cand = np.asarray(request.cand_ids)
+            n_docs = (self.sharded.n_docs if self.sharded is not None
+                      else self.corpus_embs.shape[0])
+            if cand.size and (cand.min() < 0 or cand.max() >= n_docs):
+                # Reject the one bad request HERE: a stale id surfacing
+                # later (e.g. from the sharded routing table) would fail
+                # mid-batch and take every batchmate down with it.
+                raise ValueError(
+                    f"cand_ids must lie in [0, {n_docs}); got range "
+                    f"[{int(cand.min())}, {int(cand.max())}]")
         if request.k > self.cfg.max_k:
             raise ValueError(f"k={request.k} > compiled max_k={self.cfg.max_k}")
-        admitted = dataclasses.replace(request, query=q,
-                                       rid=next(self._rid),
-                                       arrival=self.clock())
+        arrival = self.clock()
+        admitted = dataclasses.replace(
+            request, query=q, rid=next(self._rid), arrival=arrival,
+            deadline_abs=(None if request.deadline_s is None
+                          else arrival + request.deadline_s))
         # Admission deadline = completion deadline - expected service time,
         # so the batch still has time to EXECUTE before the request is due.
         admission = None
@@ -380,15 +466,46 @@ class RetrievalEngine:
 
         flavor = self.flavor_for(nb)
         exe = self._executable(("step", flavor, tb, nb))
-        scores, gids, frac, stats = exe(
-            self.corpus_embs, self.corpus_mask, jnp.asarray(queries),
-            jnp.asarray(cand), jnp.asarray(a), jnp.asarray(b),
-            jnp.int32(next(self._batch_seed)))
+        seed = jnp.int32(next(self._batch_seed))
+        if self.sharded is not None:
+            sc = self.sharded
+            # One placement computation for ids + payloads; the dense
+            # flavor never reads the support bounds, so skip routing them
+            # and ship zeros of the compiled shape.
+            payloads = () if flavor == "dense" else (a, b)
+            cand_l, routed = route_batch(cand, payloads, sc.docs_per_shard,
+                                         sc.n_shards, n_local=nb)
+            if flavor == "dense":
+                zero = np.zeros((cand.shape[0], sc.n_shards, nb, tb),
+                                np.float32)
+                a_l, b_l = zero, zero
+            else:
+                a_l, b_l = routed
+            scores, gids, frac, stats = exe(
+                self.corpus_embs, self.corpus_mask, jnp.asarray(queries),
+                jnp.asarray(cand_l), jnp.asarray(a_l), jnp.asarray(b_l),
+                self._valid_docs, seed)
+        else:
+            scores, gids, frac, stats = exe(
+                self.corpus_embs, self.corpus_mask, jnp.asarray(queries),
+                jnp.asarray(cand), jnp.asarray(a), jnp.asarray(b), seed)
         scores, gids, frac, stats = jax.block_until_ready(
             (scores, gids, frac, stats))
         scores, gids, frac, stats = (np.asarray(scores), np.asarray(gids),
                                      np.asarray(frac), np.asarray(stats))
         t_done = self.clock()
+
+        if stats.ndim == 2:        # sharded: (n_shards, 3) per-shard vectors
+            shard_occ = tuple(float(x) for x in stats[:, 0])
+            shard_rounds = tuple(float(x) for x in stats[:, 1])
+            # aggregate occupancy over the shards that did frontier work
+            busy = stats[stats[:, 1] > 0]
+            agg = (float(np.mean(busy[:, 0])) if len(busy)
+                   else float(np.mean(stats[:, 0])),
+                   float(np.sum(stats[:, 1])), float(np.sum(stats[:, 2])))
+        else:
+            shard_occ = shard_rounds = None
+            agg = (float(stats[0]), float(stats[1]), float(stats[2]))
 
         service_s = t_done - t_release
         self._service_ema = (service_s if not self.metrics.batches
@@ -398,9 +515,11 @@ class RetrievalEngine:
             occupancy=n_real / cfg.batch_size,
             service_s=service_s,
             reveal_fraction=float(np.mean(frac[:n_real])),
-            frontier_occupancy=float(stats[0]),
-            total_rounds=float(stats[1]),
-            lockstep_waste=float(stats[2])))
+            frontier_occupancy=agg[0],
+            total_rounds=agg[1],
+            lockstep_waste=agg[2],
+            shard_occupancy=shard_occ,
+            shard_rounds=shard_rounds))
 
         done: List[Completion] = []
         for i, r in enumerate(real):
@@ -411,8 +530,13 @@ class RetrievalEngine:
                 topk_scores=scores[i, :r.k].copy(),
                 queue_wait_s=t_release - r.arrival,
                 latency_s=latency,
-                deadline_miss=(r.deadline_s is not None
-                               and latency > r.deadline_s + 1e-9),
+                # Serve-time stamping against the ABSOLUTE deadline captured
+                # at admission: however the request reached this batch
+                # (deadline release, full-batch release, drain, or a poll
+                # that raced a fresh admission past a stale next_expiry()),
+                # finishing after the deadline is a miss.
+                deadline_miss=(r.deadline_abs is not None
+                               and t_done > r.deadline_abs + 1e-9),
                 flavor=flavor, bucket=(tb, nb),
                 reveal_fraction=float(frac[i]))
             done.append(comp)

@@ -14,14 +14,18 @@ def run_in_subprocess(code: str, n_devices: int = 8) -> str:
             f"os.environ['XLA_FLAGS']="
             f"'--xla_force_host_platform_device_count={n_devices}'\n"
             + textwrap.dedent(code))
+    env = {"PYTHONPATH": "src", "PATH": os.environ.get(
+               "PATH", "/usr/bin:/bin"),
+           "HOME": os.environ.get("HOME", "/root"),
+           # same platform pin as conftest: without it, a container with
+           # libtpu installed stalls for minutes probing for TPU hardware
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
+    # The kernel-dispatch lane (CI matrixes ref/interpret) must reach the
+    # shard_map paths exercised in subprocesses too.
+    if "REPRO_KERNEL_IMPL" in os.environ:
+        env["REPRO_KERNEL_IMPL"] = os.environ["REPRO_KERNEL_IMPL"]
     out = subprocess.run(
         [sys.executable, "-c", prog], capture_output=True, text=True,
-        timeout=300, cwd=REPO_ROOT,
-        env={"PYTHONPATH": "src", "PATH": os.environ.get(
-                 "PATH", "/usr/bin:/bin"),
-             "HOME": os.environ.get("HOME", "/root"),
-             # same platform pin as conftest: without it, a container with
-             # libtpu installed stalls for minutes probing for TPU hardware
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+        timeout=300, cwd=REPO_ROOT, env=env)
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout

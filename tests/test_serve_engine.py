@@ -58,6 +58,9 @@ def test_submit_validation(corpus):
         eng.submit(Request(query=np.zeros((4, 16), np.float32), k=9))
     with pytest.raises(ValueError):              # wrong embedding dim
         eng.submit(Request(query=np.zeros((4, 8), np.float32)))
+    with pytest.raises(ValueError):              # candidate id off the corpus
+        eng.submit(Request(query=np.zeros((4, 16), np.float32),
+                           cand_ids=np.array([0, 99], np.int32)))
 
 
 # ---------------------------------------------------------------------------
@@ -134,6 +137,62 @@ def test_submit_does_not_mutate_caller_request(corpus):
     assert set(done) == {r0, r1} and r0 != r1
     assert done[r0].queue_wait_s == pytest.approx(0.1)
     assert done[r1].queue_wait_s == pytest.approx(0.0)
+
+
+def test_miss_counted_for_admission_after_stale_next_expiry(corpus):
+    """Pin the serve-time miss contract: a request admitted AFTER the
+    caller captured next_expiry() — so the poll loop oversleeps its
+    (tighter) deadline — must be accounted as a miss when the late poll
+    finally serves it. Miss stamping happens at SERVE time against the
+    absolute completion deadline captured at admission (Request
+    .deadline_abs), never at admission time."""
+    clock = ManualClock()
+    eng = RetrievalEngine(corpus.doc_embs, corpus.doc_mask,
+                          _dense_cfg(deadline_s=1.0), clock=clock)
+    eng.warmup()
+    q = corpus.queries[0][:8]
+    eng.submit(Request(query=q, k=5))              # no deadline
+    stale_expiry = eng.next_expiry()               # driven by the 1 s window
+    assert stale_expiry == pytest.approx(1.0)
+    clock.advance(0.5)
+    rid_late = eng.submit(Request(query=q, k=5, deadline_s=0.05))
+    # poll loop slept to the STALE expiry; the tight request is now 0.45 s
+    # past its completion deadline (0.55 absolute).
+    clock.advance(0.5)
+    done = {c.rid: c for c in eng.poll()}
+    assert done[rid_late].deadline_miss
+    assert sum(c.deadline_miss for c in done.values()) == 1  # only the late one
+    s = eng.metrics.summary()
+    assert s["deadline_miss_rate"] == pytest.approx(1 / 2)
+
+
+def test_per_batch_prng_folds_ordinal_and_replays_deterministically(corpus):
+    """Two batches of the SAME request must reveal distinct cell
+    trajectories (the batch ordinal is folded into the bandit key — a
+    reused seed would make concurrent buckets reveal identical cells),
+    while replaying the identical stream on a fresh engine reproduces
+    every score bit-for-bit."""
+    def serve_stream():
+        cfg = _dense_cfg(batch_size=1, flavor="bandit", alpha_ef=0.3,
+                         max_rounds=2, block_docs=4, block_tokens=2,
+                         token_buckets=(8,))
+        eng = RetrievalEngine(corpus.doc_embs, corpus.doc_mask, cfg)
+        cand = np.arange(16, dtype=np.int32)
+        out = []
+        for _ in range(2):                         # two batches, ordinals 0, 1
+            eng.submit(Request(query=corpus.queries[0][:8], k=5,
+                               cand_ids=cand))
+            out += eng.poll()
+        return out
+
+    first = serve_stream()
+    # distinct per-batch trajectories => distinct partial-coverage estimates
+    assert not np.allclose(first[0].topk_scores, first[1].topk_scores)
+    replay = serve_stream()
+    for c0, c1 in zip(first, replay):
+        np.testing.assert_array_equal(c0.topk_scores, c1.topk_scores)
+        np.testing.assert_array_equal(c0.topk_ids, c1.topk_ids)
+        assert c0.reveal_fraction == c1.reveal_fraction
 
 
 def test_admission_leaves_service_headroom(corpus):
