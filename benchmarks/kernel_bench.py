@@ -1,0 +1,84 @@
+"""Kernel-op microbenchmark: tuned vs default block sizes per shape bucket.
+
+Times every kernel op's candidate block configurations (the same grid the
+serving engine's warmup autotune walks) at a handful of representative
+shape buckets, and reports the tuned-vs-default speedup. This is the
+evidence behind ``EngineConfig.autotune``: if the default tiles were
+already optimal everywhere, the tuner would be dead weight.
+
+Each op's first candidate IS its default configuration
+(``repro.kernels.tuning.DEFAULTS``), so the speedup column is
+default-time / best-time measured in the same session.
+
+Registered in ``benchmarks/run.py`` as ``kernels``; standalone:
+
+  PYTHONPATH=src python -m benchmarks.kernel_bench
+
+Emits ``BENCH_kernels.json`` (per-bucket timings + the resulting tuned
+table). Caveat: on CPU the kernels execute in interpret mode, so absolute
+times measure the interpreted tiling loop, not MXU/VMEM behavior — the
+harness exists to exercise the tuner end-to-end and to pin that tuned
+configs are never slower than defaults (they minimize over a set that
+contains the default).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from typing import Dict, List
+
+from repro.kernels import tuning
+from repro.kernels.ops import autotune_op
+
+# (op, dims) buckets: serving-analog shapes kept small enough for the
+# interpret-mode CI lane (grid size drives trace time on CPU).
+BUCKETS: List = [
+    ("maxsim", dict(N=32, T=48, L=256, M=128)),
+    ("maxsim_batch", dict(B=4, N=16, T=16, L=128, M=128)),
+    ("gather_maxsim", dict(B=64, G=4, L=128, M=128, D=256, TQ=256)),
+    ("fused_reveal", dict(B=64, G=4, L=128, M=128, D=256, TQ=256)),
+]
+
+
+def run(quick: bool = False, out: str = "BENCH_kernels.json") -> Dict:
+    buckets = BUCKETS[2:] if quick else BUCKETS
+    rows = []
+    t_all = time.perf_counter()
+    print(f"{'op':14s} {'default_ms':>11s} {'best_ms':>9s} {'speedup':>8s} "
+          f"best_config")
+    for op, dims in buckets:
+        best, timings = autotune_op(op, dims)
+        if not timings:            # REPRO_KERNEL_IMPL=ref: nothing to tune
+            continue
+        default_key = json.dumps(
+            {k: min(v, dims.get({"block_n": "N", "block_t": "T",
+                                 "block_l": "L", "block_b": "B"}[k], v))
+             for k, v in tuning.DEFAULTS[op].items()}, sort_keys=True)
+        t_default = timings.get(default_key, max(timings.values()))
+        t_best = min(timings.values())
+        speedup = t_default / max(t_best, 1e-12)
+        print(f"{op:14s} {t_default*1e3:11.2f} {t_best*1e3:9.2f} "
+              f"{speedup:7.2f}x {best}")
+        rows.append({"op": op, "dims": dims, "best": best,
+                     "default_s": t_default, "best_s": t_best,
+                     "speedup": speedup, "timings_s": timings})
+    result = {
+        "buckets": rows,
+        "table": tuning.table_json(),
+        "wall_s": time.perf_counter() - t_all,
+        # Tuned can never lose to default: the default is in the candidate
+        # set, so min() over candidates is <= the default's own time.
+        "accept": {"tuned_never_slower": all(r["speedup"] >= 1.0 - 1e-9
+                                             for r in rows)},
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {out}")
+    assert all(result["accept"].values()), result["accept"]
+    return result
+
+
+if __name__ == "__main__":
+    sys.exit(0 if run() else 1)

@@ -45,6 +45,8 @@ HARNESSES = {
                 "RetrievalEngine p50/p99 latency + throughput"),
     "reveal": ("benchmarks.reveal_throughput",
                "pooled frontier vs vmapped lockstep reveal engine"),
+    "kernels": ("benchmarks.kernel_bench",
+                "kernel-op block autotuning: tuned vs default tiles"),
     "sharded": ("benchmarks.sharded_serving",
                 "corpus-sharded pooled-bandit serving, 1/4/16 shards"),
 }
@@ -100,9 +102,10 @@ def main(argv=None):
     n_q = 6 if args.quick else 12
 
     from benchmarks import (fig2_tradeoff, fig4_exploration, fig5_ann_bounds,
-                            generalized_recsys, reveal_throughput,
-                            serving_latency, sharded_serving,
-                            table1_efficiency, table2_effectiveness)
+                            generalized_recsys, kernel_bench,
+                            reveal_throughput, serving_latency,
+                            sharded_serving, table1_efficiency,
+                            table2_effectiveness)
     benches = {
         "table1": lambda: table1_efficiency.run(n_docs, n_q),
         "table2": lambda: table2_effectiveness.run(n_docs, n_q),
@@ -117,6 +120,7 @@ def main(argv=None):
             alphas=(0.3,) if args.quick else (0.15, 0.3, 1.0)),
         "reveal": lambda: reveal_throughput.run(
             Q=16 if args.quick else 64, n_docs=min(n_docs, 96)),
+        "kernels": lambda: kernel_bench.run(quick=args.quick),
         # spawns one subprocess per shard count (each pins its own XLA
         # host device count), so it is safe to run from this single-device
         # process.

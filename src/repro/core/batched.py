@@ -54,6 +54,11 @@ class BatchedConfig(NamedTuple):
     # docs. 0 (default) keeps blocks fixed at ``block_docs``, which preserves
     # exact per-query trajectory parity with ``run_batched_bandit``.
     max_block_docs: int = 0
+    # Second growth axis (pooled engine only): when > block_tokens, freed
+    # frontier CELL capacity also widens each surviving slot's token block
+    # up to this many tokens per selected doc. 0 keeps token blocks fixed
+    # at ``block_tokens`` (solo-trajectory parity, as above).
+    max_block_tokens: int = 0
 
 
 def _apply_block_reveal(state: BanditState, doc_idx: jax.Array,

@@ -11,30 +11,46 @@ replaces that with one global ``while_loop`` driving all Q queries at once:
   2. the selected (doc, token) blocks of ALL active queries are pooled into
      a single fixed-capacity frontier: doc ids are query-offset into the
      stacked (Q*N, L, M) candidate tensor, token ids into the stacked
-     (Q*T, M) query-token table, and valid slots are compacted to the front,
-  3. the whole frontier lowers through ONE ``compute_cells`` call — in
-     serving, one ``kernels.ops.gather_maxsim_op`` kernel launch per round
-     instead of Q per-query einsums,
+     (Q*T, M) query-token table,
+  3. the whole frontier lowers through ONE reveal launch per round,
   4. per-query done-masks retire finished queries: their slots drop out of
      the frontier (occupancy is measured), their round counters freeze, and
-     — with ``cfg.max_block_docs > block_docs`` — their freed slots are
-     reallocated to still-active queries, which then reveal bigger blocks
-     per round and converge in fewer global loop trips.
+     — with ``cfg.max_block_docs > block_docs`` (and/or
+     ``cfg.max_block_tokens > block_tokens``) — their freed capacity is
+     reallocated to still-active queries, which then reveal bigger doc
+     and/or token blocks per round and converge in fewer global loop trips.
 
-Statistics live STACKED as one (Q*N, T) ``BanditState`` so the frontier's
-query-offset scatter is the ordinary ``_apply_block_reveal``; per-query
-views (Q, N, T) feed the vmapped interval/selection math.
+Two ROUND BODIES lower step 3, selected by ``fused=`` (default: fused
+unless ``REPRO_KERNEL_IMPL=ref``):
 
-With ``max_block_docs == 0`` (the default) each query's reveal trajectory is
-exactly the solo ``run_batched_bandit`` trajectory under the same key —
-pooling changes WHERE cells are computed (one kernel launch), never WHICH
-cells a query reveals. That invariant is what the frontier-retirement tests
-pin down, and why full-budget top-K parity with the vmapped path is exact.
+* **chain** (the ``ref``-lane oracle): cells come from the abstract
+  ``compute_cells`` gather, and the statistics update is the classic
+  ``_apply_block_reveal`` scatter chain over a stacked (Q*N, T)
+  ``BanditState`` — five separate scatters per round, each an HBM
+  round-trip at serving scale.
+* **fused**: one reveal launch returns the cell values AND the per-row
+  sufficient-statistic deltas (``kernels.ops.fused_reveal_op`` — in-kernel
+  doc gather, VMEM-resident running max, in-kernel stat accumulation), and
+  the whole state update collapses to ONE scatter-min into a sentinel-
+  encoded (Q*N, T) cell-value table (``_UNREV`` marks unrevealed; the
+  revealed mask is derived by comparison, fusing into the interval math)
+  plus ONE 3-column scatter-add of the (n, total, total_sq) statistics.
+  When no slot growth is configured the frontier also skips compaction —
+  capacity equals the selection width, so the flat (Q*W) selections feed
+  the launch directly (dead slots ride along as masked no-ops).
+
+Both bodies make bit-identical per-query reveal decisions from identical
+statistics: the fused body is a re-plumbing of WHERE values and statistics
+are computed, never WHICH cells a query reveals. That invariant is what the
+chain-vs-fused parity tests pin down, on top of the existing guarantee that
+with ``max_block_docs == 0`` each query's trajectory is exactly the solo
+``run_batched_bandit`` trajectory under the same key.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+import os
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,12 +62,55 @@ from repro.core.batched import (BatchedConfig, _apply_block_reveal,
 from repro.core.state import BanditState
 
 _NEG = jnp.float32(-3e38)
+# Fused-round cell table sentinel: unrevealed cells hold _UNREV; anything
+# below _REV_THRESH is a revealed value. Real MaxSim values are bounded far
+# below 1.5e38 (the all-masked-document sentinel is -3e38, also below).
+_UNREV = jnp.float32(3e38)
+_REV_THRESH = jnp.float32(1.5e38)
 
 # Cell contract (pooled): compute_cells(flat_doc (S,), flat_tok (S, G))
 # -> (S, G), where flat_doc indexes the stacked (Q*N, ...) doc axis and
 # flat_tok the stacked (Q*T, ...) query-token axis (doc q*N+i pairs only
 # with tokens q*T+t of the SAME query q). This is exactly the contract
-# ``kernels.ops.gather_maxsim_op`` lowers on the stacked tensors.
+# ``kernels.ops.gather_maxsim_op`` lowers on the stacked tensors. The
+# fused round extends it: compute_cells_fused(flat_doc, flat_tok,
+# new_mask) -> (vals (S, G), stats (S, 3)) with stats rows
+# [d_count, d_total, d_total_sq] summed over new_mask cells — the
+# ``kernels.ops.fused_reveal_op`` contract.
+
+
+def _auto_fused() -> bool:
+    """Round-body default: the fused Pallas round everywhere except the
+    ``REPRO_KERNEL_IMPL=ref`` lane, which keeps the unfused scatter chain
+    as the oracle (the env var is ``kernels.ops._impl``'s dispatch knob;
+    core reads it directly rather than importing the kernels layer)."""
+    return os.environ.get("REPRO_KERNEL_IMPL", "auto") != "ref"
+
+
+def _with_stats(compute_cells: Callable) -> Callable:
+    """Adapt a plain gather-style cell source to the fused-round contract
+    by deriving the statistic deltas in XLA (the reductions fuse with the
+    gather; kernel-backed sources compute them in-kernel instead)."""
+
+    def cells_fused(flat_doc, flat_tok, new_mask):
+        v = compute_cells(flat_doc, flat_tok)
+        nf = new_mask.astype(jnp.float32)
+        vm = jnp.where(new_mask, v, 0.0)
+        return v, jnp.stack([jnp.sum(nf, axis=-1), jnp.sum(vm, axis=-1),
+                             jnp.sum(vm * v, axis=-1)], axis=-1)
+
+    return cells_fused
+
+
+class _FusedState(NamedTuple):
+    """Fused-round carry: the five BanditState statistics collapse to one
+    sentinel-encoded cell table + one packed (n, total, total_sq) block."""
+
+    cellvals: jax.Array    # (Q*N, T) f32 — _UNREV where unrevealed
+    stats: jax.Array       # (Q*N, 3) f32 — [n, total, total_sq]
+    key: jax.Array         # (Q,) per-query PRNG keys
+    rounds: jax.Array      # (Q,) i32 — frozen at retirement
+    done: jax.Array        # (Q,) bool
 
 
 class PooledResult(NamedTuple):
@@ -83,17 +142,23 @@ def run_pooled_bandit(
     cfg: BatchedConfig,
     *,
     doc_mask: Optional[jax.Array] = None,   # (Q, N) bool valid candidates
+    compute_cells_fused=None,    # fused contract; derived when omitted
+    fused: Optional[bool] = None,           # None => _auto_fused()
 ) -> PooledResult:
+    if fused is None:
+        fused = _auto_fused()
     Q, N, T = a.shape
     k = cfg.k
     G = cfg.block_tokens
     half = max(cfg.block_docs // 2, 1)
-    # Selection width per query: fixed (== solo) unless growth is enabled.
-    # Clamped to N: a query can never hold more than its N candidate rows,
-    # and an unclamped width would surface as an opaque top_k shape error
-    # (reachable from EngineConfig.max_block_docs alone on small buckets).
+    # Selection widths per query: fixed (== solo) unless growth is enabled.
+    # Clamped to N / T: a query can never hold more than its N candidate
+    # rows or T tokens, and an unclamped width would surface as an opaque
+    # top_k shape error (reachable from EngineConfig alone on small
+    # buckets).
     half_w = min(max(cfg.max_block_docs // 2, half), max(N, 1))
     W = 2 * half_w                           # per-query selection rows
+    G_cap = min(max(cfg.max_block_tokens, G), max(T, 1))  # token sel width
     F = Q * 2 * half                         # frontier capacity (slots)
     max_rounds = cfg.max_rounds
     if max_rounds <= 0:
@@ -110,31 +175,11 @@ def run_pooled_bandit(
     split2 = jax.vmap(lambda kk: tuple(jax.random.split(kk)))
     state_keys, k_init = split2(keys)
 
-    state = BanditState(
-        values=jnp.zeros((Q * N, T), jnp.float32),
-        revealed=(~doc_mask[:, :, None]).reshape(Q * N, 1)
-        & jnp.ones((Q * N, T), jnp.bool_),
-        n=jnp.zeros((Q * N,), jnp.int32),
-        total=jnp.zeros((Q * N,), jnp.float32),
-        total_sq=jnp.zeros((Q * N,), jnp.float32),
-        key=state_keys,                     # (Q,) keys — per-query streams
-        rounds=jnp.zeros((Q,), jnp.int32),  # per-query round counters
-        # Queries with NO valid candidate start retired (rounds stay 0):
-        # routine on a sharded corpus, where a query's candidates may all be
-        # resident elsewhere — an empty query must not hold frontier slots
-        # or inflate the per-shard round/occupancy accounting.
-        done=~jnp.any(doc_mask, axis=1),    # per-query retirement flags
-    )
-
     # Init reveal (paper footnote 2): one random cell per doc, all queries
-    # pooled into a single (Q*N, 1) compute_cells call.
+    # pooled into a single (Q*N, 1) reveal.
     t0 = jax.vmap(lambda kk: jax.random.randint(kk, (N,), 0, T))(k_init)
     all_docs = jnp.arange(Q * N, dtype=jnp.int32)
     flat_t0 = t0.reshape(Q * N, 1)
-    init_vals = compute_cells(all_docs,
-                              flat_t0 + (all_docs // N * T)[:, None])
-    state = _apply_block_reveal(state, all_docs, flat_t0, init_vals,
-                                doc_mask.reshape(Q * N, 1))
 
     iv_kwargs = dict(T=T, N=N, delta=cfg.delta, alpha_ef=cfg.alpha_ef,
                      c=cfg.radius_c, bias_kappa=cfg.bias_kappa)
@@ -149,128 +194,261 @@ def run_pooled_bandit(
             ucb=jnp.where(mask_q, iv.ucb, _NEG),
         )
 
+    select_q = functools.partial(_round_select, k=k, epsilon=cfg.epsilon,
+                                 half=half_w, G=G_cap)
+
+    def select_round(st_key, iv, revealed_q, n_q, active, *, compact):
+        """Shared round front-end: per-query LUCB selection, capacity
+        allotment over both growth axes, and frontier pooling. Returns the
+        raw selection (for key/stop bookkeeping), the pooled (doc, tok,
+        cell) arrays, the per-query no-progress flags, and this round's
+        frontier occupancy."""
+        sel = jax.vmap(select_q)(st_key, iv, revealed_q, n_q, a, b, doc_mask)
+
+        # Capacity allotment: freed DOC slots are split evenly among active
+        # queries (never below the solo width, never above the selection
+        # width), and remaining CELL capacity (F*G cells per round) widens
+        # each surviving slot's token block — 2-D continuous batching.
+        n_active = jnp.maximum(jnp.sum(active.astype(jnp.int32)), 1)
+        per_group = jnp.clip(F // (2 * n_active), half, half_w)
+        per_tok = jnp.clip((F * G) // (n_active * 2 * per_group), G, G_cap)
+        grp_en = jnp.arange(half_w, dtype=jnp.int32) < per_group
+        doc_en = jnp.concatenate([grp_en, grp_en])              # (W,)
+        tok_en = jnp.arange(G_cap, dtype=jnp.int32) < per_tok   # (G_cap,)
+
+        live = active & ~sel.stop                               # (Q,)
+        sel_en = (sel.cell_ok & doc_en[None, :, None]
+                  & tok_en[None, None, :])                      # (Q, W, G_cap)
+        cell_en = sel_en & live[:, None, None]
+        no_progress = ~jnp.any(sel_en, axis=(1, 2))
+
+        flat_doc = (sel.doc_idx + q_doc_off).reshape(Q * W)
+        flat_tok = sel.tok_idx.reshape(Q * W, G_cap)
+        flat_cell = cell_en.reshape(Q * W, G_cap)
+        slot_live = jnp.any(flat_cell, axis=-1)                 # (Q*W,)
+        if compact:
+            # Pool + compact: scatter live slots to the frontier front; the
+            # overflow index F is dropped, so retired queries' slots vanish
+            # and the launch batch stays at the fixed capacity F < Q*W.
+            pos = jnp.cumsum(slot_live.astype(jnp.int32)) - 1
+            dump = jnp.where(slot_live, pos, F)
+            f_doc = jnp.zeros((F,), jnp.int32).at[dump].set(flat_doc,
+                                                            mode="drop")
+            f_tok = jnp.zeros((F, G_cap), jnp.int32).at[dump].set(
+                flat_tok, mode="drop")
+            f_cell = jnp.zeros((F, G_cap), jnp.bool_).at[dump].set(
+                flat_cell, mode="drop")
+        else:
+            # No growth => capacity == selection width: feed the flat
+            # selections straight to the launch (dead slots are masked
+            # no-ops) and skip the cumsum + three compaction scatters.
+            f_doc, f_tok, f_cell = flat_doc, flat_tok, flat_cell
+        occ = jnp.sum(slot_live.astype(jnp.float32)) / jnp.float32(F)
+        return sel, f_doc, f_tok, f_cell, no_progress, occ
+
+    def finalize(n, total, total_sq, revealed, rounds, trips, occ_sum):
+        iv = jax.vmap(get_intervals_q)(
+            n.reshape(Q, N), total.reshape(Q, N), total_sq.reshape(Q, N),
+            revealed.reshape(Q, N, T), a, b, doc_mask)
+        tk = jax.vmap(functools.partial(_topk_mask, k=k))(iv.s_hat)
+        topk_idx = tk[1]
+        sep = jax.vmap(lambda iv_q, m_q: _select_arms(iv_q, _topk_mask(
+            iv_q.s_hat, k)[0], m_q))(iv, doc_mask)
+        separated = jax.vmap(
+            lambda iv_q, ip, im: iv_q.lcb[ip] >= iv_q.ucb[im])(
+            iv, sep[0], sep[1])
+
+        rev_q = revealed.reshape(Q, N, T) & doc_mask[:, :, None]
+        n_rev = jnp.sum(rev_q, axis=(1, 2))
+        n_cells = jnp.maximum(jnp.sum(doc_mask, axis=1) * T, 1)
+        total_rounds = jnp.sum(rounds)
+        return PooledResult(
+            topk=topk_idx,
+            s_hat=iv.s_hat,
+            coverage=n_rev.astype(jnp.float32) / n_cells.astype(jnp.float32),
+            reveals=n_rev.astype(jnp.int32),
+            rounds=rounds,
+            separated=separated,
+            revealed=rev_q,
+            trips=trips,
+            total_rounds=total_rounds,
+            lockstep_waste=Q * trips - total_rounds,
+            occupancy=occ_sum / jnp.maximum(trips.astype(jnp.float32), 1.0),
+        )
+
+    def cond(carry):
+        st, _, _ = carry
+        return jnp.any((~st.done) & (st.rounds < max_rounds))
+
+    # Queries with NO valid candidate start retired (rounds stay 0):
+    # routine on a sharded corpus, where a query's candidates may all be
+    # resident elsewhere — an empty query must not hold frontier slots
+    # or inflate the per-shard round/occupancy accounting.
+    done0 = ~jnp.any(doc_mask, axis=1)
+    zero_trip = (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
+
+    if fused:
+        cells_fused = (compute_cells_fused if compute_cells_fused is not None
+                       else _with_stats(compute_cells))
+        flat_mask = doc_mask.reshape(Q * N)
+
+        new0 = flat_mask[:, None]                               # (Q*N, 1)
+        vals0, stats0 = cells_fused(all_docs,
+                                    flat_t0 + (all_docs // N * T)[:, None],
+                                    new0)
+        cellvals0 = jnp.where(flat_mask[:, None],
+                              jnp.full((Q * N, T), _UNREV), 0.0)
+        cellvals0 = cellvals0.at[all_docs[:, None], flat_t0].min(
+            jnp.where(new0, vals0, _UNREV))
+        state = _FusedState(cellvals=cellvals0, stats=stats0,
+                            key=state_keys,
+                            rounds=jnp.zeros((Q,), jnp.int32), done=done0)
+
+        def body(carry):
+            st, trips, occ_sum = carry
+            active = (~st.done) & (st.rounds < max_rounds)       # (Q,)
+            revealed = st.cellvals < _REV_THRESH                 # (Q*N, T)
+            n_q = st.stats[:, 0].reshape(Q, N)
+            iv = jax.vmap(get_intervals_q)(
+                n_q, st.stats[:, 1].reshape(Q, N),
+                st.stats[:, 2].reshape(Q, N), revealed.reshape(Q, N, T),
+                a, b, doc_mask)
+            sel, f_doc, f_tok, f_cell, no_progress, occ = select_round(
+                st.key, iv, revealed.reshape(Q, N, T), n_q, active,
+                compact=half_w > half)
+
+            # ONE fused reveal launch + a two-scatter state update. No
+            # already-revealed re-check here: the selection policy only
+            # ever emits unrevealed cells (``_round_select`` masks width
+            # and gumbel draws to _NEG on revealed cells and ``cell_ok``
+            # thresholds them out), so ``f_cell`` IS the fresh-cell mask.
+            # The chain oracle keeps the defensive re-check; the parity
+            # tests (identical reveal counts and trajectories) pin that
+            # the invariant holds.
+            new = f_cell
+            vals, dstats = cells_fused(
+                f_doc, f_tok + (f_doc // N * T)[:, None], new)
+            cellvals = st.cellvals.at[f_doc[:, None], f_tok].min(
+                jnp.where(new, vals, _UNREV))
+            stats = st.stats.at[f_doc].add(dstats)
+
+            nxt = _FusedState(
+                cellvals=cellvals, stats=stats, key=sel.key,
+                rounds=st.rounds + active.astype(jnp.int32),
+                done=st.done | (active & (sel.stop | no_progress)))
+            return nxt, trips + 1, occ_sum + occ
+
+        state, trips, occ_sum = jax.lax.while_loop(
+            cond, body, (state, *zero_trip))
+        return finalize(state.stats[:, 0], state.stats[:, 1],
+                        state.stats[:, 2], state.cellvals < _REV_THRESH,
+                        state.rounds, trips, occ_sum)
+
+    # ------------------------------------------------------------------
+    # Chain round body — the REPRO_KERNEL_IMPL=ref oracle: abstract cell
+    # gather + the classic five-scatter _apply_block_reveal update over a
+    # stacked BanditState. Kept bit-identical to the pre-fusion engine.
+    # ------------------------------------------------------------------
+    state = BanditState(
+        values=jnp.zeros((Q * N, T), jnp.float32),
+        revealed=(~doc_mask[:, :, None]).reshape(Q * N, 1)
+        & jnp.ones((Q * N, T), jnp.bool_),
+        n=jnp.zeros((Q * N,), jnp.int32),
+        total=jnp.zeros((Q * N,), jnp.float32),
+        total_sq=jnp.zeros((Q * N,), jnp.float32),
+        key=state_keys,                     # (Q,) keys — per-query streams
+        rounds=jnp.zeros((Q,), jnp.int32),  # per-query round counters
+        done=done0,                         # per-query retirement flags
+    )
+
+    init_vals = compute_cells(all_docs,
+                              flat_t0 + (all_docs // N * T)[:, None])
+    state = _apply_block_reveal(state, all_docs, flat_t0, init_vals,
+                                doc_mask.reshape(Q * N, 1))
+
     def per_query_intervals(st: BanditState) -> B.Intervals:
         return jax.vmap(get_intervals_q)(
             st.n.reshape(Q, N), st.total.reshape(Q, N),
             st.total_sq.reshape(Q, N), st.revealed.reshape(Q, N, T),
             a, b, doc_mask)
 
-    select_q = functools.partial(_round_select, k=k, epsilon=cfg.epsilon,
-                                 half=half_w, G=G)
-
-    def cond(carry):
-        st, _, _ = carry
-        return jnp.any((~st.done) & (st.rounds < max_rounds))
-
     def body(carry):
         st, trips, occ_sum = carry
         active = (~st.done) & (st.rounds < max_rounds)          # (Q,)
 
         iv = per_query_intervals(st)
-        sel = jax.vmap(select_q)(st.key, iv, st.revealed.reshape(Q, N, T),
-                                 st.n.reshape(Q, N), a, b, doc_mask)
+        sel, f_doc, f_tok, f_cell, no_progress, occ = select_round(
+            st.key, iv, st.revealed.reshape(Q, N, T), st.n.reshape(Q, N),
+            active, compact=True)
 
-        # Slot allotment: with growth enabled, freed capacity is split
-        # evenly among active queries (never below the solo width, never
-        # above the selection width) — continuous batching for rounds.
-        n_active = jnp.maximum(jnp.sum(active.astype(jnp.int32)), 1)
-        per_group = jnp.clip(F // (2 * n_active), half, half_w)
-        grp_en = jnp.arange(half_w, dtype=jnp.int32) < per_group
-        enabled = jnp.concatenate([grp_en, grp_en])             # (W,)
-
-        live = active & ~sel.stop                               # (Q,)
-        cell_en = (sel.cell_ok & enabled[None, :, None]
-                   & live[:, None, None])                       # (Q, W, G)
-
-        # Pool + compact: scatter live slots to the frontier front; the
-        # overflow index F is dropped, so retired queries simply vanish.
-        flat_doc = (sel.doc_idx + q_doc_off).reshape(Q * W)
-        flat_tok = sel.tok_idx.reshape(Q * W, G)
-        flat_cell = cell_en.reshape(Q * W, G)
-        slot_live = jnp.any(flat_cell, axis=-1)                 # (Q*W,)
-        pos = jnp.cumsum(slot_live.astype(jnp.int32)) - 1
-        dump = jnp.where(slot_live, pos, F)
-        f_doc = jnp.zeros((F,), jnp.int32).at[dump].set(flat_doc,
-                                                        mode="drop")
-        f_tok = jnp.zeros((F, G), jnp.int32).at[dump].set(flat_tok,
-                                                          mode="drop")
-        f_cell = jnp.zeros((F, G), jnp.bool_).at[dump].set(flat_cell,
-                                                           mode="drop")
-
-        # ONE pooled reveal for the whole batch round.
+        # ONE pooled reveal for the whole batch round, then the scatter
+        # chain into the stacked statistics.
         vals = compute_cells(f_doc, f_tok + (f_doc // N * T)[:, None])
         nxt = _apply_block_reveal(st, f_doc, f_tok, vals, f_cell)
 
         # Per-query bookkeeping — mirrors the solo loop's cond/stop exactly:
         # a query that separates this round reveals nothing (its slots were
         # masked out of the frontier) and retires with rounds+1.
-        no_progress = ~jnp.any(sel.cell_ok & enabled[None, :, None],
-                               axis=(1, 2))
         nxt = nxt._replace(
             key=sel.key,
             rounds=st.rounds + active.astype(jnp.int32),
             done=st.done | (active & (sel.stop | no_progress)),
         )
-        occ = jnp.sum(slot_live.astype(jnp.float32)) / jnp.float32(F)
         return nxt, trips + 1, occ_sum + occ
 
     state, trips, occ_sum = jax.lax.while_loop(
-        cond, body, (state, jnp.zeros((), jnp.int32),
-                     jnp.zeros((), jnp.float32)))
+        cond, body, (state, *zero_trip))
+    return finalize(state.n, state.total, state.total_sq, state.revealed,
+                    state.rounds, trips, occ_sum)
 
-    iv = per_query_intervals(state)
-    tk = jax.vmap(functools.partial(_topk_mask, k=k))(iv.s_hat)
-    topk_idx = tk[1]
-    sep = jax.vmap(lambda iv_q, m_q: _select_arms(iv_q, _topk_mask(
-        iv_q.s_hat, k)[0], m_q))(iv, doc_mask)
-    separated = jax.vmap(lambda iv_q, ip, im: iv_q.lcb[ip] >= iv_q.ucb[im])(
-        iv, sep[0], sep[1])
 
-    rev_q = state.revealed.reshape(Q, N, T) & doc_mask[:, :, None]
-    n_rev = jnp.sum(rev_q, axis=(1, 2))
-    n_cells = jnp.maximum(jnp.sum(doc_mask, axis=1) * T, 1)
-    total_rounds = jnp.sum(state.rounds)
-    return PooledResult(
-        topk=topk_idx,
-        s_hat=iv.s_hat,
-        coverage=n_rev.astype(jnp.float32) / n_cells.astype(jnp.float32),
-        reveals=n_rev.astype(jnp.int32),
-        rounds=state.rounds,
-        separated=separated,
-        revealed=rev_q,
-        trips=trips,
-        total_rounds=total_rounds,
-        lockstep_waste=Q * trips - total_rounds,
-        occupancy=occ_sum / jnp.maximum(trips.astype(jnp.float32), 1.0),
-    )
+def run_pooled_oracle(
+    h_full: jax.Array, a: jax.Array, b: jax.Array, keys: jax.Array, *,
+    fused: Optional[bool] = None, **kw,
+) -> PooledResult:
+    """Oracle-mode pooled engine: cells come from a precomputed (Q, N, T)
+    H tensor. The flat token ids are mapped back to each slot's own query
+    (doc q*N+i only ever pairs with tokens q*T+t), mirroring the stacked
+    gather_maxsim contract. ``fused`` picks the round body (None = auto:
+    fused unless REPRO_KERNEL_IMPL=ref); both bodies reveal identical
+    cells.
+
+    ``fused=None`` is resolved HERE, outside the jit boundary: were it a
+    static arg resolved inside the trace, the compiled cache entry for
+    ``None`` would pin whichever REPRO_KERNEL_IMPL was set at first call
+    and silently serve the wrong round body after a same-process env
+    change (the monkeypatch pattern the kernel tests rely on)."""
+    return _pooled_oracle_jit(h_full, a, b, keys,
+                              fused=_auto_fused() if fused is None
+                              else fused, **kw)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("k", "delta", "alpha_ef", "epsilon", "radius_c",
                      "block_docs", "block_tokens", "max_rounds",
-                     "bias_kappa", "max_block_docs"),
+                     "bias_kappa", "max_block_docs", "max_block_tokens",
+                     "fused"),
 )
-def run_pooled_oracle(
+def _pooled_oracle_jit(
     h_full: jax.Array, a: jax.Array, b: jax.Array, keys: jax.Array, *,
-    k: int, delta: float = 0.01, alpha_ef: float = 0.3, epsilon: float = 0.1,
-    radius_c: float = 1.0, bias_kappa: float = 0.0, block_docs: int = 8,
-    block_tokens: int = 8, max_rounds: int = -1, max_block_docs: int = 0,
+    k: int, fused: bool, delta: float = 0.01, alpha_ef: float = 0.3,
+    epsilon: float = 0.1, radius_c: float = 1.0, bias_kappa: float = 0.0,
+    block_docs: int = 8, block_tokens: int = 8, max_rounds: int = -1,
+    max_block_docs: int = 0, max_block_tokens: int = 0,
     doc_mask: Optional[jax.Array] = None,
 ) -> PooledResult:
-    """Oracle-mode pooled engine: cells come from a precomputed (Q, N, T)
-    H tensor. The flat token ids are mapped back to each slot's own query
-    (doc q*N+i only ever pairs with tokens q*T+t), mirroring the stacked
-    gather_maxsim contract."""
     Q, N, T = h_full.shape
     cfg = BatchedConfig(k=k, delta=delta, alpha_ef=alpha_ef, epsilon=epsilon,
                         radius_c=radius_c, bias_kappa=bias_kappa,
                         block_docs=block_docs, block_tokens=block_tokens,
-                        max_rounds=max_rounds, max_block_docs=max_block_docs)
+                        max_rounds=max_rounds, max_block_docs=max_block_docs,
+                        max_block_tokens=max_block_tokens)
     h_flat = h_full.reshape(Q * N, T)
 
     def cells(flat_doc: jax.Array, flat_tok: jax.Array) -> jax.Array:
         t_local = flat_tok - (flat_doc // N * T)[:, None]
         return h_flat[flat_doc[:, None], jnp.clip(t_local, 0, T - 1)]
 
-    return run_pooled_bandit(cells, a, b, keys, cfg, doc_mask=doc_mask)
+    return run_pooled_bandit(cells, a, b, keys, cfg, doc_mask=doc_mask,
+                             fused=fused)

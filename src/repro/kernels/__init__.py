@@ -3,10 +3,14 @@
 maxsim        — dense exact-reranking kernel (full H matrix)
 masked_maxsim — tile-granular pruning (pl.when skips MXU work per tile)
 gather_maxsim — irregular reveal sets for the block-synchronous bandit
+reveal        — fused reveal round: in-kernel doc gather + MaxSim +
+                sufficient-statistic accumulation (one launch per round)
+tuning        — per-shape-bucket block-size autotuning (JSON-persistable)
 ref           — pure-jnp oracles; ops — padded/jitted public wrappers
 """
-from repro.kernels.ops import (gather_maxsim_op, masked_maxsim_op, maxsim_op,
+from repro.kernels.ops import (autotune_op, fused_reveal_op,
+                               gather_maxsim_op, masked_maxsim_op, maxsim_op,
                                maxsim_scores_op)
 
-__all__ = ["gather_maxsim_op", "masked_maxsim_op", "maxsim_op",
-           "maxsim_scores_op"]
+__all__ = ["autotune_op", "fused_reveal_op", "gather_maxsim_op",
+           "masked_maxsim_op", "maxsim_op", "maxsim_scores_op"]

@@ -3,20 +3,26 @@
 Handles (a) padding to tile multiples, (b) platform dispatch: real Pallas on
 TPU, ``interpret=True`` on CPU (executes the kernel body in Python — used to
 validate kernels in this container), and pure-jnp reference as the escape
-hatch (``REPRO_KERNEL_IMPL=ref``).
+hatch (``REPRO_KERNEL_IMPL=ref``), and (c) block-size resolution: an
+explicit ``block_*`` argument wins, then a tuned per-shape-bucket entry
+(:mod:`repro.kernels.tuning`), then the op's default. Embedding/query
+inputs may be ``bfloat16`` — every dispatch target accumulates in f32 and
+returns f32.
 """
 from __future__ import annotations
 
 import functools
 import os
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ref, tuning
 from repro.kernels.maxsim import maxsim
 from repro.kernels.masked_maxsim import masked_maxsim
 from repro.kernels.gather_maxsim import gather_maxsim
+from repro.kernels.reveal import STATS_USED, fused_reveal
 
 
 def _impl() -> str:
@@ -25,6 +31,19 @@ def _impl() -> str:
         return env
     platform = jax.default_backend()
     return "pallas" if platform == "tpu" else "interpret"
+
+
+def _resolve(op: str, dims: Dict[str, int], **overrides) -> Dict[str, int]:
+    """Block-size resolution: explicit argument > tuned bucket > default.
+
+    ``None`` and 0 both defer (0 kept for back-compat with the old
+    ``block_t=0`` "use full axis" convention, which is retired — the
+    resolved default caps the tile instead of growing it to the axis)."""
+    cfg = tuning.lookup(op, dims)
+    for k, v in overrides.items():
+        if v:
+            cfg[k] = v
+    return cfg
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int, value=0):
@@ -38,19 +57,28 @@ def _pad_to(x: jax.Array, axis: int, mult: int, value=0):
 
 
 def maxsim_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
-              queries: jax.Array, *, block_n: int = 8, block_t: int = 0,
-              block_l: int = 256) -> jax.Array:
-    """Dense MaxSim matrix H (N, T) — pads, dispatches, slices back."""
+              queries: jax.Array, *, block_n: Optional[int] = None,
+              block_t: Optional[int] = None,
+              block_l: Optional[int] = None) -> jax.Array:
+    """Dense MaxSim matrix H (N, T) — pads, dispatches, slices back.
+
+    The query-token tile defaults to ``min(128, T)`` and T is padded up to
+    it: the old ``block_t=0 -> bt = T`` default made an unbucketed large-T
+    call blow the VMEM tile budget documented in ``kernels/maxsim.py``
+    ((BN, BL, BT) similarity tile grows linearly in T).
+    """
     impl = _impl()
     if impl == "ref":
         return ref.maxsim_ref(doc_embs, doc_tok_mask, queries)
     N, L, M = doc_embs.shape
     T = queries.shape[0]
-    bn = min(block_n, max(N, 1))
-    bl = min(block_l, max(L, 1))
+    cfg = _resolve("maxsim", dict(N=N, T=T, L=L, M=M), block_n=block_n,
+                   block_t=block_t, block_l=block_l)
+    bn = min(cfg["block_n"], max(N, 1))
+    bt = min(cfg["block_t"], max(T, 1))
+    bl = min(cfg["block_l"], max(L, 1))
     e = _pad_to(_pad_to(doc_embs, 0, bn), 1, bl)
     m = _pad_to(_pad_to(doc_tok_mask, 0, bn), 1, bl)  # pads False => masked
-    bt = block_t if block_t > 0 else queries.shape[0]
     q = _pad_to(queries, 0, bt)
     h = maxsim(e, m, q, block_n=bn, block_t=bt, block_l=bl,
                interpret=(impl == "interpret"))
@@ -60,14 +88,19 @@ def maxsim_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
 def masked_maxsim_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
                      queries: jax.Array, tile_mask: jax.Array, *,
                      block_n: int = 8, block_t: int = 8,
-                     block_l: int = 256) -> jax.Array:
+                     block_l: Optional[int] = None) -> jax.Array:
+    """Tile-masked MaxSim. ``block_n``/``block_t`` are SEMANTIC here — they
+    define the (doc, token) tile grid ``tile_mask`` is expressed in — so
+    only the L tile is tunable."""
     impl = _impl()
     if impl == "ref":
         return ref.masked_maxsim_ref(doc_embs, doc_tok_mask, queries,
                                      tile_mask, block_n, block_t)
     N, L, M = doc_embs.shape
     T = queries.shape[0]
-    bn, bt, bl = block_n, block_t, min(block_l, max(L, 1))
+    cfg = _resolve("masked_maxsim", dict(N=N, T=T, L=L, M=M),
+                   block_l=block_l)
+    bn, bt, bl = block_n, block_t, min(cfg["block_l"], max(L, 1))
     e = _pad_to(_pad_to(doc_embs, 0, bn), 1, bl)
     m = _pad_to(_pad_to(doc_tok_mask, 0, bn), 1, bl)
     q = _pad_to(queries, 0, bt)
@@ -82,8 +115,8 @@ def masked_maxsim_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
 
 def gather_maxsim_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
                      queries: jax.Array, doc_idx: jax.Array,
-                     tok_idx: jax.Array, *, block_b: int = 8,
-                     block_l: int = 256) -> jax.Array:
+                     tok_idx: jax.Array, *, block_b: Optional[int] = None,
+                     block_l: Optional[int] = None) -> jax.Array:
     """Gathered MaxSim for the bandit reveal: out[s, g] = max_j
     <E[doc_idx[s], j], Q[tok_idx[s, g]]> over valid j.
 
@@ -109,9 +142,12 @@ def gather_maxsim_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
         return ref.gather_maxsim_ref(doc_embs, doc_tok_mask, queries,
                                      doc_idx, tok_idx)
     B, G = tok_idx.shape
-    L = doc_embs.shape[1]
-    bb = min(block_b, max(B, 1))
-    bl = min(block_l, max(L, 1))
+    D, L, M = doc_embs.shape
+    cfg = _resolve("gather_maxsim",
+                   dict(B=B, G=G, L=L, M=M, D=D, TQ=queries.shape[0]),
+                   block_b=block_b, block_l=block_l)
+    bb = min(cfg["block_b"], max(B, 1))
+    bl = min(cfg["block_l"], max(L, 1))
     e = _pad_to(doc_embs, 1, bl)
     m = _pad_to(doc_tok_mask, 1, bl)
     pad_b = (-B) % bb
@@ -124,9 +160,68 @@ def gather_maxsim_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
     return out[:B]
 
 
+def fused_reveal_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
+                    queries: jax.Array, doc_idx: jax.Array,
+                    tok_idx: jax.Array, new_mask: jax.Array, *,
+                    block_b: Optional[int] = None,
+                    block_l: Optional[int] = None):
+    """Fused reveal round (``kernels.reveal``): gathered MaxSim values for
+    the frontier's selected cells PLUS the per-row sufficient-statistic
+    deltas ``core.bounds`` consumes, in one launch.
+
+    doc_idx (F,), tok_idx (F, G), new_mask (F, G) ->
+      (vals (F, G) f32, stats (F, 3) f32 = [d_count, d_total, d_total_sq]).
+
+    Same index contract as :func:`gather_maxsim_op` (the pooled frontier's
+    query-offset ids into stacked tensors); same pad contract on F —
+    replicated last row, but with ``new_mask`` padded False so pad rows
+    contribute zero statistics even before they are sliced off. On TPU the
+    doc gather happens INSIDE the kernel (scalar-prefetched row indices),
+    so the (F, L, M) gathered intermediate never exists in HBM; interpret
+    mode pre-gathers at the XLA level and runs the same kernel body with
+    wider row blocks (trace time scales with grid size on CPU).
+    """
+    if doc_idx.shape[0] != tok_idx.shape[0] \
+            or tok_idx.shape != new_mask.shape:
+        raise ValueError(
+            f"fused_reveal_op: doc_idx/tok_idx/new_mask rows disagree "
+            f"({doc_idx.shape[0]}, {tok_idx.shape}, {new_mask.shape}) — "
+            "every selection row needs one doc id and matching (G,) token "
+            "and freshness columns")
+    impl = _impl()
+    if impl == "ref":
+        return ref.fused_reveal_ref(doc_embs, doc_tok_mask, queries,
+                                    doc_idx, tok_idx, new_mask)
+    B, G = tok_idx.shape
+    D, L, M = doc_embs.shape
+    gather = impl == "pallas"
+    cfg = _resolve("fused_reveal",
+                   dict(B=B, G=G, L=L, M=M, D=D, TQ=queries.shape[0]),
+                   block_b=block_b, block_l=block_l)
+    bb = 1 if gather else min(cfg["block_b"], max(B, 1))
+    bl = min(cfg["block_l"], max(L, 1))
+    e = _pad_to(doc_embs, 1, bl)
+    m = _pad_to(doc_tok_mask, 1, bl)
+    pad_b = (-B) % bb
+    di = jnp.concatenate([doc_idx,
+                          jnp.broadcast_to(doc_idx[-1:], (pad_b,))])
+    ti = jnp.concatenate([tok_idx,
+                          jnp.broadcast_to(tok_idx[-1:], (pad_b, G))])
+    nm = jnp.concatenate([new_mask,
+                          jnp.zeros((pad_b, G), jnp.bool_)])
+    q_sel = jnp.take(queries, ti, axis=0)              # (B+pad, G, M)
+    if not gather:
+        e = jnp.take(e, di, axis=0)                    # (B+pad, L, M)
+        m = jnp.take(m, di, axis=0)
+    vals, stats = fused_reveal(e, m, q_sel, nm, di, block_b=bb, block_l=bl,
+                               gather=gather, interpret=(impl == "interpret"))
+    return vals[:B], stats[:B, :STATS_USED]
+
+
 def maxsim_batch_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
-                    queries: jax.Array, *, block_n: int = 8,
-                    block_t: int = 8, block_l: int = 128) -> jax.Array:
+                    queries: jax.Array, *, block_n: Optional[int] = None,
+                    block_t: Optional[int] = None,
+                    block_l: Optional[int] = None) -> jax.Array:
     """Per-query-batched MaxSim H (B, N, T) — the dense serving scorer.
 
     Every dispatch target streams document tokens instead of materializing
@@ -137,14 +232,16 @@ def maxsim_batch_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
     sentinel in every mode; callers zero them as needed.
     """
     impl = _impl()
-    if impl == "ref":
-        return ref.maxsim_batch_ref(doc_embs, doc_tok_mask, queries,
-                                    block_l=block_l)
     Bq, N, L, M = doc_embs.shape
     T = queries.shape[1]
-    bn = min(block_n, max(N, 1))
-    bt = min(block_t, max(T, 1))
-    bl = min(block_l, max(L, 1))
+    cfg = _resolve("maxsim_batch", dict(B=Bq, N=N, T=T, L=L, M=M),
+                   block_n=block_n, block_t=block_t, block_l=block_l)
+    if impl == "ref":
+        return ref.maxsim_batch_ref(doc_embs, doc_tok_mask, queries,
+                                    block_l=cfg["block_l"])
+    bn = min(cfg["block_n"], max(N, 1))
+    bt = min(cfg["block_t"], max(T, 1))
+    bl = min(cfg["block_l"], max(L, 1))
     e = _pad_to(_pad_to(doc_embs, 1, bn), 2, bl)
     m = _pad_to(_pad_to(doc_tok_mask, 1, bn), 2, bl)  # pads False => masked
     q = _pad_to(queries, 1, bt)
@@ -158,3 +255,84 @@ def maxsim_scores_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
                      queries: jax.Array, **kw) -> jax.Array:
     """Full late-interaction scores S (N,) = sum_t H[:, t]."""
     return jnp.sum(maxsim_op(doc_embs, doc_tok_mask, queries, **kw), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Autotuning entry point: synthetic-array runners per op.
+# ---------------------------------------------------------------------------
+
+def autotune_op(op: str, dims: Dict[str, int], *, repeats: int = 2,
+                seed: int = 0, dtype=jnp.float32):
+    """Time the op's candidate block configurations at one shape bucket on
+    synthetic arrays and record the winner in the tuning table.
+
+    ``dims`` uses the same keys the op's own ``_resolve`` call derives from
+    its launch shapes, so a recorded entry is exactly what later launches
+    of that bucket look up:
+
+    * ``maxsim``:        N, T, L, M
+    * ``maxsim_batch``:  B, N, T, L, M
+    * ``gather_maxsim``: B, G, L, M, D (doc rows), TQ (query-token rows)
+    * ``fused_reveal``:  B, G, L, M, D, TQ
+
+    Returns (best_config, {candidate-json: seconds}). Under
+    ``REPRO_KERNEL_IMPL=ref`` the ops ignore block sizes entirely, so this
+    records nothing and returns the defaults unmeasured.
+    """
+    if _impl() == "ref":
+        return dict(tuning.DEFAULTS.get(op, {})), {}
+    key = jax.random.key(seed)
+    d = dict(dims)
+
+    def _norm(k, shape):
+        return jax.random.normal(k, shape, jnp.float32).astype(dtype)
+
+    if op == "maxsim":
+        ks = jax.random.split(key, 2)
+        E = _norm(ks[0], (d["N"], d["L"], d["M"]))
+        mask = jnp.ones((d["N"], d["L"]), jnp.bool_)
+        Q = _norm(ks[1], (d["T"], d["M"]))
+
+        def runner(**cfg):
+            return lambda: jax.block_until_ready(
+                maxsim_op(E, mask, Q, **cfg))
+    elif op == "maxsim_batch":
+        ks = jax.random.split(key, 2)
+        E = _norm(ks[0], (d["B"], d["N"], d["L"], d["M"]))
+        mask = jnp.ones((d["B"], d["N"], d["L"]), jnp.bool_)
+        Q = _norm(ks[1], (d["B"], d["T"], d["M"]))
+
+        def runner(**cfg):
+            return lambda: jax.block_until_ready(
+                maxsim_batch_op(E, mask, Q, **cfg))
+    elif op in ("gather_maxsim", "fused_reveal"):
+        ks = jax.random.split(key, 4)
+        D, TQ = d.get("D", max(d["B"], 8)), d.get("TQ", 64)
+        E = _norm(ks[0], (D, d["L"], d["M"]))
+        mask = jnp.ones((D, d["L"]), jnp.bool_)
+        Q = _norm(ks[1], (TQ, d["M"]))
+        di = jax.random.randint(ks[2], (d["B"],), 0, D, jnp.int32)
+        ti = jax.random.randint(ks[3], (d["B"], d["G"]), 0, TQ, jnp.int32)
+        if op == "gather_maxsim":
+            def runner(**cfg):
+                return lambda: jax.block_until_ready(
+                    gather_maxsim_op(E, mask, Q, di, ti, **cfg))
+        else:
+            nm = jnp.ones((d["B"], d["G"]), jnp.bool_)
+
+            def runner(**cfg):
+                return lambda: jax.block_until_ready(
+                    fused_reveal_op(E, mask, Q, di, ti, nm, **cfg))
+    else:
+        raise ValueError(f"autotune_op: unknown op {op!r}")
+    cands = None
+    if op == "fused_reveal" and _impl() == "pallas":
+        # Gather mode forces block_b == 1 (the scalar-prefetch index map
+        # redirects whole blocks), so candidates differing only in block_b
+        # are the identical launch — dedup instead of timing duplicates.
+        cands = []
+        for c in tuning.candidates(op, dims):
+            c = {k: v for k, v in c.items() if k != "block_b"}
+            if c not in cands:
+                cands.append(c)
+    return tuning.autotune(op, dims, runner, repeats=repeats, cands=cands)

@@ -102,6 +102,28 @@ def gather_maxsim_ref(doc_embs: jax.Array, doc_tok_mask: jax.Array,
     return jnp.max(sims, axis=1)
 
 
+def fused_reveal_ref(doc_embs: jax.Array, doc_tok_mask: jax.Array,
+                     queries: jax.Array, doc_idx: jax.Array,
+                     tok_idx: jax.Array, new_mask: jax.Array):
+    """Fused reveal-round oracle: gathered MaxSim values for the selected
+    cells PLUS the per-row sufficient-statistic deltas over the fresh cells.
+
+    doc_idx (F,), tok_idx (F, G), new_mask (F, G) ->
+      vals (F, G) f32, stats (F, 3) f32 = [d_count, d_total, d_total_sq].
+
+    ``stats`` sums only cells where ``new_mask`` is True — the statistics
+    contract of ``core.batched._apply_block_reveal`` (already-revealed and
+    padded cells contribute exactly 0).
+    """
+    vals = gather_maxsim_ref(doc_embs, doc_tok_mask, queries, doc_idx,
+                             tok_idx)
+    nf = new_mask.astype(jnp.float32)
+    vm = jnp.where(new_mask, vals, 0.0)
+    stats = jnp.stack([jnp.sum(nf, axis=-1), jnp.sum(vm, axis=-1),
+                       jnp.sum(vm * vals, axis=-1)], axis=-1)
+    return vals, stats
+
+
 def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                          kv_mask: jax.Array, scale: float,
                          softcap: float | None = None) -> jax.Array:

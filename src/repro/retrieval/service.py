@@ -32,7 +32,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.batched import BatchedConfig, run_batched_bandit
 from repro.core.frontier import run_pooled_bandit
-from repro.kernels.ops import gather_maxsim_op, maxsim_batch_op
+from repro.kernels.ops import (fused_reveal_op, gather_maxsim_op,
+                               maxsim_batch_op)
 
 _NEG = jnp.float32(-3e38)
 
@@ -244,15 +245,21 @@ def _lockstep_stats(rounds):
 
 
 def _pooled_rerank(docs, dmask, queries, cand_ids, a, b, keys,
-                   cfg: BatchedConfig):
+                   cfg: BatchedConfig, *, fused=None):
     """Pooled frontier engine over pre-gathered candidates.
 
     Stacks the (B, N, L, M) candidates to (B*N, L, M) and the query tokens
     to (B*T, M); every bandit round then reveals ALL queries' selected
-    blocks with one ``gather_maxsim_op`` launch on query-offset indices —
-    the dense-as-the-hardware-allows reveal the paper's FLOP savings need.
-    Returns (topk_scores (B, K), topk_global_ids (B, K), coverage (B,),
-    stats (3,) = [frontier occupancy, total rounds, lockstep waste])."""
+    blocks with one kernel launch on query-offset indices — the
+    dense-as-the-hardware-allows reveal the paper's FLOP savings need.
+    ``fused=None`` (the default) lowers the round through the fused reveal
+    kernel (``fused_reveal_op``: in-kernel doc gather + MaxSim +
+    sufficient-statistic accumulation) everywhere except the
+    ``REPRO_KERNEL_IMPL=ref`` oracle lane, which keeps the unfused
+    ``gather_maxsim_op`` -> scatter chain; ``fused=False`` forces the
+    chain for A/B. Returns (topk_scores (B, K), topk_global_ids (B, K),
+    coverage (B,), stats (3,) = [frontier occupancy, total rounds,
+    lockstep waste])."""
     Bq, N, L, M = docs.shape
     T = queries.shape[1]
     stacked = docs.reshape(Bq * N, L, M)
@@ -263,7 +270,12 @@ def _pooled_rerank(docs, dmask, queries, cand_ids, a, b, keys,
         return gather_maxsim_op(stacked, stacked_mask, flat_q,
                                 flat_doc, flat_tok)
 
-    res = run_pooled_bandit(cells, a, b, keys, cfg, doc_mask=cand_ids >= 0)
+    def cells_fused(flat_doc, flat_tok, new_mask):
+        return fused_reveal_op(stacked, stacked_mask, flat_q,
+                               flat_doc, flat_tok, new_mask)
+
+    res = run_pooled_bandit(cells, a, b, keys, cfg, doc_mask=cand_ids >= 0,
+                            compute_cells_fused=cells_fused, fused=fused)
     scores = jnp.take_along_axis(res.s_hat, res.topk, axis=1)
     picked = jnp.take_along_axis(cand_ids, res.topk, axis=1)
     gids = jnp.where(picked >= 0, picked, -1)
@@ -273,7 +285,12 @@ def _pooled_rerank(docs, dmask, queries, cand_ids, a, b, keys,
     return scores, gids, res.coverage, stats
 
 
-_RERANK_ENGINES = {"pooled": _pooled_rerank, "vmapped": _vmapped_rerank}
+_RERANK_ENGINES = {
+    "pooled": _pooled_rerank,                       # fused round (auto)
+    "pooled_fused": functools.partial(_pooled_rerank, fused=True),
+    "pooled_chain": functools.partial(_pooled_rerank, fused=False),
+    "vmapped": _vmapped_rerank,
+}
 
 
 def _rerank_engine(engine: str):
@@ -288,7 +305,9 @@ def _rerank_engine(engine: str):
 def make_rerank_bandit_step(mesh: Mesh, *, topk: int = 10,
                             alpha_ef: float = 0.3, delta: float = 0.01,
                             block_docs: int = 16, block_tokens: int = 8,
-                            max_rounds: int = 64, engine: str = "pooled",
+                            max_rounds: int = 64, max_block_docs: int = 0,
+                            max_block_tokens: int = 0,
+                            engine: str = "pooled",
                             placement: str = "query", base_seed: int = 0):
     """Adaptive reranking step: the Col-Bandit over a sharded machine.
 
@@ -311,7 +330,9 @@ def make_rerank_bandit_step(mesh: Mesh, *, topk: int = 10,
         return make_sharded_serving_step(
             mesh, "bandit", topk=topk, alpha_ef=alpha_ef, delta=delta,
             block_docs=block_docs, block_tokens=block_tokens,
-            max_rounds=max_rounds, engine=engine, base_seed=base_seed)
+            max_rounds=max_rounds, max_block_docs=max_block_docs,
+            max_block_tokens=max_block_tokens, engine=engine,
+            base_seed=base_seed)
     if placement != "query":
         raise ValueError(f"unknown placement: {placement!r} "
                          "(expected 'query' or 'corpus')")
@@ -320,7 +341,8 @@ def make_rerank_bandit_step(mesh: Mesh, *, topk: int = 10,
 
     cfg = BatchedConfig(k=topk, delta=delta, alpha_ef=alpha_ef,
                         block_docs=block_docs, block_tokens=block_tokens,
-                        max_rounds=max_rounds)
+                        max_rounds=max_rounds, max_block_docs=max_block_docs,
+                        max_block_tokens=max_block_tokens)
     rerank = _rerank_engine(engine)
 
     def step(docs, dmask, queries, cand_ids, a, b):
@@ -516,7 +538,8 @@ def rerank_bandit_step(corpus_embs, corpus_mask, queries, cand_ids, a, b,
                        key, *, topk: int = 10, alpha_ef: float = 0.3,
                        delta: float = 0.01, block_docs: int = 8,
                        block_tokens: int = 8, max_rounds: int = -1,
-                       max_block_docs: int = 0, engine: str = "pooled"):
+                       max_block_docs: int = 0, max_block_tokens: int = 0,
+                       engine: str = "pooled"):
     """Adaptive Col-Bandit rerank over the candidate list.
 
     ``engine="pooled"`` (default) drives the whole batch through one
@@ -527,7 +550,8 @@ def rerank_bandit_step(corpus_embs, corpus_mask, queries, cand_ids, a, b,
     rerank = _rerank_engine(engine)
     cfg = BatchedConfig(k=topk, delta=delta, alpha_ef=alpha_ef,
                         block_docs=block_docs, block_tokens=block_tokens,
-                        max_rounds=max_rounds, max_block_docs=max_block_docs)
+                        max_rounds=max_rounds, max_block_docs=max_block_docs,
+                        max_block_tokens=max_block_tokens)
     docs, dmask = gather_candidates(corpus_embs, corpus_mask, cand_ids)
     keys = jax.random.split(key, queries.shape[0])
     return rerank(docs, dmask, queries, cand_ids, a, b, keys, cfg)
@@ -536,7 +560,8 @@ def rerank_bandit_step(corpus_embs, corpus_mask, queries, cand_ids, a, b,
 def make_serving_step(flavor: str, *, topk: int = 10, alpha_ef: float = 0.3,
                       delta: float = 0.01, block_docs: int = 8,
                       block_tokens: int = 8, max_rounds: int = -1,
-                      max_block_docs: int = 0, engine: str = "pooled"):
+                      max_block_docs: int = 0, max_block_tokens: int = 0,
+                      engine: str = "pooled"):
     """Shape-bucket-aware step factory the serving engine consumes.
 
     Returns an un-jitted step with the uniform engine signature; the caller
@@ -552,7 +577,7 @@ def make_serving_step(flavor: str, *, topk: int = 10, alpha_ef: float = 0.3,
             rerank_bandit_step, topk=topk, alpha_ef=alpha_ef, delta=delta,
             block_docs=block_docs, block_tokens=block_tokens,
             max_rounds=max_rounds, max_block_docs=max_block_docs,
-            engine=engine)
+            max_block_tokens=max_block_tokens, engine=engine)
     raise ValueError(f"unknown serving flavor: {flavor!r}")
 
 
@@ -582,6 +607,7 @@ def make_sharded_serving_step(mesh: Mesh, flavor: str, *, topk: int = 10,
                               alpha_ef: float = 0.3, delta: float = 0.01,
                               block_docs: int = 8, block_tokens: int = 8,
                               max_rounds: int = -1, max_block_docs: int = 0,
+                              max_block_tokens: int = 0,
                               engine: str = "pooled", base_seed: int = 0):
     """Corpus-resident shard_map serving step (dense | bandit).
 
@@ -613,7 +639,8 @@ def make_sharded_serving_step(mesh: Mesh, flavor: str, *, topk: int = 10,
         cfg = BatchedConfig(k=k_shard, delta=delta, alpha_ef=alpha_ef,
                             block_docs=block_docs, block_tokens=block_tokens,
                             max_rounds=max_rounds,
-                            max_block_docs=max_block_docs)
+                            max_block_docs=max_block_docs,
+                            max_block_tokens=max_block_tokens)
 
         def shard_fn(c_embs, c_mask, q, cand, a_l, b_l, vd, sd):
             cand = cand[:, 0, :]                            # (B, N_loc)

@@ -44,7 +44,7 @@ class ShardedCorpus:
     size, ``docs_per_shard * n_shards`` the padded one.
     """
 
-    embs: jax.Array                      # (C_pad, L, M) f32
+    embs: jax.Array                      # (C_pad, L, M) f32 | bf16
     mask: jax.Array                      # (C_pad, L) bool — pads all-False
     mesh: Mesh
     n_docs: int                          # genuine docs (C)
@@ -65,8 +65,14 @@ class ShardedCorpus:
 
 def shard_corpus(embs, mask, mesh: Mesh, *, pooled=None) -> ShardedCorpus:
     """Pad the doc dim to the mesh's shard count and place every corpus
-    array with its ``corpus_specs`` NamedSharding."""
-    embs = np.asarray(embs, np.float32)
+    array with its ``corpus_specs`` NamedSharding.
+
+    A ``bfloat16`` corpus stays bfloat16 on the mesh (half the per-shard
+    HBM; every kernel op accumulates in f32); other dtypes normalize to
+    f32."""
+    embs = np.asarray(embs)
+    if embs.dtype != jnp.bfloat16:
+        embs = embs.astype(np.float32)
     mask = np.asarray(mask, bool)
     if embs.ndim != 3 or mask.ndim != 2 or embs.shape[:2] != mask.shape:
         raise ValueError("corpus must be (C, L, M) embs + (C, L) mask")

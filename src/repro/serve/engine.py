@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import os
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -35,6 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dist.fault import DeadlineBatcher
+from repro.kernels import tuning
+from repro.kernels.ops import autotune_op
 from repro.retrieval.ann import generate_candidates
 from repro.retrieval.service import (make_serving_step,
                                      make_sharded_serving_step)
@@ -65,13 +68,29 @@ class EngineConfig:
     max_rounds: int = -1
     support: Tuple[float, float] = (0.0, 1.0)
     # Reveal engine for the bandit flavor: "pooled" (one cross-query
-    # frontier loop + one gather_maxsim launch per round, converged queries
-    # retired) or "vmapped" (legacy per-query lockstep loop, kept for A/B).
+    # frontier loop, one fused reveal launch per round, converged queries
+    # retired; falls back to the unfused chain under REPRO_KERNEL_IMPL=ref),
+    # "pooled_fused"/"pooled_chain" (force one round body for A/B), or
+    # "vmapped" (legacy per-query lockstep loop, kept for A/B).
     bandit_engine: str = "pooled"
     # Pooled engine only: let active queries grow their per-round doc block
     # up to this many docs out of slots freed by retired queries (0 = fixed
     # blocks, exact per-query parity with the solo bandit).
     max_block_docs: int = 0
+    # Second growth axis: widen surviving slots' token blocks up to this
+    # many tokens per selected doc out of freed frontier CELL capacity
+    # (0 = fixed token blocks).
+    max_block_tokens: int = 0
+    # Kernel block-size autotuning (repro.kernels.tuning): when True,
+    # warmup() times the candidate block configurations for every kernel
+    # shape bucket the compiled executables will launch, BEFORE the AOT
+    # compiles, so steady state serves with tuned tiles and still zero
+    # recompiles. ``tuning_table`` names a JSON file: loaded (if present)
+    # before any timing — covering entries are reused instead of re-timed
+    # — and rewritten with the merged table after an autotune pass, so CI
+    # and serving replicas share one tuned table.
+    autotune: bool = False
+    tuning_table: Optional[str] = None
     # Corpus mesh: () serves from one device (the seed path); a non-empty
     # axis spec like (("data", 2), ("model", 2)) builds that mesh, places
     # the corpus over EVERY axis as a ShardedCorpus (ragged tail padded +
@@ -153,6 +172,12 @@ class EngineMetrics:
         self.batches: List[BatchRecord] = []
         self.compiles: Dict[tuple, int] = {}
         self.compiles_after_warmup: int = 0
+        # Warmup-time kernel autotuning accounting: wall seconds spent
+        # timing candidates, buckets measured this warmup, and entries
+        # reused from a persisted tuning table instead of re-timed.
+        self.autotune_s: float = 0.0
+        self.autotune_buckets: int = 0
+        self.tuning_entries_loaded: int = 0
 
     def record_compile(self, key: tuple, after_warmup: bool) -> None:
         self.compiles[key] = self.compiles.get(key, 0) + 1
@@ -189,6 +214,9 @@ class EngineMetrics:
                                               for b in bats)),
             "compiles": int(sum(self.compiles.values())),
             "compiles_after_warmup": int(self.compiles_after_warmup),
+            "autotune_s": float(self.autotune_s),
+            "autotune_buckets": int(self.autotune_buckets),
+            "tuning_entries_loaded": int(self.tuning_entries_loaded),
             **self._shard_summary(),
         }
 
@@ -237,7 +265,12 @@ class RetrievalEngine:
             self.corpus_mask = self.sharded.mask
             self._valid_docs = self.sharded.valid_docs_device()
         else:
-            self.corpus_embs = jnp.asarray(corpus_embs, jnp.float32)
+            # bf16 corpora stay bf16 end-to-end (half the HBM, kernels
+            # accumulate in f32); everything else normalizes to f32.
+            embs = jnp.asarray(corpus_embs)
+            if embs.dtype != jnp.bfloat16:
+                embs = embs.astype(jnp.float32)
+            self.corpus_embs = embs
             self.corpus_mask = jnp.asarray(corpus_mask, jnp.bool_)
         if self.corpus_embs.ndim != 3 or self.corpus_mask.ndim != 2:
             raise ValueError("corpus must be (C, L, M) embs + (C, L) mask")
@@ -297,6 +330,7 @@ class RetrievalEngine:
                     block_tokens=cfg.block_tokens,
                     max_rounds=cfg.max_rounds,
                     max_block_docs=cfg.max_block_docs,
+                    max_block_tokens=cfg.max_block_tokens,
                     engine=cfg.bandit_engine, base_seed=cfg.seed)
                 args = (self.corpus_embs, self.corpus_mask,
                         SDS((B, tb, M), jnp.float32),
@@ -312,6 +346,7 @@ class RetrievalEngine:
                     delta=cfg.delta, block_docs=cfg.block_docs,
                     block_tokens=cfg.block_tokens, max_rounds=cfg.max_rounds,
                     max_block_docs=cfg.max_block_docs,
+                    max_block_tokens=cfg.max_block_tokens,
                     engine=cfg.bandit_engine)
                 base = cfg.seed
 
@@ -350,9 +385,80 @@ class RetrievalEngine:
         self.metrics.record_compile(key, after_warmup=self._warmed)
         return exe
 
+    def _autotune_dims(self) -> List[Tuple[str, Dict[str, int]]]:
+        """The (op, dims) kernel shape buckets the compiled executables
+        will launch — dense buckets hit ``maxsim_batch``, bandit buckets
+        hit the fused reveal round (and its ``gather_maxsim`` chain-oracle
+        twin, so A/B runs stay tuned too)."""
+        cfg = self.cfg
+        B = cfg.batch_size
+        L, M = self.corpus_embs.shape[1], self.corpus_embs.shape[2]
+        half = max(cfg.block_docs // 2, 1)
+        G = max(cfg.block_tokens, 1)
+        out: List[Tuple[str, Dict[str, int]]] = []
+        for tb in self.buckets.token_buckets:
+            for nb in self.buckets.cand_buckets:
+                # Sharded or not, the per-device candidate list is nb wide
+                # (route_batch packs n_local=nb slots per shard).
+                if self.flavor_for(nb) == "dense":
+                    out.append(("maxsim_batch",
+                                dict(B=B, N=nb, T=tb, L=L, M=M)))
+                else:
+                    # Frontier reveal launch geometry — MUST mirror
+                    # core.frontier's width math or the tuned bucket is
+                    # never the launched bucket: selection widths grow
+                    # with the growth knobs (half_w docs, G_cap tokens),
+                    # and the launch batch is the flat Q*W rows without
+                    # doc growth or the compacted F = Q*2*half with it.
+                    half_w = min(max(cfg.max_block_docs // 2, half),
+                                 max(nb, 1))
+                    rows = B * 2 * (half if half_w > half else half_w)
+                    g = min(max(cfg.max_block_tokens, G), max(tb, 1))
+                    dims = dict(B=rows, G=g, L=L, M=M, D=B * nb, TQ=B * tb)
+                    out.append(("fused_reveal", dims))
+                    out.append(("gather_maxsim", dims))
+        return out
+
+    def autotune(self) -> int:
+        """Time candidate kernel block configurations for every shape
+        bucket the serving executables will launch and record the winners
+        in the tuning table (``repro.kernels.tuning``). Buckets already
+        covered by a loaded table entry are skipped. Returns the number of
+        buckets measured; wall time lands in ``metrics.autotune_s``."""
+        t0 = time.perf_counter()
+        measured = 0
+        for op, dims in self._autotune_dims():
+            if tuning.bucket_key(op, dims) in tuning.table():
+                continue
+            # Time at the corpus dtype: a bf16 corpus moves half the bytes
+            # per tile, and the winning block_l can differ from f32's.
+            autotune_op(op, dims, dtype=self.corpus_embs.dtype)
+            measured += 1
+        self.metrics.autotune_s += time.perf_counter() - t0
+        self.metrics.autotune_buckets += measured
+        return measured
+
     def warmup(self) -> List[tuple]:
         """Pre-compile every bucket the policy can reach; after this returns
-        the engine serves any admissible stream with zero recompiles."""
+        the engine serves any admissible stream with zero recompiles.
+
+        When ``cfg.autotune`` is set, kernel block sizes are tuned FIRST
+        (per shape bucket, reusing/persisting ``cfg.tuning_table``), so the
+        AOT executables bake in the tuned tiles and the zero-recompile
+        contract is untouched."""
+        cfg = self.cfg
+        if cfg.tuning_table and os.path.exists(cfg.tuning_table):
+            self.metrics.tuning_entries_loaded += tuning.load_table(
+                cfg.tuning_table)
+        if cfg.autotune:
+            self.autotune()
+            if cfg.tuning_table:
+                # Persist only THIS engine's buckets: the in-process table
+                # is a shared cache across engines, and dumping it whole
+                # would leak another engine's buckets into this file.
+                tuning.save_table(cfg.tuning_table, keys={
+                    tuning.bucket_key(op, dims)
+                    for op, dims in self._autotune_dims()})
         for tb in self.buckets.token_buckets:
             self._executable(("stage1", tb))
             for nb in self.buckets.cand_buckets:

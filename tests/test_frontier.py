@@ -124,6 +124,81 @@ def test_oversized_max_block_docs_clamped_to_candidates():
         assert set(map(int, np.asarray(res.topk[q]))) == want
 
 
+@pytest.mark.parametrize("seed", [0, 5])
+def test_fused_round_bit_identical_to_chain(seed):
+    """ISSUE 5 tentpole: the fused round body (one reveal launch + a
+    two-scatter state update over the sentinel cell table) must reveal the
+    EXACT cells the chain oracle reveals — identical trajectories, rounds,
+    occupancy, and bit-identical score estimates."""
+    H = _mixed_h(seed, Q=6, N=40, T=16, n_hard=2)
+    a, b = _bounds(H)
+    keys = jax.random.split(jax.random.key(seed + 50), 6)
+    kw = dict(k=5, alpha_ef=0.3, block_docs=8, block_tokens=4)
+    chain = run_pooled_oracle(H, a, b, keys, fused=False, **kw)
+    fused = run_pooled_oracle(H, a, b, keys, fused=True, **kw)
+    for field in ("topk", "reveals", "rounds", "revealed", "trips",
+                  "total_rounds", "lockstep_waste", "separated"):
+        np.testing.assert_array_equal(np.asarray(getattr(chain, field)),
+                                      np.asarray(getattr(fused, field)),
+                                      err_msg=field)
+    # bit-identical, not allclose: the fused statistics perform the same
+    # arithmetic in the same order, only plumbed differently
+    np.testing.assert_array_equal(np.asarray(chain.s_hat),
+                                  np.asarray(fused.s_hat))
+    np.testing.assert_allclose(float(chain.occupancy),
+                               float(fused.occupancy), rtol=1e-6)
+
+
+def test_fused_round_under_growth_matches_chain():
+    """Growth re-enables frontier compaction inside the fused body; the
+    chain/fused equivalence must survive it (both growth axes on)."""
+    H = _mixed_h(30, Q=8, N=40, T=16, n_hard=2)
+    a, b = _bounds(H)
+    keys = jax.random.split(jax.random.key(31), 8)
+    kw = dict(k=5, alpha_ef=0.3, block_docs=8, block_tokens=4,
+              max_block_docs=24, max_block_tokens=8)
+    chain = run_pooled_oracle(H, a, b, keys, fused=False, **kw)
+    fused = run_pooled_oracle(H, a, b, keys, fused=True, **kw)
+    np.testing.assert_array_equal(np.asarray(chain.revealed),
+                                  np.asarray(fused.revealed))
+    np.testing.assert_array_equal(np.asarray(chain.rounds),
+                                  np.asarray(fused.rounds))
+
+
+def test_token_growth_never_increases_trips_and_keeps_exactness():
+    """ISSUE 5 satellite (2-D slot growth): growing block_tokens alongside
+    block_docs must not increase the global trip count vs doc-only growth
+    (freed capacity only ever ADDS reveal cells per round), and full-budget
+    top-K stays exact."""
+    from repro.core import exact_topk
+    H = _mixed_h(10, Q=8, N=40, T=16, n_hard=2)
+    a, b = _bounds(H)
+    keys = jax.random.split(jax.random.key(11), 8)
+    kw = dict(k=5, alpha_ef=1e9, block_docs=8, block_tokens=4)
+    doc_only = run_pooled_oracle(H, a, b, keys, max_block_docs=24, **kw)
+    two_d = run_pooled_oracle(H, a, b, keys, max_block_docs=24,
+                              max_block_tokens=12, **kw)
+    assert int(two_d.trips) <= int(doc_only.trips)
+    # more cells per straggler round => total reveal work can only help
+    for q in range(8):
+        want = set(map(int, np.asarray(exact_topk(H[q], k=5)[0])))
+        assert set(map(int, np.asarray(two_d.topk[q]))) == want
+
+
+def test_token_growth_disabled_is_solo_parity():
+    """max_block_tokens == block_tokens (or 0) must leave trajectories at
+    exact solo parity — the all-enabled token mask is the old fixed-G
+    behavior."""
+    H = _mixed_h(33, Q=4, N=32, T=12)
+    a, b = _bounds(H)
+    keys = jax.random.split(jax.random.key(34), 4)
+    kw = dict(k=5, alpha_ef=0.3, block_docs=8, block_tokens=4)
+    base = run_pooled_oracle(H, a, b, keys, **kw)
+    explicit = run_pooled_oracle(H, a, b, keys, max_block_tokens=4, **kw)
+    np.testing.assert_array_equal(np.asarray(base.revealed),
+                                  np.asarray(explicit.revealed))
+
+
 def test_unknown_engine_name_raises_value_error():
     from repro.retrieval.service import make_serving_step, rerank_bandit_step
     with pytest.raises(ValueError, match="unknown reveal engine"):
@@ -177,7 +252,7 @@ def test_rerank_bandit_step_engines_agree(serving_setup):
     ds, q, cand, a, b = serving_setup
     key = jax.random.key(0)
     out = {}
-    for eng in ("pooled", "vmapped"):
+    for eng in ("pooled", "pooled_fused", "pooled_chain", "vmapped"):
         s, g, f, st = rerank_bandit_step(
             ds.doc_embs, ds.doc_mask, q, cand, a, b, key, topk=5,
             alpha_ef=1e9, block_docs=4, block_tokens=4, engine=eng)
@@ -185,8 +260,9 @@ def test_rerank_bandit_step_engines_agree(serving_setup):
         assert 0.0 < float(st[0]) <= 1.0
         assert ((np.asarray(f) > 0) & (np.asarray(f) <= 1)).all()
         out[eng] = np.asarray(g)
-    for i in range(q.shape[0]):
-        assert set(out["pooled"][i]) == set(out["vmapped"][i])
+    for eng in ("pooled", "pooled_fused", "pooled_chain"):
+        for i in range(q.shape[0]):
+            assert set(out[eng][i]) == set(out["vmapped"][i]), eng
 
 
 def test_pooled_serving_matches_oracle_cells(serving_setup):

@@ -228,6 +228,81 @@ def test_gather_maxsim_unpadded_shapes_raise_clearly():
                       interpret=True)
 
 
+# ---------------------------------------------------------------------------
+# ISSUE 5 satellite: bf16 embeddings through every kernel op with f32
+# accumulation — parity vs the f32 ref on tile-boundary and odd shapes,
+# under both dispatch modes. Both paths cast to f32 BEFORE the contraction,
+# so tolerances stay at f32 noise (the bf16 quantization already happened
+# to the inputs identically).
+# ---------------------------------------------------------------------------
+
+BF16_SHAPES = [
+    (8, 64, 128, 32),     # tile-aligned
+    (13, 37, 128, 11),    # odd everything
+    (9, 63, 128, 17),     # L one short of a block
+]
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+@pytest.mark.parametrize("shape", BF16_SHAPES)
+def test_bf16_maxsim_matches_f32_ref(impl, shape, monkeypatch):
+    N, L, M, T = shape
+    E, mask, Q = _inputs(N, L, M, T, jnp.bfloat16, seed=30)
+    want = ref.maxsim_ref(E.astype(jnp.float32), mask,
+                          Q.astype(jnp.float32))
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", impl)
+    h = maxsim_op(E, mask, Q, block_n=4, block_l=32)
+    assert h.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(h), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+@pytest.mark.parametrize("shape", BF16_SHAPES)
+def test_bf16_gather_maxsim_matches_f32_ref(impl, shape, monkeypatch):
+    N, L, M, T = shape
+    E, mask, Q = _inputs(N, L, M, T, jnp.bfloat16, seed=31)
+    rng = np.random.default_rng(32)
+    B, G = 5, 3
+    di = jnp.asarray(rng.integers(0, N, B), jnp.int32)
+    ti = jnp.asarray(rng.integers(0, T, (B, G)), jnp.int32)
+    want = ref.gather_maxsim_ref(E.astype(jnp.float32), mask,
+                                 Q.astype(jnp.float32), di, ti)
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", impl)
+    out = gather_maxsim_op(E, mask, Q, di, ti, block_b=4, block_l=32)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_bf16_maxsim_batch_matches_f32_ref(impl, monkeypatch):
+    Bq, N, L, M, T = 3, 7, 37, 128, 11
+    rng = np.random.default_rng(33)
+    E = jnp.asarray(rng.standard_normal((Bq, N, L, M)), jnp.bfloat16)
+    mask = jnp.asarray(rng.random((Bq, N, L)) > 0.3)
+    Q = jnp.asarray(rng.standard_normal((Bq, T, M)), jnp.bfloat16)
+    want = jax.vmap(ref.maxsim_ref)(E.astype(jnp.float32), mask,
+                                    Q.astype(jnp.float32))
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", impl)
+    got = maxsim_batch_op(E, mask, Q, block_l=16)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_bf16_masked_maxsim_matches_f32_ref(impl, monkeypatch):
+    N, L, M, T = 13, 37, 128, 11
+    E, mask, Q = _inputs(N, L, M, T, jnp.bfloat16, seed=34)
+    bn, bt = 4, 4
+    gi, gj = -(-N // bn), -(-T // bt)
+    tm = jnp.asarray(np.random.default_rng(35).random((gi, gj)) > 0.4)
+    want = ref.masked_maxsim_ref(E.astype(jnp.float32), mask,
+                                 Q.astype(jnp.float32), tm, bn, bt)
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", impl)
+    h = masked_maxsim_op(E, mask, Q, tm, block_n=bn, block_t=bt, block_l=16)
+    assert h.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(h), np.asarray(want), atol=1e-5)
+
+
 @pytest.mark.parametrize("impl", ["ref", "interpret"])
 @pytest.mark.parametrize("shape", [(2, 8, 64, 128, 16), (3, 7, 37, 128, 11)])
 def test_maxsim_batch_matches_per_query_ref(impl, shape, monkeypatch):

@@ -1,0 +1,173 @@
+"""ISSUE 5 tentpole: the fused reveal-round kernel (repro.kernels.reveal).
+
+Contracts:
+  * value parity with the gather_maxsim oracle (the fused kernel computes
+    the same MaxSim cells, it just keeps them in VMEM);
+  * statistic parity with ``_apply_block_reveal``'s arithmetic: the
+    in-kernel [dn, dtotal, dtotal_sq] rows equal the scatter chain's
+    per-row increments, with already-revealed/padded cells contributing 0;
+  * both kernel layouts (scalar-prefetch in-kernel gather, block_b == 1,
+    and the pre-gathered wide-row layout) match the ref oracle;
+  * odd shapes exercise the ops-level padding, stacked query-offset
+    indices exercise the pooled frontier's cell contract, and bf16 inputs
+    accumulate in f32.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import fused_reveal_op, gather_maxsim_op
+from repro.kernels.reveal import STATS_USED, fused_reveal
+
+
+def _inputs(N, L, M, T, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    E = rng.standard_normal((N, L, M)).astype(np.float32)
+    lens = rng.integers(1, L + 1, N)
+    mask = np.arange(L)[None] < lens[:, None]
+    E = np.where(mask[..., None], E, 0.0)
+    Q = rng.standard_normal((T, M)).astype(np.float32)
+    return jnp.asarray(E, dtype), jnp.asarray(mask), jnp.asarray(Q, dtype)
+
+
+def _sel(rng, N, T, F, G):
+    di = jnp.asarray(rng.integers(0, N, F), jnp.int32)
+    ti = jnp.asarray(rng.integers(0, T, (F, G)), jnp.int32)
+    nm = jnp.asarray(rng.random((F, G)) > 0.35)
+    return di, ti, nm
+
+
+SHAPES = [
+    (8, 64, 128, 32, 8, 4),      # aligned
+    (13, 37, 128, 11, 5, 3),     # odd everything (pad path active)
+    (7, 129, 128, 5, 9, 2),      # L just past one block
+]
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fused_reveal_matches_ref(impl, shape, monkeypatch):
+    N, L, M, T, F, G = shape
+    E, mask, Q = _inputs(N, L, M, T, seed=1)
+    di, ti, nm = _sel(np.random.default_rng(2), N, T, F, G)
+    want_v, want_s = ref.fused_reveal_ref(E, mask, Q, di, ti, nm)
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", impl)
+    v, s = fused_reveal_op(E, mask, Q, di, ti, nm, block_b=4, block_l=32)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(want_v), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(want_s), atol=1e-4)
+
+
+def test_fused_stats_match_apply_block_reveal_arithmetic():
+    """The kernel's stat rows must be exactly what the scatter chain adds:
+    sum(new), sum(new * v), sum(new * v * v) per selection row."""
+    N, L, M, T, F, G = 10, 48, 128, 9, 7, 4
+    E, mask, Q = _inputs(N, L, M, T, seed=3)
+    di, ti, nm = _sel(np.random.default_rng(4), N, T, F, G)
+    v, s = fused_reveal_op(E, mask, Q, di, ti, nm)
+    vv, nn, ss = np.asarray(v), np.asarray(nm), np.asarray(s)
+    np.testing.assert_allclose(ss[:, 0], nn.sum(-1))
+    np.testing.assert_allclose(ss[:, 1], (vv * nn).sum(-1), atol=1e-5)
+    np.testing.assert_allclose(ss[:, 2], (vv * vv * nn).sum(-1), rtol=1e-5)
+    assert s.shape == (F, STATS_USED)
+
+
+@pytest.mark.parametrize("gather", [True, False])
+def test_fused_kernel_layouts_agree(gather):
+    """Scalar-prefetch in-kernel gather (block_b=1, the TPU layout) and the
+    pre-gathered wide-row layout compute identical outputs."""
+    N, L, M, T, F, G = 6, 32, 16, 8, 8, 3
+    E, mask, Q = _inputs(N, L, M, T, seed=5)
+    di, ti, nm = _sel(np.random.default_rng(6), N, T, F, G)
+    q_sel = jnp.take(Q, ti, axis=0)
+    if gather:
+        v, s = fused_reveal(E, mask, q_sel, nm, di, block_l=16,
+                            gather=True, interpret=True)
+    else:
+        v, s = fused_reveal(jnp.take(E, di, axis=0), jnp.take(mask, di, 0),
+                            q_sel, nm, di, block_b=4, block_l=16,
+                            gather=False, interpret=True)
+    want_v, want_s = ref.fused_reveal_ref(E, mask, Q, di, ti, nm)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(want_v), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s)[:, :STATS_USED],
+                               np.asarray(want_s), atol=1e-4)
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_fused_stacked_offset_parity(impl, monkeypatch):
+    """Query-offset indices into stacked (Q*N, L, M)/(Q*T, M) tensors —
+    the exact indexing the pooled frontier's fused round emits."""
+    rng = np.random.default_rng(7)
+    Bq, N, L, M, T = 3, 8, 48, 128, 6
+    parts = [_inputs(N, L, M, T, seed=10 + i) for i in range(Bq)]
+    E = jnp.concatenate([p[0] for p in parts])
+    mask = jnp.concatenate([p[1] for p in parts])
+    Q = jnp.concatenate([p[2] for p in parts])
+    S, G = 7, 3
+    qid = rng.integers(0, Bq, S)
+    di = jnp.asarray(qid * N + rng.integers(0, N, S), jnp.int32)
+    ti = jnp.asarray(qid[:, None] * T + rng.integers(0, T, (S, G)),
+                     jnp.int32)
+    nm = jnp.asarray(rng.random((S, G)) > 0.3)
+    want_v, want_s = ref.fused_reveal_ref(E, mask, Q, di, ti, nm)
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", impl)
+    v, s = fused_reveal_op(E, mask, Q, di, ti, nm, block_b=4, block_l=16)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(want_v), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(want_s), atol=1e-4)
+
+
+def test_fused_all_masked_documents_no_nan():
+    """All-masked docs yield the _NEG sentinel value; with new_mask False
+    on those rows the stats must stay exactly 0 — never NaN from squaring
+    the sentinel out of f32 range."""
+    N, L, M, T = 8, 40, 128, 7
+    E, mask, Q = _inputs(N, L, M, T, seed=8)
+    mask = jnp.asarray(np.asarray(mask).copy()).at[jnp.asarray([1, 5])].set(
+        False)
+    di = jnp.asarray([1, 5, 0, 3], jnp.int32)
+    ti = jnp.asarray(np.random.default_rng(9).integers(0, T, (4, 2)),
+                     jnp.int32)
+    nm = jnp.asarray([[False, False], [False, False], [True, True],
+                      [True, False]])
+    v, s = fused_reveal_op(E, mask, Q, di, ti, nm, block_b=2, block_l=16)
+    v, s = np.asarray(v), np.asarray(s)
+    assert (v[:2] < -1e37).all()                   # dead rows hit _NEG
+    assert np.isfinite(s).all()
+    np.testing.assert_array_equal(s[:2], 0.0)
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_fused_bf16_inputs_f32_accumulation(impl, monkeypatch):
+    """bf16 embeddings/queries: outputs are f32 and match the f32 ref on
+    the f32-cast inputs (both paths cast before the contraction)."""
+    N, L, M, T, F, G = 9, 63, 128, 17, 6, 4     # L one short of a block
+    E, mask, Q = _inputs(N, L, M, T, dtype=jnp.bfloat16, seed=11)
+    di, ti, nm = _sel(np.random.default_rng(12), N, T, F, G)
+    want_v, want_s = ref.fused_reveal_ref(
+        E.astype(jnp.float32), mask, Q.astype(jnp.float32), di, ti, nm)
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", impl)
+    v, s = fused_reveal_op(E, mask, Q, di, ti, nm, block_b=4, block_l=32)
+    assert v.dtype == jnp.float32 and s.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(v), np.asarray(want_v), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(want_s), atol=1e-4)
+
+
+def test_fused_values_match_gather_maxsim_op(monkeypatch):
+    """The fused op's value plane is the gather_maxsim op, bit-for-bit in
+    the same dispatch mode — fusion adds the stats, never changes cells."""
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "interpret")
+    N, L, M, T, F, G = 12, 80, 128, 10, 9, 3
+    E, mask, Q = _inputs(N, L, M, T, seed=13)
+    di, ti, nm = _sel(np.random.default_rng(14), N, T, F, G)
+    v, _ = fused_reveal_op(E, mask, Q, di, ti, nm, block_b=4, block_l=32)
+    want = gather_maxsim_op(E, mask, Q, di, ti, block_b=4, block_l=32)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(want))
+
+
+def test_fused_row_mismatch_raises():
+    E, mask, Q = _inputs(4, 16, 8, 4, seed=15)
+    with pytest.raises(ValueError, match="fused_reveal_op"):
+        fused_reveal_op(E, mask, Q, jnp.zeros((3,), jnp.int32),
+                        jnp.zeros((4, 2), jnp.int32),
+                        jnp.ones((4, 2), jnp.bool_))

@@ -299,3 +299,33 @@ def test_bandit_flavor_conservative_matches_dense_top1(corpus):
         assert int(c.topk_ids[0]) == int(want[rid].topk_ids[0])
         assert 0.0 < c.reveal_fraction <= 1.0
         assert c.flavor == "bandit" and want[rid].flavor == "dense"
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 5 satellite: bf16 corpora serve end-to-end (kernels accumulate f32)
+# ---------------------------------------------------------------------------
+
+def test_engine_serves_bf16_corpus_matching_f32_topk(corpus):
+    """A bfloat16 corpus must stay bf16 on device and serve the same top-K
+    as the f32 corpus (scores at bf16-quantization distance): the kernel
+    ops cast to f32 at the contraction, never the engine."""
+    import jax.numpy as jnp
+
+    cfg = _dense_cfg(batch_size=2, token_buckets=(8,), flavor="bandit",
+                     block_docs=4, block_tokens=4, max_rounds=8)
+    results = {}
+    for dtype in (np.float32, jnp.bfloat16):
+        embs = jnp.asarray(corpus.doc_embs).astype(dtype)
+        eng = RetrievalEngine(embs, corpus.doc_mask, cfg)
+        assert eng.corpus_embs.dtype == dtype
+        eng.warmup()
+        for i in range(2):
+            eng.submit(Request(query=np.asarray(corpus.queries[i, :8],
+                                                np.float32),
+                               k=5, cand_ids=np.arange(16)))
+        done = sorted(eng.drain(), key=lambda c: c.rid)
+        assert len(done) == 2 and eng.metrics.compiles_after_warmup == 0
+        results[np.dtype(dtype).name if dtype is np.float32 else "bfloat16"] \
+            = done
+    for c32, c16 in zip(results["float32"], results["bfloat16"]):
+        assert set(c32.topk_ids) == set(c16.topk_ids)
