@@ -17,6 +17,17 @@ Reported per shard count: queries/s, reveal fraction, per-shard bandit
 round counts and frontier occupancy, plus a hard-bound (alpha_ef -> inf)
 parity check against exact dense top-K — the acceptance gate.
 
+Each worker additionally measures the full stage-1-inclusive pipeline both
+ways (ISSUE 6): the GATHERED path (host full-corpus stage-1 kNN + numpy
+``route_batch`` + the pre-routed shard_map step) against the ROUTED path
+(``make_routed_serving_step``: centroid routing + shard-local stage-1 +
+rerank in ONE shard_map dispatch), under a uniform query mix and a
+Zipf-skewed one (queries drawn from Zipf(1.5)-popular documents, piling
+routed mass onto the low shards). The second acceptance gate asserts the
+4-shard routed pipeline sustains at least the gathered pipeline's cells/s
+on the skewed mix — the host routing round-trip it deletes is genuinely
+sequential, so this holds even though CPU shards timeshare one machine.
+
 Caveat: on the CPU host platform the per-shard programs timeshare one
 machine, so walltime does NOT improve with shard count here; the numbers
 pin scheduling facts (rounds, occupancy, scorecard-only traffic) and give
@@ -50,10 +61,12 @@ def _worker(n_shards: int, n_docs: int, B: int, N: int, T: int, L: int,
     import numpy as np
 
     from repro.launch.mesh import make_host_mesh
+    from repro.retrieval.ann import generate_candidates
     from repro.retrieval.service import (make_rerank_dense_step,
+                                         make_routed_serving_step,
                                          make_sharded_serving_step)
-    from repro.retrieval.sharded import (route_aligned, route_candidates,
-                                         shard_corpus)
+    from repro.retrieval.sharded import (route_aligned, route_batch,
+                                         route_candidates, shard_corpus)
 
     assert len(jax.devices()) == n_shards, (len(jax.devices()), n_shards)
     rng = np.random.default_rng(seed)
@@ -61,7 +74,7 @@ def _worker(n_shards: int, n_docs: int, B: int, N: int, T: int, L: int,
     emb /= np.linalg.norm(emb, axis=-1, keepdims=True)
     msk = np.arange(L)[None] < rng.integers(L // 2, L + 1, n_docs)[:, None]
     mesh = make_host_mesh(n_shards)
-    sc = shard_corpus(emb, msk, mesh)
+    sc = shard_corpus(emb, msk, mesh, n_centroids=8, router_seed=seed)
 
     def batch(i):
         r = np.random.default_rng(1000 + i)
@@ -109,6 +122,89 @@ def _worker(n_shards: int, n_docs: int, B: int, N: int, T: int, L: int,
     parity = all(set(np.asarray(ids)[b]) == set(np.asarray(want)[b])
                  for b in range(B))
 
+    # --- routed vs gathered stage-1-inclusive pipelines (ISSUE 6) --------
+    # Both serve the SAME budget of N candidates x T tokens per query, so
+    # cells/s reduces to the walltime ratio; the gathered clock includes
+    # the host stage-1 dispatch and the numpy routing round-trip the
+    # routed step deletes.
+    kprime = 8
+    cells_per_batch = B * N * T
+    routed_step = jax.jit(make_routed_serving_step(
+        mesh, "bandit", topk=k, n_local=N, n_total=N, kprime=kprime,
+        alpha_ef=alpha_ef, block_docs=8, block_tokens=4))
+    cents, mass = sc.router.centroids, sc.router.shard_mass
+    gen = jax.jit(jax.vmap(lambda qq: generate_candidates(
+        jnp.asarray(emb), jnp.asarray(msk), qq, kprime=kprime,
+        max_candidates=N)))
+
+    def queries_uniform(i):
+        r = np.random.default_rng(2000 + i)
+        q = r.standard_normal((B, T, M)).astype(np.float32)
+        return q / np.linalg.norm(q, axis=-1, keepdims=True)
+
+    def queries_zipf(i):
+        # Popularity-skewed traffic: query tokens sampled (with noise) from
+        # Zipf(1.5)-favored documents, which live on the low shards under
+        # the contiguous-block placement.
+        r = np.random.default_rng(3000 + i)
+        docs = np.minimum(r.zipf(1.5, size=B) - 1, n_docs - 1)
+        tok = emb[docs[:, None], r.integers(0, L, (B, T))]     # (B, T, M)
+        q = (tok + 0.2 * r.standard_normal((B, T, M))).astype(np.float32)
+        return q / np.linalg.norm(q, axis=-1, keepdims=True)
+
+    def time_routed(make_q):
+        qs = [make_q(i) for i in range(n_batches)]
+        jax.block_until_ready(routed_step(
+            sc.embs, sc.mask, cents, mass, jnp.asarray(qs[0]), vd,
+            jnp.int32(0)))
+        t0 = time.perf_counter()
+        stats_r = None
+        for i, qq in enumerate(qs):
+            _, _, _, stats = jax.block_until_ready(routed_step(
+                sc.embs, sc.mask, cents, mass, jnp.asarray(qq), vd,
+                jnp.int32(i)))
+            stats_r = np.asarray(stats)
+        wall_r = time.perf_counter() - t0
+        qshare = stats_r[:, 3]
+        return {
+            "queries_per_s": B * n_batches / max(wall_r, 1e-9),
+            "cells_per_s": cells_per_batch * n_batches / max(wall_r, 1e-9),
+            "quota_share_mean": [float(x) for x in qshare],
+            "routed_skew": float(np.max(qshare) * len(qshare)),
+        }
+
+    def time_gathered(make_q):
+        qs = [make_q(i) for i in range(n_batches)]
+
+        def one(qq, i):
+            cand = jax.block_until_ready(gen(jnp.asarray(qq)))
+            cand_l, (a_r, b_r) = route_batch(
+                np.asarray(cand.doc_ids),
+                [np.asarray(cand.a), np.asarray(cand.b)],
+                sc.docs_per_shard, sc.n_shards, n_local=N)
+            return jax.block_until_ready(step(
+                sc.embs, sc.mask, jnp.asarray(qq), jnp.asarray(cand_l),
+                jnp.asarray(a_r), jnp.asarray(b_r), vd, jnp.int32(i)))
+
+        one(qs[0], 0)                                  # compile + warm
+        t0 = time.perf_counter()
+        for i, qq in enumerate(qs):
+            one(qq, i)
+        wall_g = time.perf_counter() - t0
+        return {
+            "queries_per_s": B * n_batches / max(wall_g, 1e-9),
+            "cells_per_s": cells_per_batch * n_batches / max(wall_g, 1e-9),
+        }
+
+    routed, gathered = {}, {}
+    for mix, make_q in (("uniform", queries_uniform),
+                        ("zipf", queries_zipf)):
+        gathered[mix] = time_gathered(make_q)
+        routed[mix] = time_routed(make_q)
+        routed[mix]["speedup_vs_gathered"] = (
+            routed[mix]["cells_per_s"]
+            / max(gathered[mix]["cells_per_s"], 1e-9))
+
     return {
         "n_shards": n_shards,
         "mesh": {a: int(n) for a, n in mesh.shape.items()},
@@ -120,6 +216,8 @@ def _worker(n_shards: int, n_docs: int, B: int, N: int, T: int, L: int,
         "shard_rounds": [float(x) for x in stats_last[:, 1]],
         "shard_occupancy": [float(x) for x in stats_last[:, 0]],
         "hard_bound_topk_parity": bool(parity),
+        "gathered": gathered,
+        "routed": routed,
     }
 
 
@@ -154,11 +252,23 @@ def run(shard_counts=(1, 4, 16), n_docs: int = 93, B: int = 8, N: int = 16,
               f"reveal {row['mean_reveal_fraction']:.3f}  "
               f"rounds/shard {row['shard_rounds']}  "
               f"parity {row['hard_bound_topk_parity']}")
+        for mix in ("uniform", "zipf"):
+            g, r = row["gathered"][mix], row["routed"][mix]
+            print(f"            {mix:7s}: gathered {g['cells_per_s']:10.0f} "
+                  f"cells/s | routed {r['cells_per_s']:10.0f} cells/s "
+                  f"({r['speedup_vs_gathered']:.2f}x, "
+                  f"skew {r['routed_skew']:.2f})")
 
     accept = {"hard_bound_topk_parity_all":
               all(r["hard_bound_topk_parity"] for r in rows.values()),
               "every_shard_count_served":
               len(rows) == len(tuple(shard_counts))}
+    if "4" in rows:
+        # ISSUE 6 gate: deleting the host stage-1 + routing round-trip must
+        # pay for itself on the 4-shard mesh under skewed traffic.
+        accept["routed_beats_gathered_zipf_4shard"] = (
+            rows["4"]["routed"]["zipf"]["cells_per_s"]
+            >= rows["4"]["gathered"]["zipf"]["cells_per_s"])
     result = {
         "config": {"n_docs": n_docs, "B": B, "N": N, "T": T, "L": L, "M": M,
                    "k": k, "alpha_ef": alpha_ef, "n_batches": n_batches,

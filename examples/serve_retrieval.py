@@ -1,18 +1,19 @@
 """End-to-end serving driver: build an index, then serve BATCHED queries
-through the two-stage pipeline with exact vs Col-Bandit reranking.
+through the unified two-stage pipeline (``serve_queries``) with exact vs
+Col-Bandit reranking — the same engine-facing rerank steps
+``repro.serve.RetrievalEngine`` AOT-compiles.
 
   PYTHONPATH=src python examples/serve_retrieval.py [--n-docs 512]
 """
 import argparse
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import BanditConfig
 from repro.data.synthetic import make_retrieval_dataset
 from repro.retrieval.index import build_index
-from repro.retrieval.pipeline import rerank_query
+from repro.retrieval.pipeline import serve_queries
 
 
 def main(argv=None):
@@ -26,31 +27,29 @@ def main(argv=None):
     ds = make_retrieval_dataset(n_docs=args.n_docs, n_queries=args.n_queries,
                                 seed=1)
     index = build_index(ds.doc_embs, ds.doc_mask, ds.doc_lens)
+    queries = np.asarray(ds.queries)                       # (B, T, M)
 
-    stats = {"exact": [], "bandit": []}
     t0 = time.time()
-    for qi in range(ds.n_queries):
-        q = jnp.asarray(ds.queries[qi])
-        e = rerank_query(index, q, method="exact", k=5,
-                         qrels_row=ds.qrels[qi])
-        b = rerank_query(index, q, method="bandit", k=5,
-                         bandit=BanditConfig(k=5, alpha_ef=args.alpha),
-                         qrels_row=ds.qrels[qi], seed=qi)
-        stats["exact"].append(e)
-        stats["bandit"].append(b)
-        print(f"  q{qi:02d}: overlap={b.overlap:.2f} "
-              f"coverage={100*b.coverage:4.1f}% "
-              f"saving={e.flops/max(b.flops,1):4.1f}x "
-              f"recall@5={b.metrics['recall']:.2f} "
-              f"(exact recall {e.metrics['recall']:.2f})")
+    dense = serve_queries(index, queries, k=5, flavor="dense")
+    bandit = serve_queries(index, queries, k=5, flavor="bandit",
+                           bandit=BanditConfig(k=5, alpha_ef=args.alpha))
+    dt = time.time() - t0
 
-    cov = np.mean([r.coverage for r in stats["bandit"]])
-    sav = np.mean([e.flops / max(b.flops, 1)
-                   for e, b in zip(stats["exact"], stats["bandit"])])
-    ov = np.mean([r.overlap for r in stats["bandit"]])
-    print(f"\nserved {ds.n_queries} queries in {time.time()-t0:.1f}s: "
-          f"mean coverage {100*cov:.1f}%, mean saving {sav:.1f}x, "
-          f"mean overlap@5 {ov:.2f}")
+    overlaps = []
+    for qi in range(ds.n_queries):
+        ov = len(set(dense.topk_ids[qi]) & set(bandit.topk_ids[qi])) / 5.0
+        overlaps.append(ov)
+        rel = set(np.nonzero(ds.qrels[qi])[0])
+        rec = len(rel & set(int(d) for d in bandit.topk_ids[qi]
+                            if d >= 0)) / max(len(rel), 1)
+        print(f"  q{qi:02d}: overlap={ov:.2f} "
+              f"coverage={100 * bandit.reveal_fraction[qi]:4.1f}% "
+              f"recall@5={rec:.2f}")
+
+    print(f"\nserved {ds.n_queries} queries in {dt:.1f}s: "
+          f"mean coverage {100 * bandit.reveal_fraction.mean():.1f}%, "
+          f"mean overlap@5 {np.mean(overlaps):.2f}, "
+          f"frontier occupancy {bandit.stats[0]:.2f}")
 
 
 if __name__ == "__main__":

@@ -144,7 +144,15 @@ def run_pooled_bandit(
     doc_mask: Optional[jax.Array] = None,   # (Q, N) bool valid candidates
     compute_cells_fused=None,    # fused contract; derived when omitted
     fused: Optional[bool] = None,           # None => _auto_fused()
+    prereveal: Optional[jax.Array] = None,      # (Q, N, T) bool — cells whose
+    prereveal_vals: Optional[jax.Array] = None,  # exact values are known
 ) -> PooledResult:
+    """``prereveal``/``prereveal_vals`` seed the bandit with cells whose
+    exact values an earlier stage already computed (e.g. the stage-1 ANN
+    hit cells, Eq. 15's exact-``h`` branch) at zero reveal cost: they enter
+    the sufficient statistics before round 0, count as revealed for the
+    selection policy (never re-revealed) and for ``reveals``/``coverage``.
+    Both round bodies apply them identically."""
     if fused is None:
         fused = _auto_fused()
     Q, N, T = a.shape
@@ -167,6 +175,14 @@ def run_pooled_bandit(
         doc_mask = jnp.ones((Q, N), jnp.bool_)
     a = jnp.where(doc_mask[:, :, None], a, 0.0).astype(jnp.float32)
     b = jnp.where(doc_mask[:, :, None], b, 0.0).astype(jnp.float32)
+
+    if prereveal is not None:
+        pr_flat = (prereveal & doc_mask[:, :, None]).reshape(Q * N, T)
+        pv_flat = jnp.where(
+            pr_flat, prereveal_vals.reshape(Q * N, T).astype(jnp.float32),
+            0.0)
+    else:
+        pr_flat = pv_flat = None
 
     q_doc_off = (jnp.arange(Q, dtype=jnp.int32) * N)[:, None]       # (Q, 1)
 
@@ -293,11 +309,23 @@ def run_pooled_bandit(
         flat_mask = doc_mask.reshape(Q * N)
 
         new0 = flat_mask[:, None]                               # (Q*N, 1)
+        if pr_flat is not None:
+            # An init cell that stage 1 already revealed is not new: it must
+            # enter the stats exactly once (mirrors _apply_block_reveal's
+            # ``already`` skip in the chain body).
+            already0 = jnp.take_along_axis(pr_flat, flat_t0, axis=1)
+            new0 = new0 & ~already0
         vals0, stats0 = cells_fused(all_docs,
                                     flat_t0 + (all_docs // N * T)[:, None],
                                     new0)
         cellvals0 = jnp.where(flat_mask[:, None],
                               jnp.full((Q * N, T), _UNREV), 0.0)
+        if pr_flat is not None:
+            cellvals0 = jnp.where(pr_flat, pv_flat, cellvals0)
+            stats0 = stats0 + jnp.stack(
+                [jnp.sum(pr_flat, -1).astype(jnp.float32),
+                 jnp.sum(pv_flat, -1), jnp.sum(pv_flat * pv_flat, -1)],
+                axis=-1)
         cellvals0 = cellvals0.at[all_docs[:, None], flat_t0].min(
             jnp.where(new0, vals0, _UNREV))
         state = _FusedState(cellvals=cellvals0, stats=stats0,
@@ -360,6 +388,16 @@ def run_pooled_bandit(
         rounds=jnp.zeros((Q,), jnp.int32),  # per-query round counters
         done=done0,                         # per-query retirement flags
     )
+
+    if pr_flat is not None:
+        # Seed the statistics with the prerevealed cells; the init reveal
+        # below then skips them via _apply_block_reveal's ``already`` check.
+        state = state._replace(
+            values=state.values + pv_flat,
+            revealed=state.revealed | pr_flat,
+            n=state.n + jnp.sum(pr_flat, -1).astype(jnp.int32),
+            total=state.total + jnp.sum(pv_flat, -1),
+            total_sq=state.total_sq + jnp.sum(pv_flat * pv_flat, -1))
 
     init_vals = compute_cells(all_docs,
                               flat_t0 + (all_docs // N * T)[:, None])

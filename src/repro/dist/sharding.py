@@ -211,9 +211,13 @@ def corpus_specs(mesh) -> Dict[str, P]:
     ``repro.retrieval.sharded.ShardedCorpus``: doc dim over every axis,
     token/embedding dims replicated."""
     every = corpus_axes(mesh)
-    return {"embs": P(every, None, None),     # (C, L, M)
-            "mask": P(every, None),           # (C, L)
-            "pooled": P(every, None)}         # (C, M) two-phase summaries
+    return {"embs": P(every, None, None),       # (C, L, M)
+            "mask": P(every, None),             # (C, L)
+            "pooled": P(every, None),           # (C, M) two-phase summaries
+            # centroid-router state is tiny (Kc x M / Kc x S) and every
+            # shard routes every query, so it replicates:
+            "centroids": P(None, None),         # (Kc, M)
+            "shard_mass": P(None, None)}        # (Kc, n_shards)
 
 
 # ---------------------------------------------------------------------------

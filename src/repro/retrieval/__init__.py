@@ -1,7 +1,12 @@
 """Two-stage late-interaction retrieval: index, stage-1 kNN, reranking."""
 from repro.retrieval.ann import CandidateSet, generate_candidates, generic_bounds
+from repro.retrieval.corpus import (CentroidRouter, Corpus, build_corpus,
+                                    build_router, gather_tokens, route_mass,
+                                    route_quotas, validate_quotas)
 from repro.retrieval.index import TokenIndex, build_index, build_index_from_ragged
-from repro.retrieval.pipeline import RerankResult, evaluate_dataset, rerank_query
+from repro.retrieval.pipeline import (RerankResult, ServeResult,
+                                      evaluate_dataset, rerank_query,
+                                      serve_queries)
 from repro.retrieval.sharded import (ShardedCorpus, route_aligned,
                                      route_batch, route_candidates,
                                      shard_corpus)

@@ -23,8 +23,6 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.retrieval.index import TokenIndex
-
 _NEG = jnp.float32(-3e38)
 
 
@@ -48,6 +46,7 @@ def generate_candidates(
     index_embs: jax.Array,      # (C, L, M)
     index_mask: jax.Array,      # (C, L)
     query: jax.Array,           # (T, M)
+    quota=None,                 # () i32 traced cap on |candidates|, or None
     *,
     kprime: int = 10,
     max_candidates: int = 256,
@@ -55,6 +54,7 @@ def generate_candidates(
 ) -> CandidateSet:
     C, L, M = index_embs.shape
     T = query.shape[0]
+    kprime = min(kprime, C * L)   # a tiny shard can't yield k' neighbors
     toks = index_embs.reshape(C * L, M)
     owner = jnp.repeat(jnp.arange(C, dtype=jnp.int32), L)
     valid = index_mask.reshape(-1)
@@ -76,10 +76,17 @@ def generate_candidates(
         best_vals = jnp.pad(best_vals, (0, pad), constant_values=_NEG)
         best_ids = jnp.pad(best_ids, (0, pad), constant_values=0)
     sel = best_vals > _NEG / 2
-    cands = jnp.where(sel, best_ids, jnp.iinfo(jnp.int32).max)
-    cands = jnp.sort(cands)                     # ascending, padding last
-    cands = jnp.where(cands == jnp.iinfo(jnp.int32).max, -1,
-                      cands).astype(jnp.int32)
+    if quota is not None:
+        # Skew-aware routing cap: best_vals is descending, so rank ==
+        # position; keep only the strongest ``quota`` candidates.
+        sel = sel & (jnp.arange(max_candidates) < quota)
+    sentinel = jnp.iinfo(jnp.int32).max
+    sorted_slots = jnp.sort(jnp.where(sel, best_ids, sentinel))
+    # Keep the sentinel-padded array around: it stays ascending, which the
+    # searchsorted hit-lookup below requires (-1 padding would break the
+    # sort order and silently drop exact b-values for high doc ids).
+    cands = jnp.where(sorted_slots == sentinel, -1,
+                      sorted_slots).astype(jnp.int32)
     doc_mask = cands >= 0
 
     a_lo, b_hi = support
@@ -89,9 +96,9 @@ def generate_candidates(
                          (max_candidates, T)).astype(jnp.float32)
 
     # Hit cells: exact h value via scatter-max into candidate rows.
-    pos = jnp.searchsorted(cands, hit_docs)                        # (T, k')
+    pos = jnp.searchsorted(sorted_slots, hit_docs)                 # (T, k')
     pos = jnp.clip(pos, 0, max_candidates - 1)
-    is_cand = jnp.take(cands, pos) == hit_docs
+    is_cand = jnp.take(sorted_slots, pos) == hit_docs
     t_grid = jnp.broadcast_to(jnp.arange(T)[:, None], hit_docs.shape)
     safe_pos = jnp.where(is_cand, pos, max_candidates - 1)
 

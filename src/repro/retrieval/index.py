@@ -2,9 +2,10 @@
 
 Documents are stored padded to a fixed L_max (TPU-static shapes) with a
 validity mask; the flattened (C*L, M) token matrix view drives the stage-1
-per-query-token kNN. At cluster scale the index is sharded by document
-blocks over the ('model', 'pod') mesh axes (see retrieval/service.py) —
-this module is the single-host view used by tests/benchmarks.
+per-query-token kNN. This is the SINGLE-HOST view of the corpus; the
+mesh-resident counterpart is ``retrieval/sharded.ShardedCorpus``, and
+``retrieval/corpus.py`` is the facade that unifies the two (build either
+from one entrypoint, shared candidate-gather helper, centroid router).
 """
 from __future__ import annotations
 
@@ -45,11 +46,8 @@ class TokenIndex:
     def gather_docs(self, doc_ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
         """Candidate sub-index: (N, L, M) embeddings + (N, L) mask.
         Negative ids are padding and come back fully masked."""
-        safe = jnp.maximum(doc_ids, 0)
-        embs = jnp.take(self.doc_embs, safe, axis=0)
-        mask = jnp.take(self.doc_mask, safe, axis=0)
-        mask = mask & (doc_ids >= 0)[:, None]
-        return embs, mask
+        from repro.retrieval.corpus import gather_tokens
+        return gather_tokens(self.doc_embs, self.doc_mask, doc_ids)
 
 
 def build_index(doc_embs: np.ndarray, doc_mask: np.ndarray,

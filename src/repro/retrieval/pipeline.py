@@ -29,6 +29,7 @@ from repro.kernels import ref as kref
 from repro.kernels.ops import maxsim_op
 from repro.retrieval.ann import CandidateSet, generate_candidates, generic_bounds
 from repro.retrieval.index import TokenIndex, build_index
+from repro.retrieval.service import rerank_bandit_step, rerank_dense_step
 
 
 @dataclasses.dataclass
@@ -155,6 +156,66 @@ def rerank_query(
                         flops_exact=flops_exact, overlap=overlap,
                         metrics=task_metrics, rounds=rounds,
                         separated=separated)
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Batched pipeline output (numpy, ready for the caller)."""
+
+    topk_scores: np.ndarray      # (B, K) f32
+    topk_ids: np.ndarray         # (B, K) global doc ids, -1 padded
+    reveal_fraction: np.ndarray  # (B,) fraction of MaxSim cells computed
+    stats: np.ndarray            # (3,) [occupancy, rounds, lockstep waste]
+
+
+def serve_queries(
+    index,
+    queries,                     # (B, T, M)
+    *,
+    k: int = 5,
+    flavor: str = "bandit",      # "dense" | "bandit"
+    kprime: int = 10,
+    max_candidates: int = 64,
+    bandit: Optional[BanditConfig] = None,
+    engine: str = "pooled",
+    max_rounds: int = -1,
+    seed: int = 0,
+) -> ServeResult:
+    """The unified batched pipeline entrypoint: stage-1 kNN + Eq. 15 bounds
+    feeding the SAME engine-facing rerank steps ``RetrievalEngine``
+    AOT-compiles (``service.rerank_dense_step`` / ``rerank_bandit_step``) —
+    what the examples run is what the engine serves.
+
+    ``index`` is duck-typed: a ``TokenIndex`` (``doc_embs``/``doc_mask``),
+    a ``repro.retrieval.corpus.Corpus`` facade, or any object exposing
+    ``embs``/``mask``. (:func:`rerank_query` remains the single-query
+    research harness with the full method zoo and FLOP accounting.)"""
+    embs = getattr(index, "embs", None)
+    mask = getattr(index, "mask", None)
+    if embs is None:
+        embs, mask = index.doc_embs, index.doc_mask
+    bandit = bandit or BanditConfig(k=k)
+    queries = jnp.asarray(queries, jnp.float32)
+
+    cand = jax.vmap(lambda qq: generate_candidates(
+        embs, mask, qq, kprime=kprime, max_candidates=max_candidates,
+        support=bandit.support))(queries)
+    key = jax.random.key(seed)
+    if flavor == "dense":
+        scores, gids, frac, stats = rerank_dense_step(
+            embs, mask, queries, cand.doc_ids, cand.a, cand.b, key, topk=k)
+    elif flavor == "bandit":
+        scores, gids, frac, stats = rerank_bandit_step(
+            embs, mask, queries, cand.doc_ids, cand.a, cand.b, key, topk=k,
+            alpha_ef=bandit.alpha_ef, delta=bandit.delta,
+            block_docs=bandit.block_docs, block_tokens=bandit.block_tokens,
+            max_rounds=max_rounds, engine=engine)
+    else:
+        raise ValueError(f"unknown serving flavor {flavor!r}")
+    return ServeResult(topk_scores=np.asarray(scores),
+                       topk_ids=np.asarray(gids),
+                       reveal_fraction=np.asarray(frac),
+                       stats=np.asarray(stats))
 
 
 def evaluate_dataset(

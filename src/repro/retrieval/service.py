@@ -34,6 +34,8 @@ from repro.core.batched import BatchedConfig, run_batched_bandit
 from repro.core.frontier import run_pooled_bandit
 from repro.kernels.ops import (fused_reveal_op, gather_maxsim_op,
                                maxsim_batch_op)
+from repro.retrieval.ann import generate_candidates
+from repro.retrieval.corpus import gather_tokens, route_mass, route_quotas
 
 _NEG = jnp.float32(-3e38)
 
@@ -65,11 +67,10 @@ def gather_candidates(corpus_embs, corpus_mask, cand_ids):
 
     corpus_embs (C, L, M), corpus_mask (C, L), cand_ids (B, N) with -1
     padding -> docs (B, N, L, M), dmask (B, N, L) (all-False for padding).
+    Thin alias of the facade's :func:`repro.retrieval.corpus.gather_tokens`
+    (one shared gather => every flavor agrees on pad semantics).
     """
-    safe = jnp.maximum(cand_ids, 0)
-    docs = jnp.take(corpus_embs, safe, axis=0)
-    dmask = jnp.take(corpus_mask, safe, axis=0) & (cand_ids >= 0)[:, :, None]
-    return docs, dmask
+    return gather_tokens(corpus_embs, corpus_mask, cand_ids)
 
 
 def _shard_index(every):
@@ -245,7 +246,8 @@ def _lockstep_stats(rounds):
 
 
 def _pooled_rerank(docs, dmask, queries, cand_ids, a, b, keys,
-                   cfg: BatchedConfig, *, fused=None):
+                   cfg: BatchedConfig, *, fused=None, prereveal=None,
+                   prereveal_vals=None):
     """Pooled frontier engine over pre-gathered candidates.
 
     Stacks the (B, N, L, M) candidates to (B*N, L, M) and the query tokens
@@ -257,7 +259,9 @@ def _pooled_rerank(docs, dmask, queries, cand_ids, a, b, keys,
     sufficient-statistic accumulation) everywhere except the
     ``REPRO_KERNEL_IMPL=ref`` oracle lane, which keeps the unfused
     ``gather_maxsim_op`` -> scatter chain; ``fused=False`` forces the
-    chain for A/B. Returns (topk_scores (B, K), topk_global_ids (B, K),
+    chain for A/B. ``prereveal``/``prereveal_vals`` (B, N, T) seed the
+    bandit with exactly-known cells (the stage-1 ANN hit values) at zero
+    reveal cost. Returns (topk_scores (B, K), topk_global_ids (B, K),
     coverage (B,), stats (3,) = [frontier occupancy, total rounds,
     lockstep waste])."""
     Bq, N, L, M = docs.shape
@@ -275,7 +279,9 @@ def _pooled_rerank(docs, dmask, queries, cand_ids, a, b, keys,
                                flat_doc, flat_tok, new_mask)
 
     res = run_pooled_bandit(cells, a, b, keys, cfg, doc_mask=cand_ids >= 0,
-                            compute_cells_fused=cells_fused, fused=fused)
+                            compute_cells_fused=cells_fused, fused=fused,
+                            prereveal=prereveal,
+                            prereveal_vals=prereveal_vals)
     scores = jnp.take_along_axis(res.s_hat, res.topk, axis=1)
     picked = jnp.take_along_axis(cand_ids, res.topk, axis=1)
     gids = jnp.where(picked >= 0, picked, -1)
@@ -681,6 +687,161 @@ def make_sharded_serving_step(mesh: Mesh, flavor: str, *, topk: int = 10,
             out_specs=(P(None, None), P(None, None), P(None),
                        P(every, None)),
         )(corpus_embs, corpus_mask, queries, cand_local, a_local, b_local,
+          valid_docs, seed)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# One-shard_map routed pipeline: shard-local stage-1 + pooled rerank.
+#
+# The gather flavors above still split the pipeline across two
+# architectures: stage-1 kNN and candidate routing run on the HOST
+# (``ann.generate_candidates`` + ``sharded.route_batch``), then the
+# shard_map step consumes the pre-routed (B, n_shards, N_loc) tables. The
+# routed step below retires that round-trip: centroid routing, stage-1
+# kNN over the shard's own (C_loc * L, M) tokens, Eq. 15 bounds, and the
+# pooled bandit rerank ALL run inside one shard_map. Candidate ids,
+# embeddings and bounds never leave their shard — the only cross-shard
+# traffic is the K-sized scorecard all-gather plus two scalar psums.
+#
+#   step(corpus_embs (C_pad, L, M), corpus_mask (C_pad, L),
+#        centroids (Kc, M), shard_mass (Kc, n_shards),   # replicated router
+#        queries (B, T, M), valid_docs (n_shards,), seed ())
+#     -> (topk_scores (B, K), topk_global_ids (B, K), reveal_frac (B,),
+#         stats (n_shards, 5))
+#
+# ``stats`` extends the per-shard reveal diagnostics with two routing
+# columns: [occupancy, total_rounds, lockstep_waste, mean quota share,
+# max quota share] — the skew signal ``metrics.summary()`` surfaces.
+# ---------------------------------------------------------------------------
+
+def make_routed_serving_step(mesh: Mesh, flavor: str = "bandit", *,
+                             topk: int = 10, n_local: int = 16,
+                             n_total: int = 0, kprime: int = 8,
+                             support: Tuple[float, float] = (0.0, 1.0),
+                             prereveal_ann: bool = False,
+                             alpha_ef: float = 0.3, delta: float = 0.01,
+                             block_docs: int = 8, block_tokens: int = 8,
+                             max_rounds: int = -1, max_block_docs: int = 0,
+                             max_block_tokens: int = 0,
+                             engine: str = "pooled", base_seed: int = 0):
+    """Shard-local stage-1 serving step (dense | bandit), centroid-routed.
+
+    Every shard runs the replicated centroid router over the full query
+    batch (identical (B, n_shards) quota table everywhere — routing costs
+    zero communication), caps its own stage-1 kNN at its quota column when
+    ``n_total > 0`` (skew-aware: a shard the router sends little mass to
+    emits few candidates instead of a worst-case-uniform ``n_local``), and
+    feeds its local ``CandidateSet`` — Eq. 15 a/b bounds included —
+    straight into the scorer. ``prereveal_ann=True`` additionally seeds
+    the bandit with the stage-1 hit cells' exact values (zero reveal
+    cost). Quotas are deliberately NOT validated here: shard-local stage-1
+    only ever emits docs the shard genuinely hit, so an over-quota shard
+    yields fewer candidates, never a wrong id — the loud ``ValueError``
+    lives on the host path (``CentroidRouter.route``).
+
+    PRNG: ``fold_in(fold_in(key(base_seed), seed), shard_index)`` — same
+    determinism contract as ``make_sharded_serving_step``."""
+    every = tuple(mesh.axis_names)
+    n_shards = 1
+    for ax in every:
+        n_shards *= int(mesh.shape[ax])
+    if flavor not in ("dense", "bandit"):
+        raise ValueError(f"unknown routed serving flavor: {flavor!r}")
+    rerank = _rerank_engine(engine)
+    if prereveal_ann and engine == "vmapped":
+        raise ValueError("prereveal_ann requires a pooled reveal engine "
+                         "(the vmapped lockstep path has no prereveal)")
+    k_shard = min(topk, n_local)
+    if n_shards * k_shard < topk:
+        raise ValueError(
+            f"cannot assemble a global top-{topk} from {n_shards} shards "
+            f"x {k_shard} candidate slots; raise n_local")
+
+    cfg = BatchedConfig(k=k_shard, delta=delta, alpha_ef=alpha_ef,
+                        block_docs=block_docs, block_tokens=block_tokens,
+                        max_rounds=max_rounds, max_block_docs=max_block_docs,
+                        max_block_tokens=max_block_tokens)
+    gen = functools.partial(generate_candidates, kprime=kprime,
+                            max_candidates=n_local, support=support)
+
+    def step(corpus_embs, corpus_mask, centroids, shard_mass, queries,
+             valid_docs, seed):
+        def shard_fn(c_embs, c_mask, cents, mass, q, vd, sd):
+            shard_ix = _shard_index(every)
+            B, T = q.shape[0], q.shape[1]
+            c_loc = c_embs.shape[0]
+
+            # Centroid routing (replicated state => identical table on
+            # every shard; each reads its own column).
+            m = route_mass(q, cents, mass)                    # (B, S)
+            if n_total:
+                quota = route_quotas(m, n_total)              # (B, S) i32
+                my_quota = quota[:, shard_ix]                 # (B,)
+                share = quota.astype(jnp.float32) / jnp.float32(n_total)
+            else:
+                my_quota = None
+                share = jnp.full((B, n_shards), 1.0 / n_shards, jnp.float32)
+            my_share = share[:, shard_ix]                     # (B,)
+
+            # Shard-local stage-1: per-query-token kNN over this shard's
+            # own (C_loc * L, M) tokens. Pad rows carry all-False masks so
+            # they can never become candidates.
+            if my_quota is None:
+                cand = jax.vmap(lambda qq: gen(c_embs, c_mask, qq))(q)
+            else:
+                cand = jax.vmap(
+                    lambda qq, nq: gen(c_embs, c_mask, qq, nq))(q, my_quota)
+
+            gids = _shard_global_ids(cand.doc_ids, c_loc, every, vd)
+            valid = gids >= 0
+            docs, dmask = gather_candidates(c_embs, c_mask, cand.doc_ids)
+            dmask = dmask & valid[:, :, None]
+            n_cells = (jnp.sum(valid, axis=1) * T).astype(jnp.float32)
+
+            if flavor == "dense":
+                s = _local_maxsim_scores(docs, dmask, q)
+                s = jnp.where(valid, s, _NEG)
+                best, pos = jax.lax.top_k(s, k_shard)
+                bg = jnp.take_along_axis(gids, pos, axis=1)
+                n_rev = n_cells
+                stats3 = jnp.array([1.0, 0.0, 0.0], jnp.float32)
+            else:
+                key = jax.random.fold_in(jax.random.key(base_seed), sd)
+                key = jax.random.fold_in(key, shard_ix)
+                keys = jax.random.split(key, B)
+                a_l = jnp.where(valid[:, :, None], cand.a, 0.0)
+                b_l = jnp.where(valid[:, :, None], cand.b, 0.0)
+                kw = {}
+                n_known = jnp.zeros((B,), jnp.float32)
+                if prereveal_ann:
+                    pr = cand.known_mask & valid[:, :, None]
+                    kw = dict(prereveal=pr, prereveal_vals=cand.known_vals)
+                    n_known = jnp.sum(pr, axis=(1, 2)).astype(jnp.float32)
+                best, bg, cov, stats3 = rerank(
+                    docs, dmask, q, gids, a_l, b_l, keys, cfg, **kw)
+                # Reveal accounting: prereveal cells were free (stage 1
+                # already computed them), so they don't count as work.
+                n_rev = jnp.maximum(cov * n_cells - n_known, 0.0)
+
+            tot_rev = jax.lax.psum(n_rev, every)
+            tot_cells = jax.lax.psum(n_cells, every)
+            frac = tot_rev / jnp.maximum(tot_cells, 1.0)
+            g_best, g_ids = _merge_scorecards(best, bg, every, topk)
+            stats_loc = jnp.concatenate(
+                [stats3, jnp.stack([jnp.mean(my_share),
+                                    jnp.max(my_share)])])[None, :]
+            return g_best, g_ids, frac, stats_loc
+
+        return jax.shard_map(
+            shard_fn, mesh=mesh, check_vma=False,
+            in_specs=(P(every, None, None), P(every, None),
+                      P(None, None), P(None, None),
+                      P(None, None, None), P(None), P()),
+            out_specs=(P(None, None), P(None, None), P(None),
+                       P(every, None)),
+        )(corpus_embs, corpus_mask, centroids, shard_mass, queries,
           valid_docs, seed)
 
     return step

@@ -52,6 +52,10 @@ class ShardedCorpus:
     docs_per_shard: int                  # C_pad // n_shards
     valid_docs: np.ndarray               # (n_shards,) i32 genuine docs/shard
     pooled: Optional[jax.Array] = None   # (C_pad, M) two-phase summaries
+    # Centroid-router state for shard-local stage-1 (a
+    # ``repro.retrieval.corpus.CentroidRouter``; typed as object to keep
+    # this module free of a corpus.py import cycle). Replicated arrays.
+    router: Optional[object] = None
 
     @property
     def padded_docs(self) -> int:
@@ -63,13 +67,21 @@ class ShardedCorpus:
         return jnp.asarray(self.valid_docs, jnp.int32)
 
 
-def shard_corpus(embs, mask, mesh: Mesh, *, pooled=None) -> ShardedCorpus:
+def shard_corpus(embs, mask, mesh: Mesh, *, pooled=None, router=None,
+                 n_centroids: int = 0, router_iters: int = 10,
+                 router_seed: int = 0) -> ShardedCorpus:
     """Pad the doc dim to the mesh's shard count and place every corpus
     array with its ``corpus_specs`` NamedSharding.
 
     A ``bfloat16`` corpus stays bfloat16 on the mesh (half the per-shard
     HBM; every kernel op accumulates in f32); other dtypes normalize to
-    f32."""
+    f32.
+
+    ``n_centroids > 0`` additionally builds the shard-local stage-1
+    centroid router (``repro.retrieval.corpus.build_router``) over the
+    same contiguous-block placement, at shard time; a prebuilt ``router``
+    may be passed instead. Either way its (tiny) arrays are placed
+    replicated on the mesh."""
     embs = np.asarray(embs)
     if embs.dtype != jnp.bfloat16:
         embs = embs.astype(np.float32)
@@ -92,10 +104,24 @@ def shard_corpus(embs, mask, mesh: Mesh, *, pooled=None) -> ShardedCorpus:
         if pad:
             pooled = np.pad(pooled, ((0, pad), (0, 0)))
         pooled_dev = put(pooled, specs["pooled"])
+    if router is None and n_centroids:
+        # late import: corpus.py is the facade ABOVE this module
+        from repro.retrieval.corpus import build_router
+        router = build_router(embs, mask, n_shards=n_shards,
+                              docs_per_shard=c_loc,
+                              n_centroids=n_centroids, n_iters=router_iters,
+                              seed=router_seed, valid_docs=valid)
+    if router is not None:
+        router = dataclasses.replace(
+            router,
+            centroids=put(np.asarray(router.centroids, np.float32),
+                          specs["centroids"]),
+            shard_mass=put(np.asarray(router.shard_mass, np.float32),
+                           specs["shard_mass"]))
     return ShardedCorpus(
         embs=put(embs, specs["embs"]), mask=put(mask, specs["mask"]),
         mesh=mesh, n_docs=C, n_shards=n_shards, docs_per_shard=c_loc,
-        valid_docs=valid, pooled=pooled_dev)
+        valid_docs=valid, pooled=pooled_dev, router=router)
 
 
 def _routing_placement(cand_ids: np.ndarray, docs_per_shard: int,

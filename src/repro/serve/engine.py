@@ -39,9 +39,11 @@ from repro.dist.fault import DeadlineBatcher
 from repro.kernels import tuning
 from repro.kernels.ops import autotune_op
 from repro.retrieval.ann import generate_candidates
-from repro.retrieval.service import (make_serving_step,
+from repro.retrieval.corpus import Corpus, build_corpus
+from repro.retrieval.service import (make_routed_serving_step,
+                                     make_serving_step,
                                      make_sharded_serving_step)
-from repro.retrieval.sharded import ShardedCorpus, route_batch, shard_corpus
+from repro.retrieval.sharded import route_batch
 from repro.serve.bucketing import (ShapeBuckets, pad_candidates, pad_queries,
                                    support_bounds)
 from repro.serve.lm import generate, serve_step  # noqa: F401  (back-compat)
@@ -101,6 +103,23 @@ class EngineConfig:
     # stage-1 ANN (requests without a candidate list)
     stage1_kprime: int = 8
     stage1_candidates: int = 0        # 0 => smallest candidate bucket
+    # Stage-1 placement on a sharded corpus: "host" is the legacy path
+    # (host-side ANN over the full index + route_batch routing tables);
+    # "local" runs the whole pipeline — centroid route -> shard-local kNN
+    # -> Eq. 15 bounds -> rerank -> scorecard merge — inside ONE shard_map
+    # (service.make_routed_serving_step): no host round-trip, candidate
+    # embeddings never cross shards. Candidate-carrying requests always
+    # use the host path (their ids are already global).
+    stage1: str = "host"
+    # "local" only: k-means centroid count for the skew-aware router built
+    # at shard_corpus time, and the global per-query candidate budget the
+    # router splits into per-shard quotas (0 = no quota: every shard emits
+    # up to its full n_local — still shard-local, just not skew-aware).
+    stage1_centroids: int = 8
+    stage1_total: int = 0
+    # "local" bandit only: seed the bandit with the stage-1 hit cells'
+    # exact values (Eq. 15's exact-h branch) at zero reveal cost.
+    prereveal_ann: bool = False
     # Admission headroom: a request's completion deadline minus the expected
     # batch service time (EMA of observed batches, floored by this) is what
     # the batcher gets — releasing AT the completion deadline would make
@@ -162,6 +181,11 @@ class BatchRecord:
     lockstep_waste: float = 0.0
     shard_occupancy: Optional[Tuple[float, ...]] = None
     shard_rounds: Optional[Tuple[float, ...]] = None
+    # Routed (shard-local stage-1) batches only: each shard's mean routed
+    # quota share over the batch's queries (columns sum to ~1 across
+    # shards; uniform = 1/n_shards). The skew signal metrics.summary()
+    # aggregates into routed_quota_share_mean / routed_skew.
+    shard_quota_share: Optional[Tuple[float, ...]] = None
 
 
 class EngineMetrics:
@@ -229,11 +253,19 @@ class EngineMetrics:
             return {}
         rounds = np.sum([b.shard_rounds for b in sharded], axis=0)
         occ = np.mean([b.shard_occupancy for b in sharded], axis=0)
-        return {
+        out = {
             "n_shards": len(rounds),
             "shard_rounds_total": [float(r) for r in rounds],
             "shard_occupancy_mean": [float(o) for o in occ],
         }
+        routed = [b for b in sharded if b.shard_quota_share is not None]
+        if routed:
+            qs = np.mean([b.shard_quota_share for b in routed], axis=0)
+            # skew = hottest shard's share relative to a uniform split
+            # (1.0 = perfectly balanced routing, n_shards = worst case).
+            out["routed_quota_share_mean"] = [float(q) for q in qs]
+            out["routed_skew"] = float(np.max(qs) * len(qs))
+        return out
 
 
 class RetrievalEngine:
@@ -255,25 +287,31 @@ class RetrievalEngine:
                  clock: Callable[[], float] = time.monotonic):
         self.cfg = config or EngineConfig()
         self.clock = clock
-        self.sharded: Optional[ShardedCorpus] = None
+        if self.cfg.stage1 not in ("host", "local"):
+            raise ValueError(f"unknown stage1 placement {self.cfg.stage1!r} "
+                             "(expected 'host' or 'local')")
+        mesh = None
         if self.cfg.mesh_axes:
             names = tuple(a for a, _ in self.cfg.mesh_axes)
             shape = tuple(int(n) for _, n in self.cfg.mesh_axes)
             mesh = jax.make_mesh(shape, names)
-            self.sharded = shard_corpus(corpus_embs, corpus_mask, mesh)
-            self.corpus_embs = self.sharded.embs
-            self.corpus_mask = self.sharded.mask
-            self._valid_docs = self.sharded.valid_docs_device()
-        else:
-            # bf16 corpora stay bf16 end-to-end (half the HBM, kernels
-            # accumulate in f32); everything else normalizes to f32.
-            embs = jnp.asarray(corpus_embs)
-            if embs.dtype != jnp.bfloat16:
-                embs = embs.astype(jnp.float32)
-            self.corpus_embs = embs
-            self.corpus_mask = jnp.asarray(corpus_mask, jnp.bool_)
-        if self.corpus_embs.ndim != 3 or self.corpus_mask.ndim != 2:
-            raise ValueError("corpus must be (C, L, M) embs + (C, L) mask")
+        elif self.cfg.stage1 == "local":
+            raise ValueError("stage1='local' runs inside the corpus "
+                             "shard_map and needs mesh_axes")
+        self._routed = mesh is not None and self.cfg.stage1 == "local"
+        # The unified facade (repro.retrieval.corpus): one attribute
+        # surface for the single-device and mesh-resident placements; the
+        # centroid router is built at shard time when shard-local stage-1
+        # will consume it.
+        self.corpus: Corpus = build_corpus(
+            corpus_embs, corpus_mask, mesh=mesh,
+            n_centroids=self.cfg.stage1_centroids if self._routed else 0,
+            router_seed=self.cfg.seed)
+        self.corpus_embs = self.corpus.embs
+        self.corpus_mask = self.corpus.mask
+        self._router_args = self.corpus.router_arrays()
+        if mesh is not None:
+            self._valid_docs = self.corpus.valid_docs_device()
         self.buckets = ShapeBuckets(self.cfg.token_buckets,
                                     self.cfg.cand_buckets)
         self._stage1_n = (self.cfg.stage1_candidates
@@ -291,6 +329,12 @@ class RetrievalEngine:
         self._warmed = False
         self._service_ema = 0.0           # observed batch service time (s)
         self.metrics = EngineMetrics()
+
+    @property
+    def sharded(self) -> Optional[Corpus]:
+        """The mesh-resident corpus view, None on a single-device engine
+        (back-compat name; ``self.corpus`` is the unified facade)."""
+        return self.corpus if self.corpus.mesh is not None else None
 
     # -- flavor policy ----------------------------------------------------
 
@@ -364,6 +408,28 @@ class RetrievalEngine:
                         SDS((B, nb, tb), jnp.float32),
                         SDS((), jnp.int32))
                 exe = jax.jit(run).lower(*args).compile()
+        elif key[0] == "routed":
+            # One-shard_map pipeline: centroid route + shard-local stage-1
+            # + rerank + merge, one executable per (flavor, token bucket)
+            # — the candidate bucket is pinned to the stage-1 width.
+            _, flavor, tb = key
+            corpus = self.corpus
+            step = make_routed_serving_step(
+                corpus.mesh, flavor, topk=cfg.max_k,
+                n_local=self._stage1_n, n_total=cfg.stage1_total,
+                kprime=cfg.stage1_kprime, support=cfg.support,
+                prereveal_ann=cfg.prereveal_ann, alpha_ef=cfg.alpha_ef,
+                delta=cfg.delta, block_docs=cfg.block_docs,
+                block_tokens=cfg.block_tokens, max_rounds=cfg.max_rounds,
+                max_block_docs=cfg.max_block_docs,
+                max_block_tokens=cfg.max_block_tokens,
+                engine=cfg.bandit_engine, base_seed=cfg.seed)
+            cents, mass = self._router_args
+            args = (self.corpus_embs, self.corpus_mask, cents, mass,
+                    SDS((B, tb, M), jnp.float32),
+                    SDS((corpus.n_shards,), jnp.int32),
+                    SDS((), jnp.int32))
+            exe = jax.jit(step).lower(*args).compile()
         elif key[0] == "stage1":
             _, tb = key
             nb, kp, support = self._stage1_n, cfg.stage1_kprime, cfg.support
@@ -461,6 +527,12 @@ class RetrievalEngine:
                     for op, dims in self._autotune_dims()})
         for tb in self.buckets.token_buckets:
             self._executable(("stage1", tb))
+            if self._routed:
+                # Candidate-less batches dispatch to the one-shard_map
+                # routed pipeline; the host stage-1/step executables stay
+                # compiled too (mixed candidate-carrying traffic).
+                self._executable(("routed", self.flavor_for(self._stage1_n),
+                                  tb))
             for nb in self.buckets.cand_buckets:
                 # flavor_for is a pure function of the bucket, so exactly one
                 # flavor is reachable per (tb, nb) — compile just that one.
@@ -547,6 +619,9 @@ class RetrievalEngine:
         tb = self.buckets.token_bucket(max(r.query.shape[0] for r in real))
         provided = [r.cand_ids for r in reqs]
         missing = [c is None for c in provided]
+        if self._routed and all(missing):
+            return self._serve_batch_routed(reqs, real, n_real, tb,
+                                            t_release)
         n_need = max([len(c) for c in provided if c is not None], default=0)
         if any(missing):
             n_need = max(n_need, self._stage1_n)
@@ -595,15 +670,44 @@ class RetrievalEngine:
             scores, gids, frac, stats = exe(
                 self.corpus_embs, self.corpus_mask, jnp.asarray(queries),
                 jnp.asarray(cand), jnp.asarray(a), jnp.asarray(b), seed)
+        return self._finish_batch(real, n_real, (tb, nb), flavor, t_release,
+                                  scores, gids, frac, stats)
+
+    def _serve_batch_routed(self, reqs: Sequence[Request],
+                            real: List[Request], n_real: int, tb: int,
+                            t_release: float) -> List[Completion]:
+        """One-shard_map dispatch for candidate-less batches on a routed
+        engine: no host stage-1, no routing tables — queries in,
+        scorecards out."""
+        nb = self._stage1_n
+        flavor = self.flavor_for(nb)
+        exe = self._executable(("routed", flavor, tb))
+        queries = pad_queries([r.query for r in reqs], tb)
+        seed = jnp.int32(next(self._batch_seed))
+        cents, mass = self._router_args
+        scores, gids, frac, stats = exe(
+            self.corpus_embs, self.corpus_mask, cents, mass,
+            jnp.asarray(queries), self._valid_docs, seed)
+        return self._finish_batch(real, n_real, (tb, nb), flavor, t_release,
+                                  scores, gids, frac, stats)
+
+    def _finish_batch(self, real: List[Request], n_real: int,
+                      bucket: Tuple[int, int], flavor: str,
+                      t_release: float, scores, gids, frac,
+                      stats) -> List[Completion]:
+        cfg = self.cfg
         scores, gids, frac, stats = jax.block_until_ready(
             (scores, gids, frac, stats))
         scores, gids, frac, stats = (np.asarray(scores), np.asarray(gids),
                                      np.asarray(frac), np.asarray(stats))
         t_done = self.clock()
 
-        if stats.ndim == 2:        # sharded: (n_shards, 3) per-shard vectors
+        shard_quota = None
+        if stats.ndim == 2:        # sharded: per-shard diagnostic vectors
             shard_occ = tuple(float(x) for x in stats[:, 0])
             shard_rounds = tuple(float(x) for x in stats[:, 1])
+            if stats.shape[1] >= 5:   # routed step: quota-share columns
+                shard_quota = tuple(float(x) for x in stats[:, 3])
             # aggregate occupancy over the shards that did frontier work
             busy = stats[stats[:, 1] > 0]
             agg = (float(np.mean(busy[:, 0])) if len(busy)
@@ -617,7 +721,7 @@ class RetrievalEngine:
         self._service_ema = (service_s if not self.metrics.batches
                              else 0.7 * self._service_ema + 0.3 * service_s)
         self.metrics.batches.append(BatchRecord(
-            bucket=(tb, nb), flavor=flavor, n_real=n_real,
+            bucket=bucket, flavor=flavor, n_real=n_real,
             occupancy=n_real / cfg.batch_size,
             service_s=service_s,
             reveal_fraction=float(np.mean(frac[:n_real])),
@@ -625,7 +729,8 @@ class RetrievalEngine:
             total_rounds=agg[1],
             lockstep_waste=agg[2],
             shard_occupancy=shard_occ,
-            shard_rounds=shard_rounds))
+            shard_rounds=shard_rounds,
+            shard_quota_share=shard_quota))
 
         done: List[Completion] = []
         for i, r in enumerate(real):
@@ -643,7 +748,7 @@ class RetrievalEngine:
                 # finishing after the deadline is a miss.
                 deadline_miss=(r.deadline_abs is not None
                                and t_done > r.deadline_abs + 1e-9),
-                flavor=flavor, bucket=(tb, nb),
+                flavor=flavor, bucket=bucket,
                 reveal_fraction=float(frac[i]))
             done.append(comp)
         self.metrics.completions.extend(done)

@@ -1,0 +1,202 @@
+"""ISSUE 6: shard-local stage-1 ANN with skew-aware candidate routing.
+
+The one-shard_map serving step (``make_routed_serving_step``) must return
+the IDENTICAL top-K scorecards as the host-routed path it replaces
+(``stage1="host"``: full-corpus stage-1 + numpy ``route_batch`` + the
+gathered shard_map step) whenever both see the same candidates. The parity
+configuration makes coverage total on both sides: ``kprime`` far above
+C*L (clamped inside ``generate_candidates``, so every doc is a stage-1
+hit with exact Eq. 15 b-bounds), host ``max_candidates >= C`` and local
+``n_local >= c_loc``, and ``n_total=0`` (no quota capping). Per-shard
+candidate lists then agree slot-for-slot — both stage-1s emit ascending
+doc ids — so even the BANDIT trajectories match bit-for-bit (the PRNG
+contract ``fold_in(fold_in(key(base_seed), seed), shard_index)`` is shared).
+
+Multi-device programs run in subprocesses (tests/_subproc.py);
+REPRO_KERNEL_IMPL is forwarded so CI's ref/interpret lanes cover the
+routed shard_map too. Satellite coverage: ragged corpus (C=41) at both 4
+and 1 virtual devices, the quota-capped path, and the engine's routed
+dispatch (zero recompiles + skew metrics).
+"""
+import numpy as np
+import pytest
+
+from _subproc import run_in_subprocess
+
+# Ragged corpus: C=41 over 4 shards -> c_loc=11, valid=[11, 11, 11, 8].
+# KP >> C*L forces full stage-1 coverage (see module docstring).
+_SETUP = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.retrieval.ann import generate_candidates
+from repro.retrieval.service import (make_rerank_dense_step,
+                                     make_routed_serving_step,
+                                     make_sharded_serving_step)
+from repro.retrieval.sharded import route_batch, shard_corpus
+
+rng = np.random.default_rng(0)
+C, L, M, B, T = 41, 12, 16, 4, 8
+KP = 100_000
+emb = rng.standard_normal((C, L, M)).astype(np.float32)
+emb /= np.linalg.norm(emb, axis=-1, keepdims=True)
+msk = np.arange(L)[None] < rng.integers(4, L + 1, C)[:, None]
+q_np = rng.standard_normal((B, T, M)).astype(np.float32)
+q_np /= np.linalg.norm(q_np, axis=-1, keepdims=True)
+q = jnp.asarray(q_np)
+
+# host-side stage-1 over the FULL corpus (the gathered path's front end)
+cand = jax.vmap(lambda qq: generate_candidates(
+    jnp.asarray(emb), jnp.asarray(msk), qq, kprime=KP,
+    max_candidates=48))(q)
+
+
+def check_topk(got_s, got_i, want_s, want_i, label):
+    got_s, got_i = np.asarray(got_s), np.asarray(got_i)
+    want_s, want_i = np.asarray(want_s), np.asarray(want_i)
+    for b in range(got_i.shape[0]):
+        assert set(got_i[b]) == set(want_i[b]), (label, b, got_i[b], want_i[b])
+        np.testing.assert_allclose(np.sort(got_s[b]), np.sort(want_s[b]),
+                                   atol=1e-4, err_msg=f"{label} q{b}")
+
+
+def run_parity(mesh, sc, n_local, n_devices_label):
+    cand_l, (a_l, b_l) = route_batch(
+        np.asarray(cand.doc_ids), [np.asarray(cand.a), np.asarray(cand.b)],
+        sc.docs_per_shard, sc.n_shards, n_local=n_local)
+    kw = dict(topk=5, alpha_ef=1e9, block_docs=4, block_tokens=4)
+    cents, mass = sc.router.centroids, sc.router.shard_mass
+    for flavor in ("dense", "bandit"):
+        host = make_sharded_serving_step(mesh, flavor, **kw)
+        sh, ih, fh, sth = host(sc.embs, sc.mask, q, jnp.asarray(cand_l),
+                               jnp.asarray(a_l), jnp.asarray(b_l),
+                               sc.valid_docs_device(), jnp.int32(0))
+        routed = make_routed_serving_step(mesh, flavor, n_local=n_local,
+                                          n_total=0, kprime=KP, **kw)
+        sr, ir, fr, st = routed(sc.embs, sc.mask, cents, mass, q,
+                                sc.valid_docs_device(), jnp.int32(0))
+        label = flavor + n_devices_label
+        check_topk(sr, ir, sh, ih, label)
+        assert np.asarray(st).shape == (sc.n_shards, 5), label
+        if flavor == "bandit":
+            # full coverage + shared PRNG => identical reveal trajectories
+            np.testing.assert_allclose(np.asarray(fr), np.asarray(fh),
+                                       atol=1e-5, err_msg=label)
+        else:
+            # dense absolute reference: 1-shard exact rerank of the same list
+            mesh1 = jax.make_mesh((1,), ("ref",))
+            d1 = make_rerank_dense_step(mesh1, topk=5)
+            sd, idd = d1(jnp.asarray(emb), jnp.asarray(msk), q,
+                         jnp.asarray(np.asarray(cand.doc_ids)[:, None, :]))
+            check_topk(sr, ir, sd, idd, label + "_vs_exact")
+"""
+
+
+def test_routed_stage1_parity_4_shards():
+    """Local vs host stage-1 on the ragged 4-shard mesh: identical top-K
+    scorecards for dense AND bandit, identical bandit reveal fractions."""
+    out = run_in_subprocess(_SETUP + """
+mesh4 = jax.make_mesh((2, 2), ("data", "model"))
+sc = shard_corpus(emb, msk, mesh4, n_centroids=4)
+assert list(sc.valid_docs) == [11, 11, 11, 8]
+assert sc.router is not None
+run_parity(mesh4, sc, n_local=16, n_devices_label="@4dev")
+print("PARITY4_OK")
+    """, n_devices=4)
+    assert "PARITY4_OK" in out
+
+
+def test_routed_stage1_parity_1_device():
+    """Same parity on a single device (n_shards=1, n_local >= C): the
+    routed step must degrade to the plain pipeline, not assume S > 1."""
+    out = run_in_subprocess(_SETUP + """
+mesh1 = jax.make_mesh((1,), ("data",))
+sc = shard_corpus(emb, msk, mesh1, n_centroids=4)
+assert (sc.n_shards, sc.docs_per_shard) == (1, 41)
+run_parity(mesh1, sc, n_local=48, n_devices_label="@1dev")
+print("PARITY1_OK")
+    """, n_devices=1)
+    assert "PARITY1_OK" in out
+
+
+def test_routed_quota_capped_smoke():
+    """Skew-aware path (n_total > 0): per-shard stage-1 capped at the
+    routed quota still emits only real, duplicate-free global ids, sane
+    reveal fractions, and a quota-share column that sums to 1."""
+    out = run_in_subprocess(_SETUP + """
+mesh4 = jax.make_mesh((2, 2), ("data", "model"))
+sc = shard_corpus(emb, msk, mesh4, n_centroids=4)
+step = make_routed_serving_step(mesh4, "bandit", topk=5, n_local=16,
+                                n_total=24, kprime=6, alpha_ef=0.3,
+                                block_docs=4, block_tokens=4)
+s, i, f, st = step(sc.embs, sc.mask, sc.router.centroids,
+                   sc.router.shard_mass, q, sc.valid_docs_device(),
+                   jnp.int32(0))
+i, f, st = np.asarray(i), np.asarray(f), np.asarray(st)
+assert ((i >= -1) & (i < C)).all(), i
+for b in range(B):
+    real = i[b][i[b] >= 0]
+    assert len(set(real.tolist())) == len(real), (b, i[b])
+    assert len(real) >= 5, (b, i[b])           # 24 candidates >> top-5
+assert ((f > 0.0) & (f <= 1.0 + 1e-6)).all(), f
+assert st.shape == (4, 5)
+qs = st[:, 3]                                   # mean quota share per shard
+assert np.isclose(qs.sum(), 1.0, atol=1e-4), qs
+assert (st[:, 4] >= qs - 1e-6).all()            # max share >= mean share
+print("QUOTA_OK")
+    """, n_devices=4)
+    assert "QUOTA_OK" in out
+
+
+def test_engine_routed_stage1_zero_recompile_and_parity():
+    """RetrievalEngine with stage1="local": warmup pre-compiles the routed
+    executable, candidate-less traffic serves with ZERO recompiles, every
+    completion matches the stage1="host" engine, and the routed skew
+    metrics surface in the summary (and ONLY there)."""
+    out = run_in_subprocess("""
+import numpy as np
+from repro.data.synthetic import make_retrieval_dataset
+from repro.serve import EngineConfig, Request, RetrievalEngine
+
+ds = make_retrieval_dataset(n_docs=47, n_queries=8, doc_len=16,
+                            min_doc_len=6, query_len=8, dim=16, seed=3)
+kw = dict(batch_size=4, deadline_s=0.5, token_buckets=(8,),
+          cand_buckets=(48,), max_k=5, flavor="dense",
+          stage1_candidates=48, stage1_kprime=100_000,
+          mesh_axes=(("data", 2), ("model", 2)))
+loc = RetrievalEngine(ds.doc_embs, ds.doc_mask,
+                      EngineConfig(stage1="local", **kw))
+host = RetrievalEngine(ds.doc_embs, ds.doc_mask,
+                       EngineConfig(stage1="host", **kw))
+loc.warmup()
+host.warmup()
+for i in range(8):
+    for e in (loc, host):
+        e.submit(Request(query=ds.queries[i][:8], k=5))
+got = {c.rid: c for c in loc.drain()}
+want = {c.rid: c for c in host.drain()}
+assert len(got) == 8
+for rid, c in got.items():
+    assert set(c.topk_ids) == set(want[rid].topk_ids), rid
+    np.testing.assert_allclose(np.sort(c.topk_scores),
+                               np.sort(want[rid].topk_scores), atol=1e-4)
+assert loc.metrics.compiles_after_warmup == 0
+assert host.metrics.compiles_after_warmup == 0
+s = loc.metrics.summary()
+assert len(s["routed_quota_share_mean"]) == 4
+assert abs(s["routed_skew"] - 1.0) < 1e-4      # stage1_total=0: uniform
+assert "routed_quota_share_mean" not in host.metrics.summary()
+print("ENGINE_ROUTED_OK")
+    """, n_devices=4)
+    assert "ENGINE_ROUTED_OK" in out
+
+
+def test_engine_stage1_local_requires_mesh():
+    """stage1="local" runs inside the corpus shard_map — constructing the
+    engine without a mesh must fail loudly, not fall back to host routing."""
+    from repro.serve import EngineConfig, RetrievalEngine
+
+    embs = np.zeros((8, 4, 8), np.float32)
+    mask = np.ones((8, 4), bool)
+    with pytest.raises(ValueError, match="mesh_axes"):
+        RetrievalEngine(embs, mask, EngineConfig(stage1="local"))
+    with pytest.raises(ValueError, match="stage1"):
+        RetrievalEngine(embs, mask, EngineConfig(stage1="bogus"))

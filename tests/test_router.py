@@ -1,0 +1,225 @@
+"""Property + regression tests for the centroid router and the prereveal
+seam it feeds (ISSUE 6).
+
+The router's contract is arithmetic, so it property-tests cleanly:
+  * quota conservation — per-query quotas ALWAYS sum to the global budget,
+    whatever the routed mass looks like (including all-zero rows);
+  * determinism — same seed, same corpus => bit-identical router state;
+  * loud failure — a quota exceeding a shard's ``valid_docs`` (or the
+    compiled ``n_local``) raises ``ValueError``, never clamps.
+
+Plus chain-vs-fused parity of ``run_pooled_bandit``'s prereveal seeding:
+both round bodies must make identical reveal decisions when the bandit is
+seeded with exactly-known cells (the Eq. 15 stage-1 hit values).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.batched import BatchedConfig
+from repro.core.frontier import run_pooled_bandit
+from repro.retrieval.corpus import (CentroidRouter, build_router,
+                                    route_mass, route_quotas,
+                                    validate_quotas)
+
+_MULT = max(1, int(os.environ.get("REPRO_HYP_EXAMPLES_MULT", "1")))
+
+
+# ---------------------------------------------------------------------------
+# Quota conservation + bounds
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 7), st.integers(1, 64))
+@settings(max_examples=40 * _MULT, deadline=None)
+def test_quota_conservation(seed, n_shards, n_total):
+    """sum(quotas[b]) == n_total for EVERY query, over random masses —
+    including all-zero rows (uniform fallback) and heavily skewed ones."""
+    rng = np.random.default_rng(seed)
+    B = 5
+    mass = rng.uniform(0.0, 1.0, (B, n_shards)).astype(np.float32)
+    mass[rng.random(B) < 0.3] = 0.0          # router missed every centroid
+    mass[rng.random((B, n_shards)) < 0.4] = 0.0   # sparse shard coverage
+    q = np.asarray(route_quotas(jnp.asarray(mass), n_total))
+    assert q.shape == (B, n_shards)
+    np.testing.assert_array_equal(q.sum(axis=1), n_total)
+    assert (q >= 0).all() and (q <= n_total).all()
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15 * _MULT, deadline=None)
+def test_quota_proportionality(seed):
+    """Quotas track the routed mass: largest-remainder rounding keeps each
+    quota within one unit of its proportional ideal."""
+    rng = np.random.default_rng(seed)
+    S, n_total = 4, 32
+    mass = rng.uniform(0.1, 1.0, (3, S)).astype(np.float32)
+    q = np.asarray(route_quotas(jnp.asarray(mass), n_total))
+    ideal = mass / mass.sum(axis=1, keepdims=True) * n_total
+    assert (np.abs(q - ideal) < 1.0 + 1e-5).all()
+
+
+def test_zero_mass_uniform_fallback():
+    q = np.asarray(route_quotas(jnp.zeros((2, 4), jnp.float32), 8))
+    np.testing.assert_array_equal(q, np.full((2, 4), 2))
+
+
+def test_zero_centroid_router_routes_zero_mass():
+    m = route_mass(jnp.ones((2, 3, 8), jnp.float32),
+                   jnp.zeros((0, 8), jnp.float32),
+                   jnp.zeros((0, 4), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(m), np.zeros((2, 4)))
+
+
+# ---------------------------------------------------------------------------
+# Router construction: determinism + mass accounting
+# ---------------------------------------------------------------------------
+
+def _toy_corpus(seed=0, C=37, L=4, M=8):
+    rng = np.random.default_rng(seed)
+    embs = rng.normal(size=(C, L, M)).astype(np.float32)
+    mask = rng.random((C, L)) < 0.85
+    mask[0] = False                          # a doc with no valid token
+    return embs, mask
+
+
+def test_build_router_deterministic_under_seed():
+    embs, mask = _toy_corpus()
+    r1 = build_router(embs, mask, n_shards=4, docs_per_shard=10, seed=3)
+    r2 = build_router(embs, mask, n_shards=4, docs_per_shard=10, seed=3)
+    np.testing.assert_array_equal(np.asarray(r1.centroids),
+                                  np.asarray(r2.centroids))
+    np.testing.assert_array_equal(np.asarray(r1.shard_mass),
+                                  np.asarray(r2.shard_mass))
+
+
+def test_build_router_mass_accounting():
+    """shard_mass totals the docs with >= 1 valid token, split by the
+    contiguous-block shard placement; tokenless docs carry no mass."""
+    embs, mask = _toy_corpus()
+    r = build_router(embs, mask, n_shards=4, docs_per_shard=10)
+    sm = np.asarray(r.shard_mass)
+    n_live = int(mask.any(1).sum())
+    assert sm.sum() == n_live                # doc 0 (no tokens) excluded
+    per_shard = sm.sum(axis=0)
+    expect = np.array([mask.any(1)[s * 10:(s + 1) * 10].sum()
+                       for s in range(4)])
+    np.testing.assert_array_equal(per_shard, expect)
+    # centroids are unit rows (spherical k-means)
+    norms = np.linalg.norm(np.asarray(r.centroids), axis=-1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-5)
+
+
+def test_router_route_deterministic():
+    embs, mask = _toy_corpus()
+    r = build_router(embs, mask, n_shards=4, docs_per_shard=10, seed=1)
+    q = np.random.default_rng(5).normal(size=(3, 6, 8)).astype(np.float32)
+    q1 = r.route(q, n_total=8)
+    q2 = r.route(q, n_total=8)
+    np.testing.assert_array_equal(q1, q2)
+    np.testing.assert_array_equal(q1.sum(axis=1), 8)
+
+
+# ---------------------------------------------------------------------------
+# Loud failure: quotas never silently clamp
+# ---------------------------------------------------------------------------
+
+def test_validate_quotas_valid_docs_message():
+    with pytest.raises(ValueError, match=r"exceeds its valid_docs=3"):
+        validate_quotas(np.array([[5, 0]]), np.array([3, 3]))
+
+
+def test_validate_quotas_n_local_message():
+    with pytest.raises(ValueError, match=r"per-shard capacity n_local=2"):
+        validate_quotas(np.array([[3, 3]]), np.array([8, 8]), n_local=2)
+
+
+def test_router_route_raises_on_overfull_shard():
+    """End-to-end host API: all routed mass on a shard with too few docs
+    must raise, not serve a silently shortened candidate list."""
+    router = CentroidRouter(
+        centroids=jnp.ones((1, 8), jnp.float32) / np.sqrt(8.0),
+        shard_mass=jnp.asarray([[10.0, 0.0]], jnp.float32),
+        valid_docs=np.array([2, 2], np.int32))
+    q = np.ones((1, 3, 8), np.float32)
+    with pytest.raises(ValueError, match="exceeds its valid_docs"):
+        router.route(q, n_total=8)
+    router.route(q, n_total=2)               # within capacity: fine
+
+
+# ---------------------------------------------------------------------------
+# Prereveal seeding: chain-vs-fused parity + stat correctness
+# ---------------------------------------------------------------------------
+
+def _oracle_cells(h):
+    Q, N, T = h.shape
+    h_flat = jnp.asarray(h).reshape(Q * N, T)
+
+    def cells(flat_doc, flat_tok):
+        t_local = flat_tok - (flat_doc // N * T)[:, None]
+        return h_flat[flat_doc[:, None], jnp.clip(t_local, 0, T - 1)]
+
+    return cells
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=8 * _MULT, deadline=None)
+def test_prereveal_chain_fused_parity(seed):
+    """Seeding the bandit with exactly-known cells must leave both round
+    bodies bit-identical: same top-K, same estimates, same reveal sets."""
+    rng = np.random.default_rng(seed)
+    Q, N, T = 3, 6, 5
+    h = rng.uniform(0.0, 1.0, (Q, N, T)).astype(np.float32)
+    doc_mask = rng.random((Q, N)) < 0.8
+    doc_mask[:, 0] = True
+    pr = (rng.random((Q, N, T)) < 0.4) & doc_mask[:, :, None]
+    a = np.zeros((Q, N, T), np.float32)
+    b = np.ones((Q, N, T), np.float32)
+    keys = jax.random.split(jax.random.key(seed % 997), Q)
+    cfg = BatchedConfig(k=2, block_docs=2, block_tokens=2, max_rounds=64)
+
+    res = {}
+    for fused in (False, True):
+        res[fused] = run_pooled_bandit(
+            _oracle_cells(h), jnp.asarray(a), jnp.asarray(b), keys, cfg,
+            doc_mask=jnp.asarray(doc_mask), fused=fused,
+            prereveal=jnp.asarray(pr), prereveal_vals=jnp.asarray(h))
+    c, f = res[False], res[True]
+    np.testing.assert_array_equal(np.asarray(c.topk), np.asarray(f.topk))
+    np.testing.assert_allclose(np.asarray(c.s_hat), np.asarray(f.s_hat),
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(c.reveals),
+                                  np.asarray(f.reveals))
+    np.testing.assert_array_equal(np.asarray(c.revealed),
+                                  np.asarray(f.revealed))
+    np.testing.assert_array_equal(np.asarray(c.rounds), np.asarray(f.rounds))
+    # prereveal cells count as revealed from round 0 in both bodies
+    assert (np.asarray(c.revealed) | ~pr).all()
+
+
+def test_full_prereveal_is_exact_and_immediate():
+    """Prerevealing EVERY valid cell gives exact scores with zero extra
+    reveal work beyond round bookkeeping: s_hat == sum_t h and the reveal
+    set never grows past the seeded cells."""
+    rng = np.random.default_rng(0)
+    Q, N, T = 2, 5, 4
+    h = rng.uniform(0.0, 1.0, (Q, N, T)).astype(np.float32)
+    doc_mask = np.ones((Q, N), bool)
+    pr = np.ones((Q, N, T), bool)
+    keys = jax.random.split(jax.random.key(7), Q)
+    cfg = BatchedConfig(k=2, block_docs=2, block_tokens=2, max_rounds=32)
+    for fused in (False, True):
+        res = run_pooled_bandit(
+            _oracle_cells(h), jnp.zeros((Q, N, T)), jnp.ones((Q, N, T)),
+            keys, cfg, doc_mask=jnp.asarray(doc_mask), fused=fused,
+            prereveal=jnp.asarray(pr), prereveal_vals=jnp.asarray(h))
+        np.testing.assert_allclose(np.asarray(res.s_hat), h.sum(-1),
+                                   atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(res.reveals), N * T)
+        exact_top = np.argsort(-h.sum(-1), axis=1)[:, :2]
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(res.topk), axis=1),
+            np.sort(exact_top, axis=1))
