@@ -43,6 +43,8 @@ HARNESSES = {
                     "generalized bandit on recsys scorers"),
     "serving": ("benchmarks.serving_latency",
                 "RetrievalEngine p50/p99 latency + throughput"),
+    "serving_load": ("benchmarks.serving_load",
+                     "open-loop Poisson load: goodput, sync vs async"),
     "reveal": ("benchmarks.reveal_throughput",
                "pooled frontier vs vmapped lockstep reveal engine"),
     "kernels": ("benchmarks.kernel_bench",
@@ -103,7 +105,7 @@ def main(argv=None):
 
     from benchmarks import (fig2_tradeoff, fig4_exploration, fig5_ann_bounds,
                             generalized_recsys, kernel_bench,
-                            reveal_throughput, serving_latency,
+                            reveal_throughput, serving_latency, serving_load,
                             sharded_serving, table1_efficiency,
                             table2_effectiveness)
     benches = {
@@ -118,6 +120,7 @@ def main(argv=None):
             n_requests=24 if args.quick else 48,
             batch_sizes=(2, 4) if args.quick else (2, 4, 8),
             alphas=(0.3,) if args.quick else (0.15, 0.3, 1.0)),
+        "serving_load": lambda: serving_load.run(smoke=args.quick),
         "reveal": lambda: reveal_throughput.run(
             Q=16 if args.quick else 64, n_docs=min(n_docs, 96)),
         "kernels": lambda: kernel_bench.run(quick=args.quick),

@@ -1,0 +1,456 @@
+"""Open-loop serving load harness: p99-vs-load + goodput, sync vs async.
+
+Closed-loop load generators (``serving_latency``'s original form) submit
+the next request only after the previous one is handled, so a slow server
+quietly slows ARRIVALS and the measured latencies omit exactly the waits a
+real client would have seen — coordinated omission. This harness is
+open-loop: every request has an INTENDED arrival time drawn from a Poisson
+process at the offered rate, fixed before the run starts. Latency is
+measured from the intended arrival (submission slippage is added back in),
+so a server that falls behind pays for the queue it created.
+
+Swept quantities, per offered-load multiple of calibrated capacity:
+
+  * ``sync``       — RetrievalEngine, serve loop interleaved with the
+    load generator on one thread (prepare/dispatch/harvest back to back);
+  * ``async``      — AsyncRetrievalEngine batch pipeline: admit thread +
+    dispatch thread, batch i+1 dispatched while i executes;
+  * ``continuous`` — AsyncRetrievalEngine slot-refill streaming: one
+    resumable frontier, retired slots refilled mid-flight.
+
+Reported per point: intended-arrival latency p50/p99, throughput, GOODPUT
+(on-time completions per second — the number the paper's serving story
+cares about), deadline-miss rate, and lost/duplicate completion counts
+(must be zero). A separate soak pushes 10k requests through the continuous
+runtime and checks completion integrity at scale.
+
+Registered in ``benchmarks/run.py`` as ``serving_load``; standalone:
+
+  PYTHONPATH=src python -m benchmarks.serving_load
+  PYTHONPATH=src python -m benchmarks.serving_load \\
+      --smoke --baseline BENCH_serving.json --max-ratio 2.0   # CI gate
+
+Emits ``BENCH_serving.json`` (full sweep + soak + the small ``smoke``
+section the CI serving lane regresses against).
+
+Caveat: absolute capacity on CPU measures the interpret-mode/oracle op
+chain, not accelerator behavior, and a SINGLE-CORE host timeshares the
+async pipeline's stages on one CPU — the overlap that puts async ahead on
+a multi-core/accelerator host degenerates to parity there. The goodput
+gates therefore assert parity within a 10% scheduling-noise band (the
+measured async/sync ratio is recorded in the JSON); the
+completion-integrity and zero-recompile facts are exact everywhere. The
+CI gate machine-normalizes p99 the same way the reveal gate does.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.synthetic import make_retrieval_dataset
+from repro.serve import (AdmissionRejected, AsyncRetrievalEngine,
+                         EngineConfig, Request, RetrievalEngine)
+
+MODES = ("sync", "async", "continuous")
+
+
+# -- load generation -------------------------------------------------------
+
+def poisson_schedule(n: int, qps: Optional[float],
+                     rng: np.random.Generator) -> np.ndarray:
+    """Intended arrival offsets (seconds from t0) for ``n`` requests at
+    ``qps`` offered load; ``qps=None`` floods everything at t0."""
+    if not qps:
+        return np.zeros(n)
+    return np.cumsum(rng.exponential(1.0 / qps, size=n))
+
+
+def make_requests(ds, n: int, rng: np.random.Generator, *,
+                  deadline_s: Optional[float], stage1_every: int = 4,
+                  n_cand: int = 32) -> List[Request]:
+    """A mixed request stream: variable token counts, mostly
+    candidate-carrying (random stage-1 output stand-ins), every
+    ``stage1_every``-th request candidate-less so the engine's own ANN
+    path stays on the measured path."""
+    n_docs = ds.doc_embs.shape[0]
+    reqs = []
+    for i in range(n):
+        n_tok = int(rng.integers(4, 17))
+        cand = None
+        if stage1_every <= 0 or i % stage1_every:
+            cand = rng.choice(n_docs, size=min(n_cand, n_docs),
+                              replace=False).astype(np.int32)
+        reqs.append(Request(query=ds.queries[i % ds.n_queries][:n_tok],
+                            k=10, deadline_s=deadline_s, cand_ids=cand))
+    return reqs
+
+
+def drive_open_loop(engine, requests: Sequence[Request],
+                    offsets: np.ndarray) -> Dict:
+    """Submit each request at its intended offset; serve/collect until all
+    submitted work completes. Works against both engines: a started async
+    engine serves from its own threads (the generator only sleeps), the
+    sync engine is polled in the submission gaps — its serve time visibly
+    delays later submissions, which intended-arrival accounting charges
+    back to latency instead of forgiving (the coordinated-omission fix).
+
+    Returns intended-arrival latencies plus completion-integrity counts.
+    """
+    is_threaded = getattr(engine, "_started", False)
+    done = []
+    intended: Dict[int, float] = {}
+    slip: Dict[int, float] = {}
+    rejected = 0
+    i, n = 0, len(requests)
+    t0 = time.monotonic()
+    while i < n:
+        due = t0 + offsets[i]
+        now = time.monotonic()
+        if now >= due:
+            try:
+                rid = engine.submit(requests[i])
+            except AdmissionRejected:
+                rejected += 1
+            else:
+                intended[rid] = due
+                slip[rid] = time.monotonic() - due
+            i += 1
+            continue
+        if not is_threaded:
+            done.extend(engine.poll())
+        rem = due - time.monotonic()
+        if rem > 0:
+            # A threaded engine serves itself: sleep the full gap so the
+            # generator doesn't steal timeslices from the serving threads.
+            # The sync engine is served from THIS thread: short naps so a
+            # released batch is picked up promptly.
+            time.sleep(rem if is_threaded else min(rem, 5e-4))
+    done.extend(engine.drain())
+    wall = time.monotonic() - t0
+
+    # Intended-arrival latency: the engine stamps latency from the ACTUAL
+    # submit time; add back the generator's slippage so a request held up
+    # by a busy server is charged its full client-perceived wait.
+    lat = np.array([c.latency_s + slip[c.rid] for c in done]) \
+        if done else np.zeros(1)
+    rids = [c.rid for c in done]
+    deadline = requests[0].deadline_s if requests else None
+    on_time = (int(np.sum(lat <= deadline)) if deadline is not None
+               else len(done))
+    return {
+        "n_submitted": len(intended),
+        "n_rejected": rejected,
+        "n_completed": len(done),
+        "n_lost": len(intended) - len(set(rids)),
+        "n_duplicated": len(rids) - len(set(rids)),
+        "on_time": on_time,
+        "wall_s": wall,
+        "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "latency_p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "throughput_qps": len(done) / max(wall, 1e-9),
+        "goodput_qps": on_time / max(wall, 1e-9),
+        "miss_rate": 1.0 - on_time / max(len(done), 1),
+    }
+
+
+# -- engine construction ---------------------------------------------------
+
+def _engine_config(mode: str, *, deadline_s: float, seed: int,
+                   batch_size: int = 8) -> EngineConfig:
+    return EngineConfig(
+        batch_size=batch_size, deadline_s=deadline_s,
+        token_buckets=(16,), cand_buckets=(32,), max_k=10,
+        flavor="bandit", stage1_candidates=32,
+        pipeline_depth=2, continuous=(mode == "continuous"),
+        stream_trip_limit=4, seed=seed)
+
+
+def _make_engine(mode: str, ds, cfg: EngineConfig):
+    cls = RetrievalEngine if mode == "sync" else AsyncRetrievalEngine
+    engine = cls(ds.doc_embs, ds.doc_mask, cfg)
+    engine.warmup()
+    return engine
+
+
+def calibrate(ds, *, seed: int = 0, n_requests: int = 48) -> Dict:
+    """Closed flood through the sync engine: the capacity estimate the
+    offered-load multiples are anchored to, so the sweep measures the same
+    RELATIVE operating points on any machine."""
+    cfg = _engine_config("sync", deadline_s=0.05, seed=seed)
+    engine = _make_engine("sync", ds, cfg)
+    rng = np.random.default_rng(seed)
+    for r in make_requests(ds, n_requests, rng, deadline_s=None):
+        engine.submit(r)
+    engine.drain()
+    svc = float(np.median([b.service_s for b in engine.metrics.batches]))
+    return {
+        "batch_service_ms": svc * 1e3,
+        "capacity_qps": cfg.batch_size / max(svc, 1e-9),
+        # Generous completion deadline (several batch services): at <1x
+        # offered load nearly everything is on time, past capacity the
+        # queue eats it — goodput then separates the runtimes.
+        "deadline_s": max(12 * svc, 0.05),
+    }
+
+
+# -- sweep -----------------------------------------------------------------
+
+def _sweep(ds, cal: Dict, *, load_mults: Sequence[float], n_requests: int,
+           seed: int, repeats: int = 3) -> List[Dict]:
+    """Measure every (mode, load) point ``repeats`` times in alternating
+    order — single-box scheduling noise at these wall clocks is ~10%, so a
+    single interleaving per point would measure the OS scheduler, not the
+    engine — and keep each point's best-goodput run. Completion-integrity
+    counters are the MAX over repeats: a lost request in any run fails the
+    point even if the kept run was clean.
+
+    Points: the requested offered-load multiples of calibrated capacity,
+    plus a ``"sat"`` saturation point — the same flood (every intended
+    arrival at t0) for every mode, with an SLO sized so a saturated server
+    can meet it. That is the matched-load point the async-vs-sync goodput
+    gate reads: at saturation the generator is out of the picture and the
+    runtimes' service pipelines are compared head to head.
+    """
+    points: List[Tuple] = [(float(m), m * cal["capacity_qps"],
+                            cal["deadline_s"]) for m in load_mults]
+    # Saturation SLO: 2x the ideal full-drain time — generous enough that
+    # a healthy saturated engine completes everything on time (goodput ==
+    # throughput), tight enough that a stalled one visibly bleeds goodput.
+    points.append(("sat", None, 2.0 * n_requests / cal["capacity_qps"]))
+    engines = {
+        mode: _make_engine(mode, ds, _engine_config(
+            mode, deadline_s=max(cal["deadline_s"] / 4, 0.01), seed=seed))
+        for mode in MODES}
+    best: Dict[Tuple, Dict] = {}
+    worst: Dict[Tuple, Dict[str, int]] = {}
+    for rep in range(repeats):
+        for mode in MODES:
+            engine = engines[mode]
+            for li, (label, qps, deadline_s) in enumerate(points):
+                rng = np.random.default_rng(seed + 1000 * rep + li)
+                reqs = make_requests(ds, n_requests, rng,
+                                     deadline_s=deadline_s)
+                offsets = poisson_schedule(n_requests, qps, rng)
+                if mode != "sync":
+                    engine.start()
+                try:
+                    row = drive_open_loop(engine, reqs, offsets)
+                finally:
+                    if mode != "sync":
+                        engine.stop()
+                row.update(mode=mode, load=label,
+                           offered_qps=qps, deadline_ms=deadline_s * 1e3)
+                key = (mode, label)
+                w = worst.setdefault(key, {"n_lost": 0, "n_duplicated": 0})
+                w["n_lost"] = max(w["n_lost"], row["n_lost"])
+                w["n_duplicated"] = max(w["n_duplicated"],
+                                        row["n_duplicated"])
+                if (key not in best
+                        or row["goodput_qps"] > best[key]["goodput_qps"]):
+                    best[key] = row
+    rows = []
+    for (mode, label), row in best.items():
+        row.update(worst[(mode, label)])
+        row["compiles_after_warmup"] = (
+            engines[mode].metrics.summary()["compiles_after_warmup"])
+        rows.append(row)
+    return rows
+
+
+def _soak(ds, cal: Dict, *, n_requests: int, seed: int) -> Dict:
+    """Completion-integrity soak: n requests through the continuous
+    (slot-refill) runtime at 1.5x capacity — every submitted rid must come
+    back exactly once."""
+    cfg = _engine_config("continuous", deadline_s=0.02, seed=seed)
+    engine = _make_engine("continuous", ds, cfg)
+    rng = np.random.default_rng(seed + 7)
+    reqs = make_requests(ds, n_requests, rng, deadline_s=None)
+    offsets = poisson_schedule(n_requests, 1.5 * cal["capacity_qps"], rng)
+    with engine:
+        row = drive_open_loop(engine, reqs, offsets)
+    s = engine.metrics.summary()
+    row.update(mode="continuous", n_requests=n_requests,
+               compiles_after_warmup=s["compiles_after_warmup"],
+               mean_slot_occupancy=s["mean_occupancy"])
+    return row
+
+
+def _print_rows(rows: List[Dict]) -> None:
+    print(f"{'mode':11s} {'load':>5s} {'qps_in':>7s} {'p50 ms':>8s} "
+          f"{'p99 ms':>8s} {'done/s':>7s} {'good/s':>7s} {'miss':>5s} "
+          f"{'lost':>4s} {'dup':>4s}")
+    for r in rows:
+        load = (f"{r['load']:5.2f}" if isinstance(r["load"], float)
+                else f"{r['load']:>5s}")
+        qps = "flood" if r["offered_qps"] is None else \
+            f"{r['offered_qps']:.0f}"
+        print(f"{r['mode']:11s} {load} {qps:>7s} "
+              f"{r['latency_p50_ms']:8.2f} {r['latency_p99_ms']:8.2f} "
+              f"{r['throughput_qps']:7.0f} {r['goodput_qps']:7.0f} "
+              f"{r['miss_rate']:5.2f} {r['n_lost']:4d} "
+              f"{r['n_duplicated']:4d}")
+
+
+def _accept(rows: List[Dict], soak: Dict) -> Dict:
+    by = {(r["mode"], r["load"]): r for r in rows}
+    paced = sorted(r["load"] for r in rows
+                   if isinstance(r["load"], float))
+    sat_ratio = (by[("async", "sat")]["goodput_qps"]
+                 / max(by[("sync", "sat")]["goodput_qps"], 1e-9))
+    return {
+        # The headline: at the matched saturation point (identical flood,
+        # generator out of the picture) the async pipeline's goodput
+        # matches the synchronous engine's — the dispatch/harvest overlap
+        # must at minimum pay for its own threads. On a multi-core host or
+        # with a real accelerator the overlap puts async AHEAD; a
+        # single-core box timeshares the pipeline stages on one CPU, so
+        # the gate asserts parity within a 10% scheduling-noise band and
+        # the measured ratio is recorded alongside
+        # (``sat_goodput_ratio_async_over_sync``).
+        "async_goodput_matches_sync_at_saturation": sat_ratio >= 0.9,
+        # At paced offered loads the generator's timing and OS scheduling
+        # are in the measurement; require async within 10% of sync there
+        # (it is usually ahead, but single-core boxes timeshare the
+        # generator against the serving threads).
+        "async_goodput_near_sync_at_paced_loads": all(
+            by[("async", m)]["goodput_qps"]
+            >= by[("sync", m)]["goodput_qps"] * 0.9 for m in paced),
+        "zero_recompiles": all(r["compiles_after_warmup"] == 0
+                               for r in rows) and
+        soak["compiles_after_warmup"] == 0,
+        "no_lost_or_duplicated": all(
+            r["n_lost"] == 0 and r["n_duplicated"] == 0 for r in rows),
+        "soak_no_lost_or_duplicated":
+            soak["n_lost"] == 0 and soak["n_duplicated"] == 0,
+        "soak_all_completed":
+            soak["n_completed"] == soak["n_submitted"],
+    }
+
+
+# Small config the CI serving lane re-runs against the committed baseline.
+SMOKE = dict(n_requests=96, load_mults=(0.6, 1.5), soak_requests=400)
+FULL = dict(n_requests=240, load_mults=(0.6, 1.0, 1.5), soak_requests=10_000)
+
+
+def _run_section(ds, cal: Dict, params: Dict, *, seed: int) -> Dict:
+    rows = _sweep(ds, cal, load_mults=params["load_mults"],
+                  n_requests=params["n_requests"], seed=seed)
+    _print_rows(rows)
+    soak = _soak(ds, cal, n_requests=params["soak_requests"], seed=seed)
+    print(f"soak: {soak['n_requests']} reqs through continuous runtime in "
+          f"{soak['wall_s']:.1f}s ({soak['throughput_qps']:.0f} qps), "
+          f"lost={soak['n_lost']} dup={soak['n_duplicated']} "
+          f"occupancy={soak['mean_slot_occupancy']:.2f}")
+    by = {(r["mode"], r["load"]): r for r in rows}
+    return {"rows": rows, "soak": soak, "accept": _accept(rows, soak),
+            "sat_goodput_ratio_async_over_sync": round(
+                by[("async", "sat")]["goodput_qps"]
+                / max(by[("sync", "sat")]["goodput_qps"], 1e-9), 4)}
+
+
+def _dataset(seed: int = 11):
+    return make_retrieval_dataset(n_docs=96, n_queries=32, doc_len=24,
+                                  min_doc_len=8, query_len=16, dim=32,
+                                  seed=seed)
+
+
+def run(smoke: bool = False, out: str = "BENCH_serving.json",
+        seed: int = 0) -> Dict:
+    ds = _dataset()
+    cal = calibrate(ds, seed=seed)
+    print(f"calibration: batch service {cal['batch_service_ms']:.2f} ms, "
+          f"capacity ~{cal['capacity_qps']:.0f} qps, deadline "
+          f"{cal['deadline_s'] * 1e3:.0f} ms")
+
+    print("\nsmoke section (CI serving gate):")
+    smoke_sec = _run_section(ds, cal, SMOKE, seed=seed)
+    result = {"calibration": cal, "smoke": smoke_sec,
+              "accept": dict(smoke_sec["accept"])}
+    if not smoke:
+        print("\nfull sweep:")
+        full = _run_section(ds, cal, FULL, seed=seed)
+        result.update(sweep=full["rows"], soak=full["soak"])
+        result["accept"] = {k: result["accept"][k] and full["accept"][k]
+                            for k in full["accept"]}
+
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {out}")
+    assert all(result["accept"].values()), result["accept"]
+    return result
+
+
+# -- CI gate ---------------------------------------------------------------
+
+def check_smoke_regression(baseline_path: str, max_ratio: float = 2.0) -> int:
+    """Serving perf gate: re-run the smoke section and fail when (a) any
+    acceptance property (goodput ordering, completion integrity, zero
+    recompiles) no longer holds, or (b) any (mode, load) point's p99
+    regresses more than ``max_ratio``x against the committed baseline,
+    machine-normalized by the median p99 ratio across points (same scheme
+    as the reveal gate: one regressed point cannot drag the median, a
+    uniformly slower box normalizes away)."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    base_rows = {(r["mode"], str(r["load"])): r
+                 for r in baseline.get("smoke", {}).get("rows", [])}
+    if not base_rows:
+        print(f"{baseline_path} has no smoke section — regenerate with "
+              "`python -m benchmarks.serving_load`")
+        return 2
+    ds = _dataset()
+    cal = calibrate(ds)
+    sec = _run_section(ds, cal, SMOKE, seed=0)
+    failures = []
+    if not all(sec["accept"].values()):
+        print(f"\nacceptance properties FAILED: "
+              f"{ {k: v for k, v in sec['accept'].items() if not v} }")
+        failures.append("accept")
+    now_rows = {(r["mode"], str(r["load"])): r for r in sec["rows"]}
+    shared = [k for k in now_rows if k in base_rows]
+    machine = float(np.median(
+        [now_rows[k]["latency_p99_ms"]
+         / max(base_rows[k]["latency_p99_ms"], 1e-9) for k in shared]))
+    print(f"\nmachine speed factor vs baseline (median p99 over "
+          f"{len(shared)} points): {machine:.2f}x")
+    for k in shared:
+        ratio = (now_rows[k]["latency_p99_ms"]
+                 / max(base_rows[k]["latency_p99_ms"] * machine, 1e-9))
+        status = "OK"
+        if ratio > max_ratio:
+            status = f"REGRESSION ({ratio:.2f}x > {max_ratio}x normalized)"
+            failures.append(k)
+        print(f"{k[0]:11s}@{k[1]:<5s} p99 {now_rows[k]['latency_p99_ms']:8.2f}"
+              f" ms vs baseline {base_rows[k]['latency_p99_ms']:8.2f} ms "
+              f"({ratio:.2f}x normalized)  {status}")
+    if failures:
+        print(f"\nserving smoke FAILED: {failures}")
+        return 1
+    print("\nserving smoke OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="run only the small-config regression gate")
+    ap.add_argument("--baseline", default="BENCH_serving.json",
+                    help="baseline JSON for --smoke comparison")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="max allowed normalized p99 ratio vs baseline")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return check_smoke_regression(args.baseline, args.max_ratio)
+    run(out=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

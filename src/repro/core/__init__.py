@@ -2,8 +2,9 @@
 from repro.core.bandit import BanditResult, run_bandit
 from repro.core.batched import BatchedConfig, run_batched_bandit, run_batched_oracle
 from repro.core.baselines import doc_top_margin, doc_uniform, exact_topk
-from repro.core.frontier import (PooledResult, run_pooled_bandit,
-                                 run_pooled_oracle)
+from repro.core.frontier import (FrontierState, PooledResult,
+                                 init_frontier_state, run_pooled_bandit,
+                                 run_pooled_oracle, run_pooled_slice)
 from repro.core.bounds import Intervals, intervals, rho_n, serfling_radius
 from repro.core.metrics import (all_metrics, mrr_at_k, ndcg_at_k,
                                 overlap_at_k, recall_at_k)
@@ -12,7 +13,8 @@ from repro.core.state import BanditState, coverage, init_state
 __all__ = [
     "BanditResult", "run_bandit", "BatchedConfig", "run_batched_bandit",
     "run_batched_oracle", "PooledResult", "run_pooled_bandit",
-    "run_pooled_oracle", "doc_top_margin", "doc_uniform", "exact_topk",
+    "run_pooled_oracle", "FrontierState", "init_frontier_state",
+    "run_pooled_slice", "doc_top_margin", "doc_uniform", "exact_topk",
     "Intervals", "intervals", "rho_n", "serfling_radius", "all_metrics",
     "mrr_at_k", "ndcg_at_k", "overlap_at_k", "recall_at_k", "BanditState",
     "coverage", "init_state",

@@ -102,15 +102,43 @@ def _with_stats(compute_cells: Callable) -> Callable:
     return cells_fused
 
 
-class _FusedState(NamedTuple):
-    """Fused-round carry: the five BanditState statistics collapse to one
-    sentinel-encoded cell table + one packed (n, total, total_sq) block."""
+class FrontierState(NamedTuple):
+    """Resumable pooled-frontier carry — the slot-level continuous-batching
+    state. The five BanditState statistics collapse to one sentinel-encoded
+    cell table + one packed (n, total, total_sq) block; ``key``/``rounds``/
+    ``done`` are per-SLOT. A serving loop holds one of these across
+    ``run_pooled_slice`` calls: when slot q retires (``done[q]``), the host
+    harvests its results and refills the slot with a new query — passing
+    ``fresh[q]=True`` on the next call resets exactly that slot's rows
+    (fresh init reveal included) while every other slot's statistics carry
+    forward untouched. Both round bodies (fused and chain) read and write
+    this same packed encoding at the call boundary, so a stream may even
+    alternate bodies between slices.
+    """
 
     cellvals: jax.Array    # (Q*N, T) f32 — _UNREV where unrevealed
     stats: jax.Array       # (Q*N, 3) f32 — [n, total, total_sq]
     key: jax.Array         # (Q,) per-query PRNG keys
     rounds: jax.Array      # (Q,) i32 — frozen at retirement
     done: jax.Array        # (Q,) bool
+
+
+# Backwards-compatible internal alias (pre-resume name).
+_FusedState = FrontierState
+
+
+def init_frontier_state(Q: int, N: int, T: int) -> FrontierState:
+    """An all-slots-empty carry: every slot retired (``done``), zero
+    statistics, cell tables reading as revealed-empty (value 0.0 < the
+    sentinel threshold, matching how both bodies encode invalid docs).
+    Feed it as the first ``carry`` of a streaming loop — slots come alive
+    only when refilled via ``fresh``."""
+    return FrontierState(
+        cellvals=jnp.zeros((Q * N, T), jnp.float32),
+        stats=jnp.zeros((Q * N, 3), jnp.float32),
+        key=jax.random.split(jax.random.key(0), Q),
+        rounds=jnp.zeros((Q,), jnp.int32),
+        done=jnp.ones((Q,), jnp.bool_))
 
 
 class PooledResult(NamedTuple):
@@ -146,16 +174,46 @@ def run_pooled_bandit(
     fused: Optional[bool] = None,           # None => _auto_fused()
     prereveal: Optional[jax.Array] = None,      # (Q, N, T) bool — cells whose
     prereveal_vals: Optional[jax.Array] = None,  # exact values are known
-) -> PooledResult:
+    carry: Optional[FrontierState] = None,  # resume from a prior slice
+    fresh: Optional[jax.Array] = None,      # (Q,) bool — slots to (re)init
+    trip_limit: int = 0,                    # >0: pause after this many trips
+    return_state: bool = False,             # also return the FrontierState
+):
     """``prereveal``/``prereveal_vals`` seed the bandit with cells whose
     exact values an earlier stage already computed (e.g. the stage-1 ANN
     hit cells, Eq. 15's exact-``h`` branch) at zero reveal cost: they enter
     the sufficient statistics before round 0, count as revealed for the
     selection policy (never re-revealed) and for ``reveals``/``coverage``.
-    Both round bodies apply them identically."""
+    Both round bodies apply them identically.
+
+    Streaming (continuous batching) extensions — all default-off, and the
+    default path is trace-identical to the one-shot engine:
+
+    * ``carry`` resumes from a prior call's :class:`FrontierState` instead
+      of a cold start. ``fresh`` (default all-False when carrying, forced
+      all-True otherwise) marks the slots being REFILLED this call: a fresh
+      slot is fully re-initialized from this call's ``a``/``b``/``keys``/
+      ``prereveal`` (init reveal included, prereveal masked to fresh slots)
+      while carried slots' statistics, keys, round counters and retirement
+      flags pass through untouched. Carried slots' ``a``/``b``/``doc_mask``
+      must be re-presented unchanged — the packed state holds statistics,
+      not supports.
+    * ``trip_limit > 0`` pauses the global while_loop after that many trips
+      even with queries still active, so the host can harvest retired slots
+      mid-flight. Per-query results in the returned :class:`PooledResult`
+      are only FINAL for slots with ``done`` set (or every slot once the
+      loop ran to quiescence).
+    * ``return_state=True`` returns ``(PooledResult, FrontierState)``.
+    """
     if fused is None:
         fused = _auto_fused()
     Q, N, T = a.shape
+    if carry is None:
+        fresh = jnp.ones((Q,), jnp.bool_)
+    elif fresh is None:
+        fresh = jnp.zeros((Q,), jnp.bool_)
+    fresh = fresh.astype(jnp.bool_)
+    fresh_rows = jnp.broadcast_to(fresh[:, None], (Q, N)).reshape(Q * N)
     k = cfg.k
     G = cfg.block_tokens
     half = max(cfg.block_docs // 2, 1)
@@ -178,6 +236,10 @@ def run_pooled_bandit(
 
     if prereveal is not None:
         pr_flat = (prereveal & doc_mask[:, :, None]).reshape(Q * N, T)
+        if carry is not None:
+            # Prereveal seeds belong to the query ENTERING a slot; a
+            # carried slot already absorbed its own at its fresh call.
+            pr_flat = pr_flat & fresh_rows[:, None]
         pv_flat = jnp.where(
             pr_flat, prereveal_vals.reshape(Q * N, T).astype(jnp.float32),
             0.0)
@@ -190,6 +252,8 @@ def run_pooled_bandit(
     # ``key, k_init = split(key)`` so trajectories line up query by query.
     split2 = jax.vmap(lambda kk: tuple(jax.random.split(kk)))
     state_keys, k_init = split2(keys)
+    if carry is not None:
+        state_keys = jnp.where(fresh, state_keys, carry.key)
 
     # Init reveal (paper footnote 2): one random cell per doc, all queries
     # pooled into a single (Q*N, 1) reveal.
@@ -288,19 +352,28 @@ def run_pooled_bandit(
             revealed=rev_q,
             trips=trips,
             total_rounds=total_rounds,
-            lockstep_waste=Q * trips - total_rounds,
+            # Clamped: on a resumed slice, carried-in rounds can exceed
+            # this slice's Q*trips budget.
+            lockstep_waste=jnp.maximum(Q * trips - total_rounds, 0),
             occupancy=occ_sum / jnp.maximum(trips.astype(jnp.float32), 1.0),
         )
 
-    def cond(carry):
-        st, _, _ = carry
-        return jnp.any((~st.done) & (st.rounds < max_rounds))
+    def cond(loop_carry):
+        st, trips, _ = loop_carry
+        go = jnp.any((~st.done) & (st.rounds < max_rounds))
+        if trip_limit > 0:
+            go = jnp.logical_and(go, trips < trip_limit)
+        return go
 
     # Queries with NO valid candidate start retired (rounds stay 0):
     # routine on a sharded corpus, where a query's candidates may all be
     # resident elsewhere — an empty query must not hold frontier slots
     # or inflate the per-shard round/occupancy accounting.
     done0 = ~jnp.any(doc_mask, axis=1)
+    rounds0 = jnp.zeros((Q,), jnp.int32)
+    if carry is not None:
+        done0 = jnp.where(fresh, done0, carry.done)
+        rounds0 = jnp.where(fresh, rounds0, carry.rounds)
     zero_trip = (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
 
     if fused:
@@ -309,6 +382,8 @@ def run_pooled_bandit(
         flat_mask = doc_mask.reshape(Q * N)
 
         new0 = flat_mask[:, None]                               # (Q*N, 1)
+        if carry is not None:
+            new0 = new0 & fresh_rows[:, None]
         if pr_flat is not None:
             # An init cell that stage 1 already revealed is not new: it must
             # enter the stats exactly once (mirrors _apply_block_reveal's
@@ -328,9 +403,12 @@ def run_pooled_bandit(
                 axis=-1)
         cellvals0 = cellvals0.at[all_docs[:, None], flat_t0].min(
             jnp.where(new0, vals0, _UNREV))
+        if carry is not None:
+            cellvals0 = jnp.where(fresh_rows[:, None], cellvals0,
+                                  carry.cellvals)
+            stats0 = jnp.where(fresh_rows[:, None], stats0, carry.stats)
         state = _FusedState(cellvals=cellvals0, stats=stats0,
-                            key=state_keys,
-                            rounds=jnp.zeros((Q,), jnp.int32), done=done0)
+                            key=state_keys, rounds=rounds0, done=done0)
 
         def body(carry):
             st, trips, occ_sum = carry
@@ -368,9 +446,10 @@ def run_pooled_bandit(
 
         state, trips, occ_sum = jax.lax.while_loop(
             cond, body, (state, *zero_trip))
-        return finalize(state.stats[:, 0], state.stats[:, 1],
-                        state.stats[:, 2], state.cellvals < _REV_THRESH,
-                        state.rounds, trips, occ_sum)
+        res = finalize(state.stats[:, 0], state.stats[:, 1],
+                       state.stats[:, 2], state.cellvals < _REV_THRESH,
+                       state.rounds, trips, occ_sum)
+        return (res, state) if return_state else res
 
     # ------------------------------------------------------------------
     # Chain round body — the REPRO_KERNEL_IMPL=ref oracle: abstract cell
@@ -385,9 +464,27 @@ def run_pooled_bandit(
         total=jnp.zeros((Q * N,), jnp.float32),
         total_sq=jnp.zeros((Q * N,), jnp.float32),
         key=state_keys,                     # (Q,) keys — per-query streams
-        rounds=jnp.zeros((Q,), jnp.int32),  # per-query round counters
+        rounds=rounds0,                     # per-query round counters
         done=done0,                         # per-query retirement flags
     )
+
+    if carry is not None:
+        # Unpack the sentinel encoding into the five-field BanditState for
+        # carried rows (fresh rows keep the cold-start init above). The
+        # encoding is lossless: revealed <=> cellvals below the sentinel
+        # threshold, and unrevealed values are definitionally 0 here.
+        c_rev = carry.cellvals < _REV_THRESH
+        fr = fresh_rows[:, None]
+        state = state._replace(
+            values=jnp.where(fr, state.values,
+                             jnp.where(c_rev, carry.cellvals, 0.0)),
+            revealed=jnp.where(fr, state.revealed, c_rev),
+            n=jnp.where(fresh_rows, state.n,
+                        carry.stats[:, 0].astype(jnp.int32)),
+            total=jnp.where(fresh_rows, state.total, carry.stats[:, 1]),
+            total_sq=jnp.where(fresh_rows, state.total_sq,
+                               carry.stats[:, 2]),
+        )
 
     if pr_flat is not None:
         # Seed the statistics with the prerevealed cells; the init reveal
@@ -401,8 +498,11 @@ def run_pooled_bandit(
 
     init_vals = compute_cells(all_docs,
                               flat_t0 + (all_docs // N * T)[:, None])
+    init_valid = doc_mask.reshape(Q * N, 1)
+    if carry is not None:
+        init_valid = init_valid & fresh_rows[:, None]
     state = _apply_block_reveal(state, all_docs, flat_t0, init_vals,
-                                doc_mask.reshape(Q * N, 1))
+                                init_valid)
 
     def per_query_intervals(st: BanditState) -> B.Intervals:
         return jax.vmap(get_intervals_q)(
@@ -436,8 +536,39 @@ def run_pooled_bandit(
 
     state, trips, occ_sum = jax.lax.while_loop(
         cond, body, (state, *zero_trip))
-    return finalize(state.n, state.total, state.total_sq, state.revealed,
-                    state.rounds, trips, occ_sum)
+    res = finalize(state.n, state.total, state.total_sq, state.revealed,
+                   state.rounds, trips, occ_sum)
+    if return_state:
+        # Pack back to the sentinel encoding — the shared slice boundary
+        # format, so a stream may resume under either round body.
+        packed = FrontierState(
+            cellvals=jnp.where(state.revealed, state.values, _UNREV),
+            stats=jnp.stack([state.n.astype(jnp.float32), state.total,
+                             state.total_sq], axis=-1),
+            key=state.key, rounds=state.rounds, done=state.done)
+        return res, packed
+    return res
+
+
+def run_pooled_slice(
+    compute_cells,
+    a: jax.Array, b: jax.Array, keys: jax.Array, cfg: BatchedConfig,
+    carry: FrontierState,
+    fresh: jax.Array,
+    *, trip_limit: int, **kw,
+) -> tuple:
+    """One bounded segment of the pooled bandit — the continuous-batching
+    step. Resume from ``carry``, re-initialize the ``fresh`` slots from
+    this call's ``a``/``b``/``keys`` (and ``prereveal``/``doc_mask`` via
+    ``**kw``), run at most ``trip_limit`` global while_loop trips, and
+    return ``(PooledResult, FrontierState)``. The host loop harvests slots
+    whose returned ``state.done`` is set (their PooledResult rows are
+    final), marks them fresh, and calls again — the other slots' bandit
+    state rides through unchanged. Start a stream from
+    :func:`init_frontier_state` with ``fresh`` all-True."""
+    return run_pooled_bandit(compute_cells, a, b, keys, cfg, carry=carry,
+                             fresh=fresh, trip_limit=trip_limit,
+                             return_state=True, **kw)
 
 
 def run_pooled_oracle(

@@ -11,6 +11,7 @@
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from typing import Any, Callable, List, Optional, Tuple
@@ -63,57 +64,109 @@ class DeadlineBatcher:
     The deadline clock starts at the OLDEST pending request, so a trickle
     of traffic is released within ``deadline_s`` of its first arrival.
 
-    A request may carry its own (tighter) admission deadline via
-    ``add(req, deadline_s=...)``: the pending batch is released as soon as
-    ANY pending request has waited past ``min(deadline_s, its own)`` — the
-    serving engine uses this so a latency-critical request is never held
-    behind the global admission window.
+    A request may carry its own (tighter) admission deadline, two ways:
+
+    * ``add(req, deadline_s=...)`` — a relative admission deadline, frozen
+      at add time: release once the request has waited that long.
+    * ``add(req, deadline_abs=...)`` — an absolute COMPLETION deadline
+      (clock frame). The admission deadline is derived lazily, at every
+      ``next_expiry``/``poll``, as ``deadline_abs - headroom()`` where
+      ``headroom`` is the constructor-supplied callable (e.g. the serving
+      engine's live batch-service-time EMA). Deriving at poll time — not
+      at add time — is what keeps queued requests honest when the service
+      estimate RISES while they wait: a frozen admission deadline would
+      release them too late to execute before completion is due.
+
+    The batch releases as soon as ANY pending request is past its
+    (tightest) admission deadline, so a latency-critical request is never
+    held behind the global window. ``next_expiry`` returns the CURRENT
+    clock when a full batch is already pending: a caller sleeping until
+    ``next_expiry()`` must wake immediately, since ``poll`` would release
+    right now (sleeping through a ready full batch was a real bug).
+
+    All queue operations take an internal lock, so producers (``add``) and
+    a consumer loop (``next_expiry``/``poll``/``flush``) may live on
+    different threads — the async serving engine's contract.
     """
 
     def __init__(self, batch_size: int, deadline_s: float,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 headroom: Optional[Callable[[], float]] = None):
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         self.batch_size = int(batch_size)
         self.deadline_s = float(deadline_s)
         self.clock = clock
-        self._pending: deque = deque()   # (arrival_ts, deadline_s|None, req)
+        self.headroom = headroom or (lambda: 0.0)
+        self._lock = threading.Lock()
+        # (arrival_ts, admission_deadline_s|None, deadline_abs|None, req)
+        self._pending: deque = deque()
 
     def __len__(self) -> int:
-        return len(self._pending)
+        with self._lock:
+            return len(self._pending)
 
-    def add(self, request: Any, deadline_s: Optional[float] = None) -> None:
-        self._pending.append((self.clock(), deadline_s, request))
+    def add(self, request: Any, deadline_s: Optional[float] = None,
+            deadline_abs: Optional[float] = None) -> None:
+        entry = (self.clock(), deadline_s, deadline_abs, request)
+        with self._lock:
+            self._pending.append(entry)
+
+    def _entry_expiry(self, ts: float, d: Optional[float],
+                      d_abs: Optional[float], headroom: float) -> float:
+        """Absolute admission deadline of one entry: the global window,
+        tightened by a frozen relative deadline and/or a live-derived
+        absolute one. Clamped to the arrival stamp so a request already
+        past ``deadline_abs - headroom`` releases immediately instead of
+        producing an expiry in the past."""
+        expiry = ts + self.deadline_s
+        if d is not None:
+            expiry = min(expiry, ts + d)
+        if d_abs is not None:
+            expiry = min(expiry, max(ts, d_abs - headroom))
+        return expiry
 
     def next_expiry(self) -> Optional[float]:
-        """Earliest absolute time at which ``poll`` will release a partial
-        batch (None when the queue is empty)."""
-        if not self._pending:
-            return None
-        return min(ts + (self.deadline_s if d is None
-                         else min(self.deadline_s, d))
-                   for ts, d, _ in self._pending)
+        """Earliest absolute time at which ``poll`` will release a batch
+        (None when the queue is empty). A ready FULL batch expires NOW —
+        the caller's poll loop must not sleep through it."""
+        with self._lock:
+            return self._next_expiry_locked()
 
-    def poll(self) -> Optional[Tuple[List[Any], int]]:
+    def _next_expiry_locked(self) -> Optional[float]:
         if not self._pending:
             return None
         if len(self._pending) >= self.batch_size:
-            reqs = [self._pending.popleft()[2]
-                    for _ in range(self.batch_size)]
-            return reqs, self.batch_size
-        if self.clock() < self.next_expiry():
-            return None
-        return self.flush()
+            return self.clock()
+        headroom = self.headroom()
+        return min(self._entry_expiry(ts, d, d_abs, headroom)
+                   for ts, d, d_abs, _ in self._pending)
+
+    def poll(self) -> Optional[Tuple[List[Any], int]]:
+        with self._lock:
+            if not self._pending:
+                return None
+            if len(self._pending) >= self.batch_size:
+                reqs = [self._pending.popleft()[3]
+                        for _ in range(self.batch_size)]
+                return reqs, self.batch_size
+            if self.clock() < self._next_expiry_locked():
+                return None
+            return self._flush_locked()
 
     def flush(self) -> Optional[Tuple[List[Any], int]]:
         """Release the oldest pending batch immediately (padded), deadline
         or not. At most ``batch_size`` real requests per call — the padded
         static-shape contract holds even when more are pending; call in a
         loop (or ``poll`` first) to drain completely."""
+        with self._lock:
+            return self._flush_locked()
+
+    def _flush_locked(self) -> Optional[Tuple[List[Any], int]]:
         if not self._pending:
             return None
         take = min(len(self._pending), self.batch_size)
-        reqs = [self._pending.popleft()[2] for _ in range(take)]
+        reqs = [self._pending.popleft()[3] for _ in range(take)]
         n_real = len(reqs)
         reqs = reqs + [reqs[-1]] * (self.batch_size - n_real)
         return reqs, n_real

@@ -31,7 +31,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.batched import BatchedConfig, run_batched_bandit
-from repro.core.frontier import run_pooled_bandit
+from repro.core.frontier import (FrontierState, init_frontier_state,
+                                 run_pooled_bandit)
 from repro.kernels.ops import (fused_reveal_op, gather_maxsim_op,
                                maxsim_batch_op)
 from repro.retrieval.ann import generate_candidates
@@ -585,6 +586,96 @@ def make_serving_step(flavor: str, *, topk: int = 10, alpha_ef: float = 0.3,
             max_rounds=max_rounds, max_block_docs=max_block_docs,
             max_block_tokens=max_block_tokens, engine=engine)
     raise ValueError(f"unknown serving flavor: {flavor!r}")
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching (slot-refill) engine-facing step.
+#
+# The batch steps above run each admitted batch to quiescence: every query
+# in the batch rides the global while_loop until the LAST one separates,
+# and a new batch cannot start until the whole previous one drains. The
+# streaming step instead runs the pooled bandit a bounded number of trips
+# per call and hands the packed per-slot frontier state back to the host:
+#
+#   step(corpus_embs, corpus_mask, queries (B, T, M), cand_ids (B, N),
+#        a (B, N, T), b (B, N, T), state (FrontierState), fresh (B,) bool,
+#        keys (B,) per-slot PRNG keys)
+#     -> (topk_scores (B, K), topk_global_ids (B, K), reveal_frac (B,),
+#         stats (3,), done (B,) bool, new_state (FrontierState))
+#
+# The host loop (``serve.AsyncRetrievalEngine`` continuous mode) harvests
+# slots with ``done`` set — their score/gid/coverage rows are final —
+# refills them from the admission queue (new query tokens + candidates in
+# those rows, ``fresh`` marking them) and re-enters the SAME compiled
+# executable: one static (B, T, N) shape, zero recompiles, retirement
+# granularity of ``trip_limit`` reveal rounds instead of a whole batch.
+# Carried slots' query/candidate/bound rows must be re-presented unchanged.
+# ---------------------------------------------------------------------------
+
+def init_stream_state(B: int, N: int, T: int) -> FrontierState:
+    """All-slots-retired frontier carry for a (B, N-candidate, T-token)
+    streaming step — the state a continuous-batching loop starts from."""
+    return init_frontier_state(B, N, T)
+
+
+def make_streaming_step(*, topk: int = 10, alpha_ef: float = 0.3,
+                        delta: float = 0.01, block_docs: int = 8,
+                        block_tokens: int = 8, max_rounds: int = -1,
+                        max_block_docs: int = 0, max_block_tokens: int = 0,
+                        trip_limit: int = 4, fused=None):
+    """Slot-refill serving step factory (bandit flavor only — dense has no
+    rounds to slice). ``trip_limit`` is the slice length: how many global
+    reveal rounds one device dispatch advances every live slot before
+    control returns to the host for harvest/refill. Small values shrink
+    refill latency (a retired slot idles at most ``trip_limit`` rounds);
+    large values amortize dispatch overhead. ``fused`` as in
+    :func:`_pooled_rerank` (None = auto by REPRO_KERNEL_IMPL)."""
+    if trip_limit < 1:
+        raise ValueError("trip_limit must be >= 1")
+    cfg = BatchedConfig(k=topk, delta=delta, alpha_ef=alpha_ef,
+                        block_docs=block_docs, block_tokens=block_tokens,
+                        max_rounds=max_rounds, max_block_docs=max_block_docs,
+                        max_block_tokens=max_block_tokens)
+
+    def step(corpus_embs, corpus_mask, queries, cand_ids, a, b, state,
+             fresh, keys):
+        docs, dmask = gather_candidates(corpus_embs, corpus_mask, cand_ids)
+        Bq, N, L, M = docs.shape
+        T = queries.shape[1]
+        stacked = docs.reshape(Bq * N, L, M)
+        stacked_mask = dmask.reshape(Bq * N, L)
+        flat_q = queries.reshape(Bq * T, M)
+
+        def cells(flat_doc, flat_tok):
+            return gather_maxsim_op(stacked, stacked_mask, flat_q,
+                                    flat_doc, flat_tok)
+
+        def cells_fused(flat_doc, flat_tok, new_mask):
+            return fused_reveal_op(stacked, stacked_mask, flat_q,
+                                   flat_doc, flat_tok, new_mask)
+
+        res, new_state = run_pooled_bandit(
+            cells, a, b, keys, cfg, doc_mask=cand_ids >= 0,
+            compute_cells_fused=cells_fused, fused=fused,
+            carry=state, fresh=fresh, trip_limit=trip_limit,
+            return_state=True)
+        scores = jnp.take_along_axis(res.s_hat, res.topk, axis=1)
+        picked = jnp.take_along_axis(cand_ids, res.topk, axis=1)
+        gids = jnp.where(picked >= 0, picked, -1)
+        stats = jnp.stack([res.occupancy,
+                           res.total_rounds.astype(jnp.float32),
+                           res.lockstep_waste.astype(jnp.float32)])
+        # Harvestable = separated/no-progress OR round-capped: a slot that
+        # exhausts max_rounds without separating must still leave the
+        # stream, else the host would re-enter it forever. Mirrors
+        # run_pooled_bandit's default when ``cfg.max_rounds <= 0``.
+        mr = cfg.max_rounds
+        if mr <= 0:
+            mr = (N * T) // max(cfg.block_docs * cfg.block_tokens, 1) + T + 8
+        harvest = new_state.done | (new_state.rounds >= mr)
+        return scores, gids, res.coverage, stats, harvest, new_state
+
+    return step
 
 
 # ---------------------------------------------------------------------------

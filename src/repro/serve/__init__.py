@@ -1,17 +1,23 @@
 """Serving: streaming retrieval engine + LM decode engine.
 
-``RetrievalEngine`` is the query-stream serving loop (deadline-aware
-batching, static shape buckets, warm jit caches, dense/bandit dispatch);
+``RetrievalEngine`` is the synchronous query-stream serving loop
+(deadline-aware batching, static shape buckets, warm jit caches,
+dense/bandit dispatch) and the parity oracle for
+``AsyncRetrievalEngine`` — the threaded runtime that overlaps host
+batch assembly with device execution and, in continuous mode, refills
+retired frontier slots from the admission queue mid-flight.
 ``repro.serve.lm`` holds the LM prefill/decode engine.
 """
 from repro.serve.bucketing import (ShapeBuckets, pad_candidates, pad_queries,
                                    support_bounds)
-from repro.serve.engine import (BatchRecord, Completion, EngineConfig,
+from repro.serve.engine import (AdmissionRejected, AsyncRetrievalEngine,
+                                BatchRecord, Completion, EngineConfig,
                                 EngineMetrics, Request, RetrievalEngine)
 from repro.serve.lm import generate, serve_step
 
 __all__ = [
     "ShapeBuckets", "pad_candidates", "pad_queries", "support_bounds",
-    "BatchRecord", "Completion", "EngineConfig", "EngineMetrics", "Request",
-    "RetrievalEngine", "generate", "serve_step",
+    "AdmissionRejected", "AsyncRetrievalEngine", "BatchRecord", "Completion",
+    "EngineConfig", "EngineMetrics", "Request", "RetrievalEngine",
+    "generate", "serve_step",
 ]

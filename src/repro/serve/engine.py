@@ -28,21 +28,29 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import os
+import queue as queue_mod
+import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from concurrent.futures import Future
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
+                    Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.frontier import FrontierState
 from repro.dist.fault import DeadlineBatcher
 from repro.kernels import tuning
 from repro.kernels.ops import autotune_op
 from repro.retrieval.ann import generate_candidates
 from repro.retrieval.corpus import Corpus, build_corpus
-from repro.retrieval.service import (make_routed_serving_step,
+from repro.retrieval.service import (init_stream_state,
+                                     make_routed_serving_step,
                                      make_serving_step,
-                                     make_sharded_serving_step)
+                                     make_sharded_serving_step,
+                                     make_streaming_step)
 from repro.retrieval.sharded import route_batch
 from repro.serve.bucketing import (ShapeBuckets, pad_candidates, pad_queries,
                                    support_bounds)
@@ -125,7 +133,34 @@ class EngineConfig:
     # the batcher gets — releasing AT the completion deadline would make
     # every deadline-triggered release a guaranteed miss under a real clock.
     deadline_headroom_s: float = 0.0
+    # Async runtime (AsyncRetrievalEngine) knobs — inert on the sync engine.
+    # ``pipeline_depth`` bounds the batches in flight on the device plus
+    # prepared-but-undispatched batches queued behind them: depth 2 means
+    # batch i+1 dispatches while i executes (the JetStream-style overlap);
+    # 1 degenerates to synchronous dispatch.
+    pipeline_depth: int = 2
+    # Backpressure policy when a deadline-carrying request's projected
+    # completion (now + (backlog + 1) * expected service) already overruns
+    # its deadline at submit: "none" admits anyway (it will simply miss),
+    # "reject" raises AdmissionRejected, "degrade" truncates the request's
+    # candidate list to the smallest candidate bucket (a cheaper, already
+    # compiled shape) and admits — dense requests and stage-1 requests
+    # cannot be degraded and fall back to plain admission.
+    backpressure: str = "none"
+    # Continuous (slot-refill) batching: serve through ONE resumable
+    # streaming executable instead of batch-at-a-time dispatch. A retired
+    # query's frontier slots are refilled from the admission queue
+    # mid-flight (``retrieval.service.make_streaming_step``); the stream
+    # advances ``stream_trip_limit`` reveal rounds per device dispatch.
+    continuous: bool = False
+    stream_trip_limit: int = 4
     seed: int = 0
+
+
+class AdmissionRejected(RuntimeError):
+    """Raised by ``submit`` under ``backpressure="reject"``: the queue is
+    deep enough that the request's completion deadline is already
+    unmeetable at admission time."""
 
 
 @dataclasses.dataclass
@@ -189,13 +224,22 @@ class BatchRecord:
 
 
 class EngineMetrics:
-    """Serving metrics: per-request, per-batch, and compile accounting."""
+    """Serving metrics: per-request, per-batch, and compile accounting.
+
+    Mutations go through the ``record_*`` methods, which take an internal
+    lock — the async engine's admit, dispatch and caller threads all write
+    here concurrently. ``summary()`` snapshots under the same lock."""
 
     def __init__(self):
+        self._lock = threading.Lock()
         self.completions: List[Completion] = []
         self.batches: List[BatchRecord] = []
         self.compiles: Dict[tuple, int] = {}
         self.compiles_after_warmup: int = 0
+        # Backpressure accounting (async engine): requests refused outright
+        # and requests admitted with a truncated candidate list.
+        self.rejected: int = 0
+        self.degraded: int = 0
         # Warmup-time kernel autotuning accounting: wall seconds spent
         # timing candidates, buckets measured this warmup, and entries
         # reused from a persisted tuning table instead of re-timed.
@@ -204,12 +248,31 @@ class EngineMetrics:
         self.tuning_entries_loaded: int = 0
 
     def record_compile(self, key: tuple, after_warmup: bool) -> None:
-        self.compiles[key] = self.compiles.get(key, 0) + 1
-        if after_warmup:
-            self.compiles_after_warmup += 1
+        with self._lock:
+            self.compiles[key] = self.compiles.get(key, 0) + 1
+            if after_warmup:
+                self.compiles_after_warmup += 1
+
+    def record_batch(self, record: BatchRecord,
+                     completions: Sequence[Completion]) -> None:
+        with self._lock:
+            self.batches.append(record)
+            self.completions.extend(completions)
+
+    def record_rejected(self) -> None:
+        with self._lock:
+            self.rejected += 1
+
+    def record_degraded(self) -> None:
+        with self._lock:
+            self.degraded += 1
 
     def summary(self) -> Dict[str, Any]:
-        reqs, bats = self.completions, self.batches
+        with self._lock:
+            reqs, bats = list(self.completions), list(self.batches)
+            n_compiles = int(sum(self.compiles.values()))
+            n_after = int(self.compiles_after_warmup)
+            n_rej, n_deg = self.rejected, self.degraded
         bandit_bats = [b for b in bats if b.flavor == "bandit"]
         waits = np.array([c.queue_wait_s for c in reqs]) if reqs else np.zeros(1)
         lats = np.array([c.latency_s for c in reqs]) if reqs else np.zeros(1)
@@ -236,19 +299,21 @@ class EngineMetrics:
             "total_reveal_rounds": float(sum(b.total_rounds for b in bats)),
             "total_lockstep_waste": float(sum(b.lockstep_waste
                                               for b in bats)),
-            "compiles": int(sum(self.compiles.values())),
-            "compiles_after_warmup": int(self.compiles_after_warmup),
+            "compiles": n_compiles,
+            "compiles_after_warmup": n_after,
+            "rejected": int(n_rej),
+            "degraded": int(n_deg),
             "autotune_s": float(self.autotune_s),
             "autotune_buckets": int(self.autotune_buckets),
             "tuning_entries_loaded": int(self.tuning_entries_loaded),
-            **self._shard_summary(),
+            **self._shard_summary(bats),
         }
 
-    def _shard_summary(self) -> Dict[str, Any]:
+    def _shard_summary(self, bats: List[BatchRecord]) -> Dict[str, Any]:
         """Per-shard aggregates over the sharded-corpus batches: summed
         bandit rounds and mean frontier occupancy per shard — the routing
         skew / straggler signal the mesh operator watches."""
-        sharded = [b for b in self.batches if b.shard_rounds is not None]
+        sharded = [b for b in bats if b.shard_rounds is not None]
         if not sharded:
             return {}
         rounds = np.sum([b.shard_rounds for b in sharded], axis=0)
@@ -268,6 +333,20 @@ class EngineMetrics:
         return out
 
 
+class _Prepared(NamedTuple):
+    """A released batch after host-side preparation (bucketing, padding,
+    stage-1, routing): everything the dispatch thread needs to launch the
+    device program and the harvest step needs to attribute results."""
+
+    real: List[Request]
+    n_real: int
+    bucket: Tuple[int, int]
+    flavor: str
+    exe: Any
+    args: tuple
+    t_release: float
+
+
 class RetrievalEngine:
     """Deadline-batched, shape-bucketed late-interaction serving loop.
 
@@ -280,6 +359,12 @@ class RetrievalEngine:
         done += engine.drain()                 # end of stream: flush queue
 
     ``clock`` is injectable so tests and simulations drive virtual time.
+
+    Batch execution is staged as prepare (host: bucket, pad, stage-1,
+    route) -> dispatch (launch the AOT executable; returns device arrays
+    without blocking) -> finish (block_until_ready + attribution). This
+    engine runs the three stages back to back per batch — the synchronous
+    parity oracle; :class:`AsyncRetrievalEngine` runs them on a pipeline.
     """
 
     def __init__(self, corpus_embs, corpus_mask,
@@ -317,9 +402,20 @@ class RetrievalEngine:
         self._stage1_n = (self.cfg.stage1_candidates
                           or self.buckets.cand_buckets[0])
         self._stage1_n = self.buckets.cand_bucket(self._stage1_n)
+        self._service_ema = 0.0           # observed batch service time (s)
+        # Admission headroom is a LIVE callable: the batcher derives each
+        # deadline-carrying request's admission deadline as
+        # ``deadline_abs - headroom()`` at poll time, so a service-time EMA
+        # that rises while requests queue tightens their release point
+        # instead of leaving them frozen at submit-time headroom.
         self._batcher = DeadlineBatcher(self.cfg.batch_size,
-                                        self.cfg.deadline_s, clock=clock)
+                                        self.cfg.deadline_s, clock=clock,
+                                        headroom=self._admission_headroom)
         self._exec: Dict[tuple, Any] = {}
+        # Compile-once across threads (admit thread compiles stage-1 on a
+        # cold miss while the dispatch thread compiles a step, etc.).
+        self._exec_lock = threading.RLock()
+        self._state_lock = threading.Lock()      # guards _service_ema
         self._rid = itertools.count()
         # Batch ORDINAL, not a raw seed: the executable folds it into the
         # key(cfg.seed) stream, so every batch (whatever its shape bucket)
@@ -327,8 +423,14 @@ class RetrievalEngine:
         # bit-identically from the same config.
         self._batch_seed = itertools.count()
         self._warmed = False
-        self._service_ema = 0.0           # observed batch service time (s)
         self.metrics = EngineMetrics()
+
+    def _admission_headroom(self) -> float:
+        """Expected batch service time the batcher must leave between
+        admission and the completion deadline — the LIVE estimate, floored
+        by the configured static headroom."""
+        with self._state_lock:
+            return max(self.cfg.deadline_headroom_s, self._service_ema)
 
     @property
     def sharded(self) -> Optional[Corpus]:
@@ -356,7 +458,16 @@ class RetrievalEngine:
         return sorted(self._exec)
 
     def _executable(self, key: tuple):
-        """One AOT executable per bucket key; compiles (and counts) on miss."""
+        """One AOT executable per bucket key; compiles (and counts) on miss.
+        Thread-safe: a cold miss compiles under the executable lock, so two
+        threads racing the same key produce one compile."""
+        exe = self._exec.get(key)
+        if exe is not None:
+            return exe
+        with self._exec_lock:
+            return self._compile(key)
+
+    def _compile(self, key: tuple):
         exe = self._exec.get(key)
         if exe is not None:
             return exe
@@ -430,6 +541,37 @@ class RetrievalEngine:
                     SDS((corpus.n_shards,), jnp.int32),
                     SDS((), jnp.int32))
             exe = jax.jit(step).lower(*args).compile()
+        elif key[0] == "stream":
+            # Continuous-batching slice executable: one static shape for
+            # the whole stream, per-slot PRNG keys, frontier state donated
+            # (the old slice's buffers back the new slice's).
+            _, tb, nb = key
+            if self.sharded is not None:
+                raise ValueError("continuous (slot-refill) serving is "
+                                 "single-device; unset mesh_axes")
+            step = make_streaming_step(
+                topk=cfg.max_k, alpha_ef=cfg.alpha_ef, delta=cfg.delta,
+                block_docs=cfg.block_docs, block_tokens=cfg.block_tokens,
+                max_rounds=cfg.max_rounds,
+                max_block_docs=cfg.max_block_docs,
+                max_block_tokens=cfg.max_block_tokens,
+                trip_limit=cfg.stream_trip_limit)
+            kd = jax.random.key(0).dtype
+            state_sds = FrontierState(
+                cellvals=SDS((B * nb, tb), jnp.float32),
+                stats=SDS((B * nb, 3), jnp.float32),
+                key=SDS((B,), kd),
+                rounds=SDS((B,), jnp.int32),
+                done=SDS((B,), jnp.bool_))
+            args = (self.corpus_embs, self.corpus_mask,
+                    SDS((B, tb, M), jnp.float32),
+                    SDS((B, nb), jnp.int32),
+                    SDS((B, nb, tb), jnp.float32),
+                    SDS((B, nb, tb), jnp.float32),
+                    state_sds,
+                    SDS((B,), jnp.bool_),
+                    SDS((B,), kd))
+            exe = jax.jit(step, donate_argnums=(6,)).lower(*args).compile()
         elif key[0] == "stage1":
             _, tb = key
             nb, kp, support = self._stage1_n, cfg.stage1_kprime, cfg.support
@@ -537,8 +679,18 @@ class RetrievalEngine:
                 # flavor_for is a pure function of the bucket, so exactly one
                 # flavor is reachable per (tb, nb) — compile just that one.
                 self._executable(("step", self.flavor_for(nb), tb, nb))
+        if cfg.continuous:
+            self._executable(("stream", *self._stream_bucket))
         self._warmed = True
         return self.compiled_buckets
+
+    @property
+    def _stream_bucket(self) -> Tuple[int, int]:
+        """Continuous mode serves every request through ONE compiled shape:
+        the largest token bucket x the largest candidate bucket (any
+        admissible request pads into it, so refill never recompiles)."""
+        return (self.buckets.token_buckets[-1],
+                max(self.buckets.cand_buckets[-1], self._stage1_n))
 
     # -- request lifecycle ------------------------------------------------
 
@@ -572,12 +724,16 @@ class RetrievalEngine:
                           else arrival + request.deadline_s))
         # Admission deadline = completion deadline - expected service time,
         # so the batch still has time to EXECUTE before the request is due.
-        admission = None
-        if admitted.deadline_s is not None:
-            headroom = max(self.cfg.deadline_headroom_s, self._service_ema)
-            admission = max(0.0, admitted.deadline_s - headroom)
-        self._batcher.add(admitted, deadline_s=admission)
+        # The batcher derives it from ``deadline_abs`` and the engine's
+        # live ``_admission_headroom()`` at every poll — never frozen here,
+        # where a later EMA rise could not reach it.
+        self._enqueue(admitted)
         return admitted.rid
+
+    def _enqueue(self, admitted: Request) -> None:
+        """Queue placement for a validated request (the async engine's
+        continuous mode overrides this to feed the slot-refill stream)."""
+        self._batcher.add(admitted, deadline_abs=admitted.deadline_abs)
 
     def next_expiry(self) -> Optional[float]:
         """Absolute clock time at which the pending (partial) batch will be
@@ -613,15 +769,28 @@ class RetrievalEngine:
 
     def _serve_batch(self, reqs: Sequence[Request],
                      n_real: int) -> List[Completion]:
+        """Synchronous path: prepare, dispatch, and harvest back to back."""
+        prep = self._prepare_batch(reqs, n_real, self.clock())
+        return self._finish_batch(prep, self._dispatch_batch(prep))
+
+    def _dispatch_batch(self, prep: _Prepared):
+        """Launch the batch's executable. JAX dispatch is asynchronous:
+        this returns device arrays immediately; only ``_finish_batch``
+        blocks on them — the property the async pipeline overlaps on."""
+        return prep.exe(*prep.args)
+
+    def _prepare_batch(self, reqs: Sequence[Request], n_real: int,
+                       t_release: float) -> _Prepared:
+        """Host-side batch assembly: bucket, pad, stage-1, route — no
+        waiting on the main step executable."""
         cfg = self.cfg
-        t_release = self.clock()
         real = list(reqs[:n_real])
         tb = self.buckets.token_bucket(max(r.query.shape[0] for r in real))
         provided = [r.cand_ids for r in reqs]
         missing = [c is None for c in provided]
         if self._routed and all(missing):
-            return self._serve_batch_routed(reqs, real, n_real, tb,
-                                            t_release)
+            return self._prepare_batch_routed(reqs, real, n_real, tb,
+                                              t_release)
         n_need = max([len(c) for c in provided if c is not None], default=0)
         if any(missing):
             n_need = max(n_need, self._stage1_n)
@@ -662,20 +831,18 @@ class RetrievalEngine:
                 a_l, b_l = zero, zero
             else:
                 a_l, b_l = routed
-            scores, gids, frac, stats = exe(
-                self.corpus_embs, self.corpus_mask, jnp.asarray(queries),
-                jnp.asarray(cand_l), jnp.asarray(a_l), jnp.asarray(b_l),
-                self._valid_docs, seed)
+            args = (self.corpus_embs, self.corpus_mask, jnp.asarray(queries),
+                    jnp.asarray(cand_l), jnp.asarray(a_l), jnp.asarray(b_l),
+                    self._valid_docs, seed)
         else:
-            scores, gids, frac, stats = exe(
-                self.corpus_embs, self.corpus_mask, jnp.asarray(queries),
-                jnp.asarray(cand), jnp.asarray(a), jnp.asarray(b), seed)
-        return self._finish_batch(real, n_real, (tb, nb), flavor, t_release,
-                                  scores, gids, frac, stats)
+            args = (self.corpus_embs, self.corpus_mask, jnp.asarray(queries),
+                    jnp.asarray(cand), jnp.asarray(a), jnp.asarray(b), seed)
+        return _Prepared(real, n_real, (tb, nb), flavor, exe, args,
+                         t_release)
 
-    def _serve_batch_routed(self, reqs: Sequence[Request],
-                            real: List[Request], n_real: int, tb: int,
-                            t_release: float) -> List[Completion]:
+    def _prepare_batch_routed(self, reqs: Sequence[Request],
+                              real: List[Request], n_real: int, tb: int,
+                              t_release: float) -> _Prepared:
         """One-shard_map dispatch for candidate-less batches on a routed
         engine: no host stage-1, no routing tables — queries in,
         scorecards out."""
@@ -685,19 +852,17 @@ class RetrievalEngine:
         queries = pad_queries([r.query for r in reqs], tb)
         seed = jnp.int32(next(self._batch_seed))
         cents, mass = self._router_args
-        scores, gids, frac, stats = exe(
-            self.corpus_embs, self.corpus_mask, cents, mass,
-            jnp.asarray(queries), self._valid_docs, seed)
-        return self._finish_batch(real, n_real, (tb, nb), flavor, t_release,
-                                  scores, gids, frac, stats)
+        args = (self.corpus_embs, self.corpus_mask, cents, mass,
+                jnp.asarray(queries), self._valid_docs, seed)
+        return _Prepared(real, n_real, (tb, nb), flavor, exe, args,
+                         t_release)
 
-    def _finish_batch(self, real: List[Request], n_real: int,
-                      bucket: Tuple[int, int], flavor: str,
-                      t_release: float, scores, gids, frac,
-                      stats) -> List[Completion]:
+    def _finish_batch(self, prep: _Prepared, out) -> List[Completion]:
+        """Completion harvest: the ONLY stage that blocks on the device."""
         cfg = self.cfg
-        scores, gids, frac, stats = jax.block_until_ready(
-            (scores, gids, frac, stats))
+        real, n_real = prep.real, prep.n_real
+        bucket, flavor, t_release = prep.bucket, prep.flavor, prep.t_release
+        scores, gids, frac, stats = jax.block_until_ready(out)
         scores, gids, frac, stats = (np.asarray(scores), np.asarray(gids),
                                      np.asarray(frac), np.asarray(stats))
         t_done = self.clock()
@@ -718,9 +883,11 @@ class RetrievalEngine:
             agg = (float(stats[0]), float(stats[1]), float(stats[2]))
 
         service_s = t_done - t_release
-        self._service_ema = (service_s if not self.metrics.batches
-                             else 0.7 * self._service_ema + 0.3 * service_s)
-        self.metrics.batches.append(BatchRecord(
+        with self._state_lock:
+            self._service_ema = (service_s if not self.metrics.batches
+                                 else 0.7 * self._service_ema
+                                 + 0.3 * service_s)
+        record = BatchRecord(
             bucket=bucket, flavor=flavor, n_real=n_real,
             occupancy=n_real / cfg.batch_size,
             service_s=service_s,
@@ -730,7 +897,7 @@ class RetrievalEngine:
             lockstep_waste=agg[2],
             shard_occupancy=shard_occ,
             shard_rounds=shard_rounds,
-            shard_quota_share=shard_quota))
+            shard_quota_share=shard_quota)
 
         done: List[Completion] = []
         for i, r in enumerate(real):
@@ -751,5 +918,427 @@ class RetrievalEngine:
                 flavor=flavor, bucket=bucket,
                 reveal_fraction=float(frac[i]))
             done.append(comp)
-        self.metrics.completions.extend(done)
+        self.metrics.record_batch(record, done)
         return done
+
+
+# Dispatch-queue sentinel: the admit thread pushes it when it exits so the
+# dispatch thread drains its in-flight batches and terminates.
+_STOP = object()
+
+
+class AsyncRetrievalEngine(RetrievalEngine):
+    """Async continuous-serving runtime over the same compiled buckets.
+
+    Two dedicated threads split the synchronous engine's serve loop the way
+    an offline-inference pipeline does:
+
+    * the ADMIT thread drives the deadline batcher (sleeping toward
+      ``next_expiry`` — which wakes immediately on a ready full batch) and
+      runs host-side batch preparation (bucketing, padding, stage-1,
+      routing);
+    * the DISPATCH thread launches prepared batches on the device and,
+      because JAX dispatch is asynchronous, immediately accepts the next
+      one — batch i+1 dispatches while i executes. It calls
+      ``jax.block_until_ready`` only at completion-harvest time, once the
+      pipeline holds ``cfg.pipeline_depth`` batches (or goes idle).
+
+    Admission backpressure (``cfg.backpressure``) rejects or degrades a
+    deadline-carrying request at ``submit`` when the projected completion
+    — queue backlog plus pipeline depth, costed at the live service-time
+    EMA — already overruns its deadline.
+
+    With ``cfg.continuous`` the batch pipeline is replaced by slot-level
+    continuous batching: ONE resumable streaming executable
+    (``retrieval.service.make_streaming_step``) holds a ``batch_size``-slot
+    frontier; every device dispatch advances all live slots
+    ``cfg.stream_trip_limit`` reveal rounds, and slots whose query retired
+    are harvested and refilled from the admission queue mid-flight —
+    the whole batch never drains to admit new work.
+
+    Completions surface three ways: ``poll()`` (non-blocking pop of
+    everything finished since the last poll), ``drain()`` (block until all
+    submitted work completes), and per-request ``future(rid)``. The
+    synchronous engine remains the parity oracle: an un-``start()``-ed
+    async engine serves exactly like :class:`RetrievalEngine`.
+    """
+
+    def __init__(self, corpus_embs, corpus_mask,
+                 config: Optional[EngineConfig] = None, *,
+                 clock: Callable[[], float] = time.monotonic,
+                 poll_interval_s: float = 0.002):
+        super().__init__(corpus_embs, corpus_mask, config, clock=clock)
+        if self.cfg.backpressure not in ("none", "reject", "degrade"):
+            raise ValueError(f"unknown backpressure policy "
+                             f"{self.cfg.backpressure!r}")
+        if self.cfg.pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
+        self._poll_interval = float(poll_interval_s)
+        self._work_cv = threading.Condition()
+        self._done_cv = threading.Condition()
+        self._stop_evt = threading.Event()
+        self._drain_evt = threading.Event()
+        self._prep_q: queue_mod.Queue = queue_mod.Queue(
+            maxsize=self.cfg.pipeline_depth)
+        self._completed_lock = threading.Lock()
+        self._completed: deque = deque()
+        self._futures: Dict[int, Future] = {}
+        self._submitted = 0
+        self._finished = 0
+        self._inflight = 0
+        self._stream_q: deque = deque()
+        self._threads: List[threading.Thread] = []
+        self._thread_exc: Optional[BaseException] = None
+        self._started = False
+
+    # -- lifecycle --------------------------------------------------------
+
+    def start(self) -> "AsyncRetrievalEngine":
+        """Spawn the serving threads. Idempotent while running."""
+        if self._started:
+            return self
+        self._raise_if_failed()
+        self._stop_evt.clear()
+        if self.cfg.continuous:
+            targets = [("repro-stream", self._stream_loop)]
+        else:
+            targets = [("repro-admit", self._admit_loop),
+                       ("repro-dispatch", self._dispatch_loop)]
+        self._threads = [
+            threading.Thread(target=self._guard, args=(fn,), name=name,
+                             daemon=True)
+            for name, fn in targets]
+        self._started = True
+        for t in self._threads:
+            t.start()
+        return self
+
+    def stop(self) -> None:
+        """Stop the serving threads. In-flight batches are harvested;
+        requests still queued are abandoned — ``drain()`` first for a
+        clean shutdown."""
+        if not self._started:
+            return
+        self._stop_evt.set()
+        with self._work_cv:
+            self._work_cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=60.0)
+        self._started = False
+        self._raise_if_failed()
+
+    def __enter__(self) -> "AsyncRetrievalEngine":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.stop()
+
+    def _guard(self, fn) -> None:
+        try:
+            fn()
+        except BaseException as e:   # propagate to drain()/stop() callers
+            self._thread_exc = e
+            self._stop_evt.set()
+            with self._done_cv:
+                self._done_cv.notify_all()
+
+    def _raise_if_failed(self) -> None:
+        if self._thread_exc is not None:
+            exc, self._thread_exc = self._thread_exc, None
+            raise RuntimeError("serving thread died") from exc
+
+    # -- admission --------------------------------------------------------
+
+    def _backlog_batches(self) -> int:
+        """Batches queued ahead of a request admitted right now."""
+        B = self.cfg.batch_size
+        if self.cfg.continuous:
+            with self._work_cv:
+                return (len(self._stream_q) + B - 1) // B
+        queued = (len(self._batcher) + B - 1) // B
+        return queued + self._prep_q.qsize() + self._inflight
+
+    def submit(self, request: Request) -> int:
+        if self.cfg.continuous and not self._started:
+            raise RuntimeError("continuous mode serves from the stream "
+                               "thread; call start() before submit()")
+        self._raise_if_failed()
+        cfg = self.cfg
+        if cfg.backpressure != "none" and request.deadline_s is not None:
+            # Projected completion: every batch ahead of this request plus
+            # its own, costed at the live expected batch service time.
+            expected = self._admission_headroom()
+            wait = (self._backlog_batches() + 1) * expected
+            if wait > request.deadline_s:
+                if cfg.backpressure == "reject":
+                    self.metrics.record_rejected()
+                    raise AdmissionRejected(
+                        f"projected wait {wait * 1e3:.1f} ms exceeds "
+                        f"deadline {request.deadline_s * 1e3:.1f} ms")
+                min_nb = self.buckets.cand_buckets[0]
+                if (request.cand_ids is not None
+                        and len(request.cand_ids) > min_nb):
+                    request = dataclasses.replace(
+                        request,
+                        cand_ids=np.asarray(request.cand_ids)[:min_nb])
+                    self.metrics.record_degraded()
+        return super().submit(request)
+
+    def _enqueue(self, admitted: Request) -> None:
+        with self._done_cv:
+            self._futures[admitted.rid] = Future()
+            self._submitted += 1
+        if self.cfg.continuous:
+            with self._work_cv:
+                self._stream_q.append(admitted)
+                self._work_cv.notify_all()
+        else:
+            super()._enqueue(admitted)
+            with self._work_cv:
+                self._work_cv.notify_all()
+
+    def future(self, rid: int) -> Optional[Future]:
+        """The request's completion future (None for unknown rids)."""
+        with self._done_cv:
+            return self._futures.get(rid)
+
+    # -- completion surfaces ----------------------------------------------
+
+    def _resolve(self, comps: Sequence[Completion]) -> None:
+        if not comps:
+            return
+        with self._done_cv:
+            for c in comps:
+                fut = self._futures.get(c.rid)
+                if fut is not None and not fut.done():
+                    fut.set_result(c)
+                self._finished += 1
+            self._done_cv.notify_all()
+
+    def _deliver(self, comps: Sequence[Completion]) -> None:
+        self._resolve(comps)
+        if comps:
+            with self._completed_lock:
+                self._completed.extend(comps)
+
+    def poll(self) -> List[Completion]:
+        """Un-started: serve synchronously (parity-oracle mode). Started:
+        non-blocking pop of everything completed since the last poll."""
+        if not self._started:
+            comps = super().poll()
+            self._resolve(comps)
+            return comps
+        self._raise_if_failed()
+        with self._completed_lock:
+            out = list(self._completed)
+            self._completed.clear()
+        return out
+
+    def drain(self) -> List[Completion]:
+        """Block until every submitted request has completed; returns the
+        completions not yet surfaced through ``poll``."""
+        if not self._started:
+            comps = super().drain()
+            self._resolve(comps)
+            return comps
+        self._drain_evt.set()
+        with self._work_cv:
+            self._work_cv.notify_all()
+        try:
+            with self._done_cv:
+                while self._finished < self._submitted:
+                    if self._thread_exc is not None or (
+                            self._stop_evt.is_set()):
+                        break
+                    self._done_cv.wait(timeout=self._poll_interval * 5)
+        finally:
+            self._drain_evt.clear()
+        self._raise_if_failed()
+        with self._done_cv:
+            if self._finished < self._submitted:
+                raise RuntimeError("drain() interrupted by stop()")
+        return self.poll()
+
+    # -- batch-pipeline threads -------------------------------------------
+
+    def _admit_loop(self) -> None:
+        """Drive the deadline batcher; prepare released batches; feed the
+        bounded dispatch queue (whose ``put`` blocking IS the pipeline's
+        backpressure on admission work)."""
+        while True:
+            out = self._batcher.poll()
+            if out is None and self._drain_evt.is_set():
+                out = self._batcher.flush()
+            if out is not None:
+                prep = self._prepare_batch(out[0], out[1], self.clock())
+                while True:
+                    try:
+                        self._prep_q.put(prep, timeout=0.1)
+                        break
+                    except queue_mod.Full:
+                        if self._stop_evt.is_set():
+                            self._prep_q.put(_STOP)
+                            return
+                continue
+            if self._stop_evt.is_set():
+                self._prep_q.put(_STOP)
+                return
+            with self._work_cv:
+                exp = self._batcher.next_expiry()
+                now = self.clock()
+                tmo = (self._poll_interval if exp is None
+                       else min(max(exp - now, 0.0), self._poll_interval))
+                if tmo > 0:
+                    self._work_cv.wait(timeout=tmo)
+
+    def _dispatch_loop(self) -> None:
+        """Launch prepared batches; keep up to ``pipeline_depth`` in
+        flight; block on device results only when the pipeline is full or
+        idle — the JetStream-style dispatch/harvest split."""
+        depth = self.cfg.pipeline_depth
+        inflight: deque = deque()
+        while True:
+            try:
+                prep = self._prep_q.get(timeout=self._poll_interval)
+            except queue_mod.Empty:
+                prep = None
+            if prep is _STOP:
+                while inflight:
+                    p, o = inflight.popleft()
+                    self._inflight = len(inflight)
+                    self._deliver(self._finish_batch(p, o))
+                return
+            if prep is not None:
+                inflight.append((prep, self._dispatch_batch(prep)))
+                self._inflight = len(inflight)
+                if len(inflight) >= depth:
+                    p, o = inflight.popleft()
+                    self._inflight = len(inflight)
+                    self._deliver(self._finish_batch(p, o))
+            elif inflight:
+                p, o = inflight.popleft()
+                self._inflight = len(inflight)
+                self._deliver(self._finish_batch(p, o))
+
+    # -- continuous (slot-refill) thread ----------------------------------
+
+    def _stream_loop(self) -> None:
+        """Slot-level continuous batching: one resumable frontier of
+        ``batch_size`` slots; retired slots are harvested and refilled
+        from the admission queue between slices while the other slots'
+        bandit state carries forward on the device."""
+        cfg = self.cfg
+        B = cfg.batch_size
+        tb, nb = self._stream_bucket
+        exe = self._executable(("stream", tb, nb))
+        M = self.corpus_embs.shape[2]
+        base_key = jax.random.key(cfg.seed)
+        state = init_stream_state(B, nb, tb)
+        keys = jax.random.split(base_key, B)
+        slot: List[Optional[Request]] = [None] * B
+        slot_fill = [0.0] * B
+        queries = np.zeros((B, tb, M), np.float32)
+        cand = np.full((B, nb), -1, np.int32)
+        a_np = np.zeros((B, nb, tb), np.float32)
+        b_np = np.zeros((B, nb, tb), np.float32)
+
+        while True:
+            # 1. Refill retired slots from the admission queue.
+            newly: List[int] = []
+            for s in range(B):
+                if slot[s] is not None:
+                    continue
+                with self._work_cv:
+                    r = (self._stream_q.popleft() if self._stream_q
+                         else None)
+                if r is None:
+                    break
+                slot[s] = r
+                slot_fill[s] = self.clock()
+                newly.append(s)
+            fresh = np.zeros((B,), bool)
+            if newly:
+                need = [s for s in newly if slot[s].cand_ids is None]
+                if need:
+                    q_pad = np.zeros((B, tb, M), np.float32)
+                    for s in need:
+                        q = slot[s].query
+                        q_pad[s, :q.shape[0]] = q
+                    ids1, a1, b1 = self._executable(("stage1", tb))(
+                        self.corpus_embs, self.corpus_mask,
+                        jnp.asarray(q_pad))
+                    ids1, a1, b1 = (np.asarray(ids1), np.asarray(a1),
+                                    np.asarray(b1))
+                for s in newly:
+                    r = slot[s]
+                    queries[s] = 0.0
+                    queries[s, :r.query.shape[0]] = r.query
+                    if r.cand_ids is None:
+                        cand[s] = -1
+                        cand[s, :self._stage1_n] = ids1[s]
+                        a_np[s] = 0.0
+                        b_np[s] = 0.0
+                        a_np[s, :self._stage1_n] = a1[s]
+                        b_np[s, :self._stage1_n] = b1[s]
+                    else:
+                        row = pad_candidates([r.cand_ids], nb)
+                        cand[s] = row[0]
+                        aa, bb = support_bounds(row, [r.query.shape[0]],
+                                                tb, cfg.support)
+                        a_np[s], b_np[s] = aa[0], bb[0]
+                    keys = keys.at[s].set(
+                        jax.random.fold_in(base_key, r.rid))
+                    fresh[s] = True
+
+            live = [s for s in range(B) if slot[s] is not None]
+            if not live:
+                if self._stop_evt.is_set():
+                    return
+                with self._work_cv:
+                    if not self._stream_q:
+                        self._work_cv.wait(timeout=self._poll_interval)
+                continue
+
+            # 2. One slice: every live slot advances trip_limit rounds.
+            t0 = self.clock()
+            scores, gids, frac, stats, harvest, state = exe(
+                self.corpus_embs, self.corpus_mask, jnp.asarray(queries),
+                jnp.asarray(cand), jnp.asarray(a_np), jnp.asarray(b_np),
+                state, jnp.asarray(fresh), keys)
+            scores, gids, frac, stats, harvest = jax.block_until_ready(
+                (scores, gids, frac, stats, harvest))
+            t_done = self.clock()
+            scores, gids, frac, stats, harvest = (
+                np.asarray(scores), np.asarray(gids), np.asarray(frac),
+                np.asarray(stats), np.asarray(harvest))
+
+            # 3. Harvest retired slots.
+            comps: List[Completion] = []
+            for s in live:
+                if not harvest[s]:
+                    continue
+                r = slot[s]
+                comps.append(Completion(
+                    rid=r.rid,
+                    topk_ids=gids[s, :r.k].copy(),
+                    topk_scores=scores[s, :r.k].copy(),
+                    queue_wait_s=slot_fill[s] - r.arrival,
+                    latency_s=t_done - r.arrival,
+                    deadline_miss=(r.deadline_abs is not None
+                                   and t_done > r.deadline_abs + 1e-9),
+                    flavor="bandit", bucket=(tb, nb),
+                    reveal_fraction=float(frac[s])))
+                slot[s] = None
+            service_s = t_done - t0
+            with self._state_lock:
+                self._service_ema = (
+                    service_s if not self.metrics.batches
+                    else 0.7 * self._service_ema + 0.3 * service_s)
+            self.metrics.record_batch(BatchRecord(
+                bucket=(tb, nb), flavor="bandit", n_real=len(live),
+                occupancy=len(live) / B, service_s=service_s,
+                reveal_fraction=float(np.mean(frac[live])),
+                frontier_occupancy=float(stats[0]),
+                total_rounds=float(stats[1]),
+                lockstep_waste=float(stats[2])), comps)
+            self._deliver(comps)

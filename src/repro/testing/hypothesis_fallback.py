@@ -67,6 +67,9 @@ def given(*strategies: _Strategy):
     the first draws, then seeded-random tuples)."""
 
     def deco(fn):
+        params = list(inspect.signature(fn).parameters.values())
+        drawn = [p.name for p in params[len(params) - len(strategies):]]
+
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
             n = getattr(wrapper, "_fallback_max_examples", None) or 20
@@ -79,16 +82,21 @@ def given(*strategies: _Strategy):
                 else:
                     example = tuple(s.draw(rng) for s in strategies)
                 try:
-                    fn(*args, *example, **kwargs)
+                    # Bind drawn values by NAME: pytest passes fixtures as
+                    # keywords, so positional splicing would collide.
+                    fn(*args, **kwargs, **dict(zip(drawn, example)))
                 except Exception as e:
                     raise AssertionError(
                         f"falsifying example ({fn.__name__}): "
                         f"{example!r}") from e
-        # pytest must NOT see the generated params as fixture requests:
-        # hide the wrapped signature (functools.wraps exposes it via
-        # __wrapped__) and advertise a zero-arg one.
+        # pytest must NOT see the generated params as fixture requests.
+        # Mirror real hypothesis: strategies bind the RIGHTMOST parameters;
+        # any leading ones stay visible so pytest injects them as fixtures.
+        # (functools.wraps exposes the full signature via __wrapped__ —
+        # drop it and advertise only the fixture params.)
         del wrapper.__wrapped__
-        wrapper.__signature__ = inspect.Signature(parameters=[])
+        wrapper.__signature__ = inspect.Signature(
+            parameters=params[:len(params) - len(strategies)])
         wrapper.hypothesis_fallback = True
         return wrapper
     return deco

@@ -313,3 +313,147 @@ def test_dense_step_has_no_bnlt_intermediate(monkeypatch):
 
     peak = peak_buffer_bytes(jax.jit(step).lower(*args).compile())
     assert peak < B * N * L * T * 4, (peak, B * N * L * T * 4)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 7: resumable slices (continuous batching) — carry/fresh/trip_limit
+# ---------------------------------------------------------------------------
+
+from repro.core import (BatchedConfig, init_frontier_state,  # noqa: E402
+                        run_pooled_bandit, run_pooled_slice)
+
+
+def _cells_for(H):
+    """The oracle cell closure over a precomputed (Q, N, T) tensor — the
+    same flat-token mapping run_pooled_oracle builds internally."""
+    Q, N, T = H.shape
+    h_flat = H.reshape(Q * N, T)
+
+    def cells(flat_doc, flat_tok):
+        t_local = flat_tok - (flat_doc // N * T)[:, None]
+        return h_flat[flat_doc[:, None], jnp.clip(t_local, 0, T - 1)]
+
+    return cells
+
+
+_SLICE_CFG = BatchedConfig(k=5, alpha_ef=0.3, block_docs=8, block_tokens=4)
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_slice_resume_matches_one_shot(fused):
+    """Pausing the pooled loop every trip_limit trips and resuming from the
+    returned FrontierState must replay the one-shot run bit for bit —
+    same reveals, rounds, scores and top-K for every query, under either
+    round body (the PRNG keys live in the carried state)."""
+    H = _mixed_h(30, Q=4, n_hard=1)
+    a, b = _bounds(H)
+    keys = jax.random.split(jax.random.key(30), 4)
+    cells = _cells_for(H)
+    want = run_pooled_bandit(cells, a, b, keys, _SLICE_CFG, fused=fused)
+
+    Q, N, T = H.shape
+    state = init_frontier_state(Q, N, T)
+    fresh = jnp.ones((Q,), jnp.bool_)
+    for _ in range(64):
+        res, state = run_pooled_slice(cells, a, b, keys, _SLICE_CFG, state,
+                                      fresh, trip_limit=2, fused=fused)
+        fresh = jnp.zeros((Q,), jnp.bool_)
+        if bool(np.asarray(state.done).all()):
+            break
+    else:
+        pytest.fail("stream never quiesced")
+
+    np.testing.assert_array_equal(np.asarray(res.topk), np.asarray(want.topk))
+    np.testing.assert_array_equal(np.asarray(res.s_hat),
+                                  np.asarray(want.s_hat))
+    np.testing.assert_array_equal(np.asarray(res.reveals),
+                                  np.asarray(want.reveals))
+    np.testing.assert_array_equal(np.asarray(res.rounds),
+                                  np.asarray(want.rounds))
+    np.testing.assert_array_equal(np.asarray(res.revealed),
+                                  np.asarray(want.revealed))
+
+
+def test_slice_resume_across_round_bodies():
+    """The packed FrontierState is the shared slice-boundary format: a
+    stream may pause under the fused body and resume under the chain body
+    (or vice versa) without changing a single revealed cell."""
+    H = _mixed_h(31, Q=4, n_hard=1)
+    a, b = _bounds(H)
+    keys = jax.random.split(jax.random.key(31), 4)
+    cells = _cells_for(H)
+    want = run_pooled_bandit(cells, a, b, keys, _SLICE_CFG, fused=True)
+
+    Q, N, T = H.shape
+    state = init_frontier_state(Q, N, T)
+    fresh = jnp.ones((Q,), jnp.bool_)
+    for i in range(64):
+        res, state = run_pooled_slice(cells, a, b, keys, _SLICE_CFG, state,
+                                      fresh, trip_limit=2,
+                                      fused=bool(i % 2))   # alternate bodies
+        fresh = jnp.zeros((Q,), jnp.bool_)
+        if bool(np.asarray(state.done).all()):
+            break
+    else:
+        pytest.fail("stream never quiesced")
+
+    np.testing.assert_array_equal(np.asarray(res.topk), np.asarray(want.topk))
+    np.testing.assert_array_equal(np.asarray(res.revealed),
+                                  np.asarray(want.revealed))
+    np.testing.assert_array_equal(np.asarray(res.reveals),
+                                  np.asarray(want.reveals))
+
+
+def test_slice_refill_parity_with_one_shot():
+    """Slot-level continuous batching: a 2-slot stream serving 4 queries
+    (retired slots refilled mid-stream via ``fresh``) must give every
+    query the same reveals/rounds/top-K as the 4-query one-shot run —
+    with fixed blocks a slot's trajectory depends only on its own
+    (query, key), never on when it was admitted or who its slotmates
+    are."""
+    H = _mixed_h(32, Q=4, n_hard=1)
+    a, b = _bounds(H)
+    keys = jax.random.split(jax.random.key(32), 4)
+    want = run_pooled_bandit(_cells_for(H), a, b, keys, _SLICE_CFG)
+
+    Q, N, T = H.shape
+    S = 2                                     # stream slots
+    state = init_frontier_state(S, N, T)
+    slot_q = [0, 1]                           # query occupying each slot
+    next_q = 2
+    a_s = jnp.stack([a[0], a[1]])
+    b_s = jnp.stack([b[0], b[1]])
+    keys_s = jnp.stack([keys[0], keys[1]])
+    fresh = np.array([True, True])
+    got = {}
+    for _ in range(128):
+        h_slot = jnp.stack([H[slot_q[0]], H[slot_q[1]]])
+        res, state = run_pooled_slice(_cells_for(h_slot), a_s, b_s, keys_s,
+                                      _SLICE_CFG, state,
+                                      jnp.asarray(fresh), trip_limit=2)
+        fresh[:] = False
+        done = np.asarray(state.done)
+        for s in range(S):
+            q = slot_q[s]
+            if not done[s] or q in got:
+                continue
+            got[q] = dict(topk=np.asarray(res.topk[s]),
+                          reveals=int(res.reveals[s]),
+                          rounds=int(res.rounds[s]))
+            if next_q < Q:                    # refill the retired slot
+                slot_q[s] = next_q
+                a_s = a_s.at[s].set(a[next_q])
+                b_s = b_s.at[s].set(b[next_q])
+                keys_s = keys_s.at[s].set(keys[next_q])
+                fresh[s] = True
+                next_q += 1
+        if len(got) == Q:
+            break
+    else:
+        pytest.fail("stream never served all queries")
+
+    for q in range(Q):
+        assert set(map(int, got[q]["topk"])) == \
+            set(map(int, np.asarray(want.topk[q]))), q
+        assert got[q]["reveals"] == int(want.reveals[q]), q
+        assert got[q]["rounds"] == int(want.rounds[q]), q

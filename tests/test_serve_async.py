@@ -1,0 +1,356 @@
+"""ISSUE 7: async continuous-batching serving runtime.
+
+Four contracts:
+  * parity oracle — an un-``start()``-ed AsyncRetrievalEngine serves
+    exactly like RetrievalEngine, and a STARTED one (full batches, no
+    deadlines) returns bit-identical completions to the sync engine;
+  * completion integrity — every admitted rid surfaces exactly once,
+    under the batch pipeline, the continuous (slot-refill) stream, and
+    randomized interleavings of add/poll/flush on the shared batcher;
+  * admission backpressure — "reject" raises AdmissionRejected (and
+    counts it), "degrade" truncates the candidate list to the smallest
+    compiled bucket (and counts it), neither mutates the caller's
+    Request;
+  * zero recompiles — the threaded runtime serves a warmed bucket set
+    without a single post-warmup compile, same as the sync engine.
+
+Threaded tests carry ``pytest.mark.timeout`` so a wedged serving thread
+fails the run instead of hanging it (inert when pytest-timeout is not
+installed; the marker is registered in pyproject.toml).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.synthetic import make_retrieval_dataset
+from repro.dist.fault import DeadlineBatcher
+from repro.serve import (AdmissionRejected, AsyncRetrievalEngine,
+                         EngineConfig, Request, RetrievalEngine)
+
+
+class ManualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_retrieval_dataset(n_docs=32, n_queries=8, doc_len=12,
+                                  min_doc_len=6, query_len=8, dim=16,
+                                  seed=5)
+
+
+def _cfg(**kw):
+    # deadline_s is the ADMISSION window: 30 s means only full batches
+    # release during a test, so sync and async batch composition match.
+    base = dict(batch_size=2, deadline_s=30.0, token_buckets=(8,),
+                cand_buckets=(8,), max_k=5, flavor="dense",
+                stage1_candidates=8, stage1_kprime=4, pipeline_depth=2)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _bandit_cfg(**kw):
+    base = dict(flavor="bandit", max_rounds=2, block_docs=4, block_tokens=2)
+    base.update(kw)
+    return _cfg(**base)
+
+
+def _stream(corpus, rng, n, *, deadline_s=None):
+    """A mixed request stream: variable token counts, alternating
+    candidate-carrying / stage-1 requests."""
+    reqs = []
+    for i in range(n):
+        n_tok = int(rng.integers(2, 9))
+        cand = (rng.choice(32, 8, replace=False).astype(np.int32)
+                if i % 2 else None)
+        reqs.append(Request(query=corpus.queries[i % 8][:n_tok], k=5,
+                            deadline_s=deadline_s, cand_ids=cand))
+    return reqs
+
+
+def _by_rid(comps):
+    out = {c.rid: c for c in comps}
+    assert len(out) == len(comps)        # no duplicated rid
+    return out
+
+
+def _assert_bitwise_equal(got, want):
+    assert set(got) == set(want)
+    for rid, c in got.items():
+        np.testing.assert_array_equal(c.topk_ids, want[rid].topk_ids)
+        np.testing.assert_array_equal(c.topk_scores, want[rid].topk_scores)
+
+
+# ---------------------------------------------------------------------------
+# DeadlineBatcher: full-batch wakeup + randomized-interleaving integrity
+# ---------------------------------------------------------------------------
+
+def test_next_expiry_full_batch_expires_now():
+    """Regression (ISSUE 7 bugfix): a ready FULL batch must expire at the
+    CURRENT clock even when every pending deadline lies far in the future
+    — a poll loop sleeping to the old per-entry expiry would hold a
+    releasable batch for the whole admission window."""
+    clock = ManualClock()
+    b = DeadlineBatcher(batch_size=2, deadline_s=10.0, clock=clock)
+    b.add("a")
+    assert b.next_expiry() == pytest.approx(10.0)   # partial: window
+    b.add("b")
+    assert b.next_expiry() == pytest.approx(0.0)    # full: NOW
+    clock.advance(3.0)
+    assert b.next_expiry() == pytest.approx(3.0)    # still "now", not 0
+    assert b.poll() == (["a", "b"], 2)
+
+
+def test_headroom_is_live_not_frozen_at_add():
+    """Regression (ISSUE 7 satellite): the admission deadline of a
+    deadline_abs entry is derived at POLL time from the live headroom
+    callable — a service-time estimate that rises while the request
+    queues must pull the release point earlier."""
+    clock = ManualClock()
+    headroom = [0.0]
+    b = DeadlineBatcher(batch_size=4, deadline_s=10.0, clock=clock,
+                        headroom=lambda: headroom[0])
+    b.add("a", deadline_abs=1.0)
+    assert b.next_expiry() == pytest.approx(1.0)
+    headroom[0] = 0.4                     # EMA rose while "a" waited
+    assert b.next_expiry() == pytest.approx(0.6)
+    clock.advance(0.7)
+    assert b.poll() is not None           # released early enough to serve
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 5))
+def test_batcher_interleaved_ops_lose_and_duplicate_nothing(seed, batch_size):
+    """Property: under a randomized interleaving of add / poll / flush /
+    clock advances (random per-request deadlines, both relative and
+    absolute, and a drifting headroom), every added item comes back
+    exactly once, in FIFO order, and padding never leaks as a real
+    item."""
+    rng = np.random.default_rng(seed)
+    clock = ManualClock()
+    headroom = [0.0]
+    b = DeadlineBatcher(batch_size=batch_size,
+                        deadline_s=float(rng.uniform(0.1, 2.0)),
+                        clock=clock, headroom=lambda: headroom[0])
+    n_total = int(rng.integers(1, 30))
+    added, released = [], []
+    i = 0
+    while i < n_total or len(b):
+        op = rng.integers(0, 4)
+        if op == 0 and i < n_total:
+            kind = rng.integers(0, 3)
+            if kind == 1:
+                b.add(i, deadline_s=float(rng.uniform(0, 1.0)))
+            elif kind == 2:
+                b.add(i, deadline_abs=clock() + float(rng.uniform(0, 1.0)))
+            else:
+                b.add(i)
+            added.append(i)
+            i += 1
+        elif op == 1:
+            out = b.poll()
+            if out is not None:
+                reqs, n_real = out
+                assert len(reqs) == batch_size
+                assert reqs[n_real:] == [reqs[n_real - 1]] * (
+                    batch_size - n_real)
+                released.extend(reqs[:n_real])
+        elif op == 2 and rng.random() < 0.3:
+            out = b.flush()
+            if out is not None:
+                released.extend(out[0][:out[1]])
+        else:
+            clock.advance(float(rng.uniform(0, 0.5)))
+            headroom[0] = float(rng.uniform(0, 0.3))
+    while (out := b.flush()) is not None:
+        released.extend(out[0][:out[1]])
+    assert released == added              # exactly once, FIFO
+
+
+# ---------------------------------------------------------------------------
+# parity: un-started == sync; started batch pipeline == sync, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_unstarted_async_engine_is_sync_parity(corpus):
+    """The parity-oracle mode: without start(), the async engine's
+    submit/poll/drain serve synchronously and bit-identically to
+    RetrievalEngine (batch ordinals, PRNG stream and all)."""
+    rng = np.random.default_rng(0)
+    reqs = _stream(corpus, rng, 6)
+    results = []
+    for cls in (RetrievalEngine, AsyncRetrievalEngine):
+        eng = cls(corpus.doc_embs, corpus.doc_mask, _bandit_cfg())
+        eng.warmup()
+        for r in reqs:
+            eng.submit(r)
+        results.append(_by_rid(eng.drain()))
+        assert eng.metrics.compiles_after_warmup == 0
+    _assert_bitwise_equal(results[1], results[0])
+
+
+@pytest.mark.timeout(120)
+def test_async_pipeline_matches_sync_bitwise(corpus):
+    """Started batch pipeline, full batches only: the async engine's
+    completions must be bit-identical to the sync engine's for the same
+    stream — the dispatch/harvest overlap may not change a single score
+    (the per-batch PRNG ordinal contract survives the thread split)."""
+    rng = np.random.default_rng(1)
+    reqs = _stream(corpus, rng, 8)       # 4 full batches at B=2
+    sync = RetrievalEngine(corpus.doc_embs, corpus.doc_mask, _bandit_cfg())
+    sync.warmup()
+    for r in reqs:
+        sync.submit(r)
+    want = _by_rid(sync.drain())
+
+    eng = AsyncRetrievalEngine(corpus.doc_embs, corpus.doc_mask,
+                               _bandit_cfg())
+    eng.warmup()
+    with eng:
+        for r in reqs:
+            eng.submit(r)
+        got = _by_rid(eng.drain())
+    assert eng.metrics.compiles_after_warmup == 0
+    _assert_bitwise_equal(got, want)
+
+
+_PARITY = {}
+
+
+def _parity_engines(corpus):
+    """Warm one sync + one async engine, reused across hypothesis examples
+    (rebuilding per example would re-AOT-compile every bucket). Reuse is
+    sound: both engines see identical streams, so their rid counters and
+    batch ordinals advance in lockstep and per-example parity holds."""
+    if not _PARITY:
+        for name, cls in (("sync", RetrievalEngine),
+                          ("async", AsyncRetrievalEngine)):
+            _PARITY[name] = cls(corpus.doc_embs, corpus.doc_mask, _cfg())
+            _PARITY[name].warmup()
+    return _PARITY["sync"], _PARITY["async"]
+
+
+@pytest.mark.timeout(300)
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_async_drain_equivalence_property(corpus, seed):
+    """Property: for a random dense request stream, drain() through the
+    started async pipeline returns the same completions (same rids, same
+    scores) as the synchronous engine — no request lost, duplicated, or
+    rescored."""
+    sync, eng = _parity_engines(corpus)
+    rng = np.random.default_rng(seed)
+    reqs = _stream(corpus, rng, int(rng.integers(1, 10)))
+    for r in reqs:
+        sync.submit(r)
+    want = _by_rid(sync.drain())
+    with eng:
+        for r in reqs:
+            eng.submit(r)
+        got = _by_rid(eng.drain())
+    _assert_bitwise_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# admission backpressure
+# ---------------------------------------------------------------------------
+
+def test_backpressure_reject_counts_and_raises(corpus):
+    """With a projected wait beyond the request deadline, "reject" raises
+    at submit and counts it; a relaxed request still admits."""
+    eng = AsyncRetrievalEngine(
+        corpus.doc_embs, corpus.doc_mask,
+        _cfg(backpressure="reject", deadline_headroom_s=0.2))
+    with pytest.raises(AdmissionRejected):
+        eng.submit(Request(query=corpus.queries[0][:4], k=5,
+                           deadline_s=0.05))
+    assert eng.metrics.summary()["rejected"] == 1
+    eng.submit(Request(query=corpus.queries[0][:4], k=5, deadline_s=10.0))
+    assert len(eng.drain()) == 1
+
+
+def test_backpressure_degrade_truncates_candidates(corpus):
+    """"degrade" admits an over-deadline candidate-carrying request with
+    its list truncated to the smallest compiled bucket — and never
+    mutates the caller's Request."""
+    eng = AsyncRetrievalEngine(
+        corpus.doc_embs, corpus.doc_mask,
+        _cfg(cand_buckets=(4, 8), max_k=4, backpressure="degrade",
+             deadline_headroom_s=0.2, batch_size=1))
+    req = Request(query=corpus.queries[0][:4], k=4,
+                  deadline_s=0.05,
+                  cand_ids=np.arange(8, dtype=np.int32))
+    rid = eng.submit(req)
+    assert len(req.cand_ids) == 8                 # caller copy untouched
+    done = _by_rid(eng.drain())
+    assert done[rid].bucket == (8, 4)             # served the cheap bucket
+    assert eng.metrics.summary()["degraded"] == 1
+    # stage-1 (candidate-less) requests cannot degrade: plain admission.
+    rid2 = eng.submit(Request(query=corpus.queries[1][:4], k=4,
+                              deadline_s=0.05))
+    done = _by_rid(eng.drain())
+    assert done[rid2].bucket == (8, 8)
+    assert eng.metrics.summary()["degraded"] == 1
+
+
+# ---------------------------------------------------------------------------
+# continuous (slot-refill) runtime
+# ---------------------------------------------------------------------------
+
+def test_continuous_submit_requires_start(corpus):
+    eng = AsyncRetrievalEngine(corpus.doc_embs, corpus.doc_mask,
+                               _bandit_cfg(continuous=True,
+                                           stream_trip_limit=2))
+    with pytest.raises(RuntimeError):
+        eng.submit(Request(query=corpus.queries[0][:4], k=5))
+
+
+@pytest.mark.timeout(120)
+def test_continuous_integrity_determinism_and_futures(corpus):
+    """Slot-refill streaming: every submitted rid completes exactly once
+    (more requests than slots, so refill is exercised), per-request
+    futures resolve, replaying the stream reproduces every score
+    bit-for-bit (per-slot keys are fold_in(rid), not slot-index), and
+    the warmed stream executable never recompiles."""
+    def serve_once():
+        eng = AsyncRetrievalEngine(
+            corpus.doc_embs, corpus.doc_mask,
+            _bandit_cfg(continuous=True, stream_trip_limit=2, max_rounds=4))
+        eng.warmup()
+        rng = np.random.default_rng(2)
+        with eng:
+            rids = [eng.submit(r) for r in _stream(corpus, rng, 7)]
+            futs = [eng.future(rid) for rid in rids]
+            done = _by_rid(eng.drain())
+        assert eng.metrics.compiles_after_warmup == 0
+        assert sorted(done) == sorted(rids)
+        assert all(f.result(timeout=1).rid == rid
+                   for f, rid in zip(futs, rids))
+        assert eng.metrics.summary()["mean_occupancy"] > 0
+        return done
+
+    _assert_bitwise_equal(serve_once(), serve_once())
+
+
+@pytest.mark.timeout(120)
+def test_async_engine_restartable(corpus):
+    """stop() then start() must serve again (the stop event is cleared on
+    restart) — the pattern the load harness uses between sweep points."""
+    eng = AsyncRetrievalEngine(corpus.doc_embs, corpus.doc_mask, _cfg())
+    eng.warmup()
+    rng = np.random.default_rng(3)
+    for _ in range(2):
+        with eng:
+            for r in _stream(corpus, rng, 4):
+                eng.submit(r)
+            assert len(eng.drain()) == 4
+    assert eng.metrics.summary()["n_requests"] == 8
+    assert eng.metrics.compiles_after_warmup == 0
