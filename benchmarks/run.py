@@ -51,6 +51,8 @@ HARNESSES = {
                 "kernel-op block autotuning: tuned vs default tiles"),
     "sharded": ("benchmarks.sharded_serving",
                 "corpus-sharded pooled-bandit serving, 1/4/16 shards"),
+    "chaos": ("benchmarks.chaos_serving",
+              "fault-injected serving: supervision, failover, ladder"),
 }
 STANDALONE = {
     "perf_iterations": ("benchmarks.perf_iterations",
@@ -103,8 +105,8 @@ def main(argv=None):
     n_docs = 192 if args.quick else 384
     n_q = 6 if args.quick else 12
 
-    from benchmarks import (fig2_tradeoff, fig4_exploration, fig5_ann_bounds,
-                            generalized_recsys, kernel_bench,
+    from benchmarks import (chaos_serving, fig2_tradeoff, fig4_exploration,
+                            fig5_ann_bounds, generalized_recsys, kernel_bench,
                             reveal_throughput, serving_latency, serving_load,
                             sharded_serving, table1_efficiency,
                             table2_effectiveness)
@@ -129,6 +131,9 @@ def main(argv=None):
         # process.
         "sharded": lambda: sharded_serving.run(
             shard_counts=(1, 4) if args.quick else (1, 4, 16)),
+        # the mesh chaos measurement runs in its own subprocess (it pins 4
+        # host devices), so it is safe from this single-device process.
+        "chaos": lambda: chaos_serving.run(quick=args.quick),
     }
     wanted = [args.only] if args.only else list(benches)
 

@@ -67,6 +67,14 @@ _NEG = jnp.float32(-3e38)
 # below 1.5e38 (the all-masked-document sentinel is -3e38, also below).
 _UNREV = jnp.float32(3e38)
 _REV_THRESH = jnp.float32(1.5e38)
+# Finite-score guard: a revealed cell that comes back NaN/Inf (poisoned
+# corpus row, kernel bug) is recorded as _QUAR instead — finite, so the
+# sufficient statistics stay well-defined (no NaN mean, no inf total_sq),
+# yet far below any genuine MaxSim value, so the doc can never win the
+# top-K. _QUAR_THRESH separates quarantined cells from real ones at
+# finalize time (real |MaxSim| is O(|q||d|) << 1e4).
+_QUAR = jnp.float32(-3e4)
+_QUAR_THRESH = jnp.float32(-1e4)
 
 # Cell contract (pooled): compute_cells(flat_doc (S,), flat_tok (S, G))
 # -> (S, G), where flat_doc indexes the stacked (Q*N, ...) doc axis and
@@ -160,6 +168,10 @@ class PooledResult(NamedTuple):
                                #   already-converged queries
     occupancy: jax.Array       # () f32 — mean fraction of frontier slots
                                #   holding live reveal work across trips
+    quarantined: jax.Array     # (Q,) i32 — candidate docs whose revealed
+                               #   cells included a non-finite value (the
+                               #   finite-score guard excluded them from
+                               #   the top-K; 0 everywhere on clean data)
 
 
 def run_pooled_bandit(
@@ -178,6 +190,8 @@ def run_pooled_bandit(
     fresh: Optional[jax.Array] = None,      # (Q,) bool — slots to (re)init
     trip_limit: int = 0,                    # >0: pause after this many trips
     return_state: bool = False,             # also return the FrontierState
+    alpha_scale=None,            # traced () f32 >= 1: per-call fidelity knob
+    round_cap=None,              # traced () i32: per-call round cap (<=0 off)
 ):
     """``prereveal``/``prereveal_vals`` seed the bandit with cells whose
     exact values an earlier stage already computed (e.g. the stage-1 ANN
@@ -204,6 +218,24 @@ def run_pooled_bandit(
       are only FINAL for slots with ``done`` set (or every slot once the
       loop ran to quiescence).
     * ``return_state=True`` returns ``(PooledResult, FrontierState)``.
+
+    Degraded-fidelity knobs (serve-layer ladder; both TRACED scalars, so
+    one compiled executable serves every fidelity level with zero
+    recompiles — ``serfling_radius`` is linear in ``alpha_ef``, making the
+    scale exact, not an approximation):
+
+    * ``alpha_scale`` multiplies the effective ``alpha_ef`` for this call
+      (wider radii => earlier separation => fewer reveals). ``None`` keeps
+      the static config value with a trace identical to pre-knob code;
+      passing ``1.0`` is numerically bit-identical to ``None``.
+    * ``round_cap`` caps this call's per-query reveal rounds below the
+      static ``cfg.max_rounds`` (values ``<= 0`` disable the cap).
+
+    Finite-score guard (always on): any revealed cell that comes back
+    non-finite is recorded as the ``_QUAR`` sentinel; its doc is excluded
+    from the final top-K and counted in ``PooledResult.quarantined``. On
+    all-finite data every guard op is an identity, so clean runs stay
+    bit-identical to pre-guard code.
     """
     if fused is None:
         fused = _auto_fused()
@@ -229,6 +261,12 @@ def run_pooled_bandit(
     max_rounds = cfg.max_rounds
     if max_rounds <= 0:
         max_rounds = (N * T) // max(cfg.block_docs * G, 1) + T + 8
+    if round_cap is not None:
+        # Traced per-call cap: <= 0 disables (the compiled program is one
+        # executable for every ladder level). Python-int path untouched.
+        rc = jnp.asarray(round_cap, jnp.int32)
+        max_rounds = jnp.minimum(
+            jnp.int32(max_rounds), jnp.where(rc > 0, rc, jnp.int32(max_rounds)))
     if doc_mask is None:
         doc_mask = jnp.ones((Q, N), jnp.bool_)
     a = jnp.where(doc_mask[:, :, None], a, 0.0).astype(jnp.float32)
@@ -243,6 +281,9 @@ def run_pooled_bandit(
         pv_flat = jnp.where(
             pr_flat, prereveal_vals.reshape(Q * N, T).astype(jnp.float32),
             0.0)
+        # Stage-1 seeds computed over a poisoned corpus row are non-finite
+        # too — same quarantine treatment as a live reveal.
+        pv_flat = jnp.where(jnp.isfinite(pv_flat), pv_flat, _QUAR)
     else:
         pr_flat = pv_flat = None
 
@@ -263,6 +304,18 @@ def run_pooled_bandit(
 
     iv_kwargs = dict(T=T, N=N, delta=cfg.delta, alpha_ef=cfg.alpha_ef,
                      c=cfg.radius_c, bias_kappa=cfg.bias_kappa)
+    if alpha_scale is not None:
+        # serfling_radius is LINEAR in alpha_ef (checked by the fidelity
+        # tests), so a traced effective alpha is exact — and x * 1.0 is an
+        # IEEE identity, so scale 1.0 stays bit-identical to the static
+        # config value.
+        iv_kwargs["alpha_ef"] = (jnp.float32(cfg.alpha_ef)
+                                 * jnp.asarray(alpha_scale, jnp.float32))
+
+    def sanitize(vals):
+        """Finite-score guard on a block of freshly revealed cell values:
+        identity on finite data, _QUAR where poisoned."""
+        return jnp.where(jnp.isfinite(vals), vals, _QUAR)
 
     def get_intervals_q(n_q, total_q, total_sq_q, revealed_q, a_q, b_q,
                         mask_q) -> B.Intervals:
@@ -326,10 +379,15 @@ def run_pooled_bandit(
         occ = jnp.sum(slot_live.astype(jnp.float32)) / jnp.float32(F)
         return sel, f_doc, f_tok, f_cell, no_progress, occ
 
-    def finalize(n, total, total_sq, revealed, rounds, trips, occ_sum):
+    def finalize(n, total, total_sq, revealed, rounds, trips, occ_sum,
+                 quar_doc):
         iv = jax.vmap(get_intervals_q)(
             n.reshape(Q, N), total.reshape(Q, N), total_sq.reshape(Q, N),
             revealed.reshape(Q, N, T), a, b, doc_mask)
+        # Quarantined docs (any revealed cell tripped the finite-score
+        # guard) are forced out of the top-K; identity when none did.
+        quar_q = quar_doc.reshape(Q, N) & doc_mask
+        iv = iv._replace(s_hat=jnp.where(quar_q, _NEG, iv.s_hat))
         tk = jax.vmap(functools.partial(_topk_mask, k=k))(iv.s_hat)
         topk_idx = tk[1]
         sep = jax.vmap(lambda iv_q, m_q: _select_arms(iv_q, _topk_mask(
@@ -356,6 +414,7 @@ def run_pooled_bandit(
             # this slice's Q*trips budget.
             lockstep_waste=jnp.maximum(Q * trips - total_rounds, 0),
             occupancy=occ_sum / jnp.maximum(trips.astype(jnp.float32), 1.0),
+            quarantined=jnp.sum(quar_q, axis=1).astype(jnp.int32),
         )
 
     def cond(loop_carry):
@@ -393,6 +452,17 @@ def run_pooled_bandit(
         vals0, stats0 = cells_fused(all_docs,
                                     flat_t0 + (all_docs // N * T)[:, None],
                                     new0)
+        # Finite-score guard: sanitize the revealed values and, for rows
+        # where a non-finite value slipped into the in-kernel statistic
+        # accumulation, rebuild that row's deltas from the sanitized
+        # values. Rows with only finite cells keep the kernel's own stats
+        # bit for bit (no re-summation => chain/fused parity untouched).
+        bad0 = new0 & ~jnp.isfinite(vals0)
+        vals0 = sanitize(vals0)
+        vm0 = jnp.where(new0, vals0, 0.0)
+        fix0 = jnp.stack([jnp.sum(new0.astype(jnp.float32), -1),
+                          jnp.sum(vm0, -1), jnp.sum(vm0 * vm0, -1)], axis=-1)
+        stats0 = jnp.where(jnp.any(bad0, -1)[:, None], fix0, stats0)
         cellvals0 = jnp.where(flat_mask[:, None],
                               jnp.full((Q * N, T), _UNREV), 0.0)
         if pr_flat is not None:
@@ -434,6 +504,16 @@ def run_pooled_bandit(
             new = f_cell
             vals, dstats = cells_fused(
                 f_doc, f_tok + (f_doc // N * T)[:, None], new)
+            # Finite-score guard (same contract as the init reveal): only
+            # rows that actually saw a non-finite value get their stat
+            # deltas rebuilt from the sanitized values.
+            bad = new & ~jnp.isfinite(vals)
+            vals = sanitize(vals)
+            vm = jnp.where(new, vals, 0.0)
+            fix = jnp.stack([jnp.sum(new.astype(jnp.float32), -1),
+                             jnp.sum(vm, -1), jnp.sum(vm * vm, -1)],
+                            axis=-1)
+            dstats = jnp.where(jnp.any(bad, -1)[:, None], fix, dstats)
             cellvals = st.cellvals.at[f_doc[:, None], f_tok].min(
                 jnp.where(new, vals, _UNREV))
             stats = st.stats.at[f_doc].add(dstats)
@@ -448,7 +528,8 @@ def run_pooled_bandit(
             cond, body, (state, *zero_trip))
         res = finalize(state.stats[:, 0], state.stats[:, 1],
                        state.stats[:, 2], state.cellvals < _REV_THRESH,
-                       state.rounds, trips, occ_sum)
+                       state.rounds, trips, occ_sum,
+                       jnp.any(state.cellvals <= _QUAR_THRESH, axis=-1))
         return (res, state) if return_state else res
 
     # ------------------------------------------------------------------
@@ -496,8 +577,8 @@ def run_pooled_bandit(
             total=state.total + jnp.sum(pv_flat, -1),
             total_sq=state.total_sq + jnp.sum(pv_flat * pv_flat, -1))
 
-    init_vals = compute_cells(all_docs,
-                              flat_t0 + (all_docs // N * T)[:, None])
+    init_vals = sanitize(compute_cells(all_docs,
+                                       flat_t0 + (all_docs // N * T)[:, None]))
     init_valid = doc_mask.reshape(Q * N, 1)
     if carry is not None:
         init_valid = init_valid & fresh_rows[:, None]
@@ -521,7 +602,7 @@ def run_pooled_bandit(
 
         # ONE pooled reveal for the whole batch round, then the scatter
         # chain into the stacked statistics.
-        vals = compute_cells(f_doc, f_tok + (f_doc // N * T)[:, None])
+        vals = sanitize(compute_cells(f_doc, f_tok + (f_doc // N * T)[:, None]))
         nxt = _apply_block_reveal(st, f_doc, f_tok, vals, f_cell)
 
         # Per-query bookkeeping — mirrors the solo loop's cond/stop exactly:
@@ -537,7 +618,9 @@ def run_pooled_bandit(
     state, trips, occ_sum = jax.lax.while_loop(
         cond, body, (state, *zero_trip))
     res = finalize(state.n, state.total, state.total_sq, state.revealed,
-                   state.rounds, trips, occ_sum)
+                   state.rounds, trips, occ_sum,
+                   jnp.any(state.revealed & (state.values <= _QUAR_THRESH),
+                           axis=-1))
     if return_state:
         # Pack back to the sentinel encoding — the shared slice boundary
         # format, so a stream may resume under either round body.

@@ -8,15 +8,25 @@
 * :class:`DeadlineBatcher` — the serving-side admission queue: release a
   batch when it is FULL or when the oldest request has waited past the
   deadline (padded to the compiled batch shape so one program serves both).
+* :class:`FaultPlan` / :class:`InjectedFault` — the deterministic chaos
+  harness: a replayable script of thread kills, shard health flips and
+  dispatch delays, fired by counter (not wall clock) at named chaos points
+  so two runs of the same plan inject the identical fault sequence.
+* :class:`ChaosClock` — a thread-safe virtual clock so injected delays and
+  deadline accounting stay deterministic in tests.
+* :func:`poison_corpus` — seeded NaN/Inf corruption of a fraction of corpus
+  rows, for exercising the finite-score quarantine guard end to end.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from collections import deque
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import NamedSharding
 
 
@@ -42,6 +52,181 @@ def simulate_failure(run: Callable[[Callable[[int], None]], Any],
     except SimulatedFailure:
         return True
     return fired[0]
+
+
+class ChaosKill(RuntimeError):
+    """Raised inside a serving thread by a FaultPlan ``kill`` action — the
+    supervised analogue of the thread being SIGKILLed mid-loop. The engine
+    watchdog recognizes it (and any other exception) as a dead thread and
+    restarts within the restart budget."""
+
+
+@dataclasses.dataclass(frozen=True)
+class InjectedFault:
+    """One scripted fault.
+
+    ``point`` names the chaos point ("admit" | "dispatch" | "stream" —
+    the engine ticks its point once per thread-loop iteration), ``at`` is
+    the tick count at which the fault fires (the Nth time that point is
+    reached), ``action`` is what happens:
+
+    * ``"kill"``       — raise :class:`ChaosKill` in the ticking thread,
+    * ``"shard_down"`` — mark mesh shard ``int(arg)`` unhealthy,
+    * ``"shard_up"``   — restore mesh shard ``int(arg)``,
+    * ``"delay"``      — stall the ticking thread ``arg`` seconds (advanced
+      on a :class:`ChaosClock` when the engine clock is one, else slept).
+    """
+
+    point: str
+    at: int
+    action: str
+    arg: float = 0.0
+
+    def __post_init__(self):
+        if self.action not in ("kill", "shard_down", "shard_up", "delay"):
+            raise ValueError(f"unknown fault action {self.action!r}")
+        if self.at < 1:
+            raise ValueError("fault fires at tick >= 1")
+
+
+class FaultPlan:
+    """A deterministic, replayable fault schedule.
+
+    Counter-based, not clock-based: every serving-thread loop iteration
+    ticks its named chaos point, and a fault fires when its point's counter
+    reaches ``at``. Two runs of the same plan over the same request stream
+    therefore inject the identical fault sequence at the identical loop
+    boundaries — the property the chaos soak's replay assertions need.
+    An EMPTY plan is inert by construction (``tick`` returns nothing and
+    the engine skips the chaos hook entirely), so a no-fault run is
+    bit-identical to a run without a plan.
+
+    Thread-safe: chaos points tick from the serving threads while tests
+    read ``fired`` from the caller thread.
+    """
+
+    def __init__(self, faults: Sequence[InjectedFault] = ()):
+        self.faults = tuple(faults)
+        self._lock = threading.Lock()
+        self._counts: Dict[str, int] = {}
+        self._fired: List[InjectedFault] = []
+        self._by_point: Dict[str, Dict[int, List[InjectedFault]]] = {}
+        for f in self.faults:
+            self._by_point.setdefault(f.point, {}).setdefault(
+                f.at, []).append(f)
+
+    @classmethod
+    def seeded(cls, seed: int, *, points: Sequence[str] = ("dispatch",),
+               n_faults: int = 1, max_tick: int = 50,
+               actions: Sequence[str] = ("kill",),
+               shards: Sequence[int] = (0,),
+               delay_s: float = 0.0) -> "FaultPlan":
+        """A randomized-but-replayable plan: ``n_faults`` faults drawn with
+        ``numpy.random.default_rng(seed)`` over the given points, tick
+        range and actions. The same seed always yields the same plan."""
+        rng = np.random.default_rng(seed)
+        faults = []
+        for _ in range(n_faults):
+            action = actions[int(rng.integers(len(actions)))]
+            arg = 0.0
+            if action in ("shard_down", "shard_up"):
+                arg = float(shards[int(rng.integers(len(shards)))])
+            elif action == "delay":
+                arg = delay_s
+            faults.append(InjectedFault(
+                point=points[int(rng.integers(len(points)))],
+                at=int(rng.integers(1, max_tick + 1)),
+                action=action, arg=arg))
+        return cls(faults)
+
+    @property
+    def empty(self) -> bool:
+        return not self.faults
+
+    def tick(self, point: str) -> List[InjectedFault]:
+        """Advance ``point``'s counter; return the faults firing at this
+        tick (kills last, so a kill+state-flip tick applies the flip)."""
+        if not self.faults:
+            return []
+        with self._lock:
+            c = self._counts.get(point, 0) + 1
+            self._counts[point] = c
+            due = list(self._by_point.get(point, {}).get(c, []))
+            self._fired.extend(due)
+        return sorted(due, key=lambda f: f.action == "kill")
+
+    @property
+    def fired(self) -> List[InjectedFault]:
+        """Snapshot of the faults that have fired so far (test surface)."""
+        with self._lock:
+            return list(self._fired)
+
+    def counts(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._counts)
+
+
+class ChaosClock:
+    """A thread-safe virtual clock: ``()`` reads the time, ``advance``
+    moves it, ``sleep`` is an advance (injected delays cost virtual time
+    only). Inject as the engine's ``clock=`` so deadline accounting and
+    FaultPlan delays are deterministic and wall-time-free in tests."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+        self._lock = threading.Lock()
+
+    def __call__(self) -> float:
+        with self._lock:
+            return self._t
+
+    def advance(self, dt: float) -> None:
+        with self._lock:
+            self._t += float(dt)
+
+    def sleep(self, dt: float) -> None:
+        self.advance(dt)
+
+
+def apply_delay(clock: Callable[[], float], seconds: float) -> None:
+    """Stall the calling thread ``seconds``: virtually when ``clock`` is a
+    :class:`ChaosClock`, else a real ``time.sleep`` — the one place the
+    chaos harness decides between simulated and wall time."""
+    if seconds <= 0:
+        return
+    if isinstance(clock, ChaosClock):
+        clock.sleep(seconds)
+    else:
+        time.sleep(seconds)
+
+
+def poison_corpus(embs, fraction: float, seed: int = 0, *,
+                  mode: str = "nan") -> Tuple[np.ndarray, np.ndarray]:
+    """Seeded corruption of a fraction of corpus doc rows.
+
+    Returns ``(poisoned_embs, poisoned_mask)`` where ``poisoned_mask`` is
+    the (C,) bool row selection — at least one row whenever ``fraction >
+    0`` and the corpus is non-empty. ``mode`` is ``"nan"`` | ``"inf"`` |
+    ``"neginf"``; the corruption hits every token of the selected docs so
+    any reveal of the row trips the finite-score guard. The input is
+    copied, never mutated."""
+    embs = np.array(embs, dtype=np.float32, copy=True)
+    C = embs.shape[0]
+    mask = np.zeros((C,), bool)
+    n_bad = int(round(C * float(fraction)))
+    if fraction > 0 and C:
+        n_bad = max(n_bad, 1)
+    if n_bad:
+        rng = np.random.default_rng(seed)
+        rows = rng.choice(C, size=min(n_bad, C), replace=False)
+        val = {"nan": np.nan, "inf": np.inf, "neginf": -np.inf}
+        try:
+            embs[rows] = val[mode]
+        except KeyError:
+            raise ValueError(f"unknown poison mode {mode!r} "
+                             "(expected 'nan', 'inf' or 'neginf')") from None
+        mask[rows] = True
+    return embs, mask
 
 
 def reshard(tree: Any, specs: Any, mesh) -> Any:

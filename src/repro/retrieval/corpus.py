@@ -80,14 +80,18 @@ class CentroidRouter:
         return self.shard_mass.shape[1]
 
     def route(self, queries, n_total: int, *,
-              n_local: Optional[int] = None) -> np.ndarray:
+              n_local: Optional[int] = None,
+              healthy: Optional[np.ndarray] = None) -> np.ndarray:
         """Host-side routing API: (B, T, M) queries -> (B, n_shards) integer
         quotas summing exactly to ``n_total`` per query. Raises ``ValueError``
         (never clamps) when a quota exceeds a shard's ``valid_docs`` or the
-        compiled per-shard capacity ``n_local``."""
+        compiled per-shard capacity ``n_local``. ``healthy`` (n_shards,)
+        bool re-routes a failed shard's quota mass onto healthy shards
+        (see :func:`route_quotas`)."""
         mass = route_mass(jnp.asarray(queries, jnp.float32), self.centroids,
                           self.shard_mass)
-        quotas = np.asarray(route_quotas(mass, n_total))
+        h = None if healthy is None else jnp.asarray(healthy, jnp.bool_)
+        quotas = np.asarray(route_quotas(mass, n_total, healthy=h))
         validate_quotas(quotas, self.valid_docs, n_local=n_local)
         return quotas
 
@@ -186,19 +190,42 @@ def route_mass(queries: jax.Array, centroids: jax.Array,
     return aff @ shard_mass.astype(jnp.float32)                   # (B, S)
 
 
-def route_quotas(mass: jax.Array, n_total: int) -> jax.Array:
+def route_quotas(mass: jax.Array, n_total: int,
+                 healthy: Optional[jax.Array] = None) -> jax.Array:
     """Integer per-shard quotas from routed mass (jit/shard_map-safe).
 
     mass (B, S) >= 0 -> quotas (B, S) i32 with ``sum(quotas[b]) ==
     n_total`` EXACTLY for every query: largest-remainder rounding of the
     proportional ideal, deterministic tie-break (larger fractional part
     wins, lower shard index on exact ties). All-zero mass rows (router
-    missed every centroid, or no router) fall back to uniform shares."""
+    missed every centroid, or no router) fall back to uniform shares.
+
+    ``healthy`` is an optional (S,) bool mask: unhealthy shards have
+    their mass zeroed BEFORE normalisation, so their quota share is
+    re-routed proportionally onto the surviving shards (failover). When
+    no healthy shard has mass the fallback is uniform over the healthy
+    set. ``healthy=None`` is bit-identical to the pre-failover path.
+    With every shard unhealthy the quotas degenerate to the unmasked
+    uniform fallback — callers are expected to fail the request before
+    that point."""
     mass = jnp.maximum(mass.astype(jnp.float32), 0.0)
     B, S = mass.shape
-    tot = jnp.sum(mass, axis=-1, keepdims=True)
-    frac = jnp.where(tot > 0, mass / jnp.maximum(tot, 1e-30),
-                     jnp.float32(1.0 / S))
+    if healthy is None:
+        tot = jnp.sum(mass, axis=-1, keepdims=True)
+        frac = jnp.where(tot > 0, mass / jnp.maximum(tot, 1e-30),
+                         jnp.float32(1.0 / S))
+    else:
+        h = jnp.asarray(healthy, jnp.bool_).reshape(S).astype(jnp.float32)
+        h = jnp.where(jnp.sum(h) > 0, h, jnp.ones((S,), jnp.float32))
+        mass = mass * h[None, :]
+        tot = jnp.sum(mass, axis=-1, keepdims=True)
+        nh = jnp.sum(h)
+        # All-healthy keeps the legacy 1/S constant (bit-identical to the
+        # healthy=None trace — x * 1.0 is an IEEE identity upstream too).
+        fallback = jnp.where(nh >= S, jnp.full((S,), jnp.float32(1.0 / S)),
+                             h / jnp.maximum(nh, 1.0))
+        frac = jnp.where(tot > 0, mass / jnp.maximum(tot, 1e-30),
+                         fallback[None, :])
     ideal = frac * jnp.float32(n_total)
     base = jnp.floor(ideal).astype(jnp.int32)
     rem = jnp.clip(n_total - jnp.sum(base, axis=-1), 0, S)        # (B,)

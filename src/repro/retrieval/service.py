@@ -226,29 +226,41 @@ def _bandit_one_query(cfg: BatchedConfig):
 
 
 def _vmapped_rerank(docs, dmask, queries, cand_ids, a, b, keys,
-                    cfg: BatchedConfig):
-    """Lockstep engine: vmap the solo bandit over the query batch."""
+                    cfg: BatchedConfig, *, alpha_scale=None, round_cap=None):
+    """Lockstep engine: vmap the solo bandit over the query batch.
+
+    The legacy path has no traced fidelity knobs (``alpha_scale`` /
+    ``round_cap`` are accepted for signature parity and ignored) and no
+    in-loop quarantine; a final finite-score guard drops any non-finite
+    top-K entry to the -inf sentinel so poisoned cells can never surface
+    in a result list."""
+    del alpha_scale, round_cap
     scores, gids, cov, rounds = jax.vmap(_bandit_one_query(cfg))(
         docs, dmask, queries, cand_ids, a, b, keys)
-    return scores, gids, cov, _lockstep_stats(rounds)
+    bad = ~jnp.isfinite(scores)
+    quar = jnp.sum(bad).astype(jnp.float32)
+    scores = jnp.where(bad, _NEG, scores)
+    gids = jnp.where(bad, -1, gids)
+    return scores, gids, cov, _lockstep_stats(rounds, quar)
 
 
-def _lockstep_stats(rounds):
-    """(occupancy, total_rounds, lockstep_waste) for a vmapped run: the
-    while_loop executes every query to max(rounds), so waste is what the
-    batch PAID for already-converged queries."""
+def _lockstep_stats(rounds, quarantined):
+    """(occupancy, total_rounds, lockstep_waste, quarantined) for a vmapped
+    run: the while_loop executes every query to max(rounds), so waste is
+    what the batch PAID for already-converged queries."""
     Bq = rounds.shape[0]
     total = jnp.sum(rounds)
     trips = jnp.max(rounds)
     paid = jnp.maximum(Bq * trips, 1)
     return jnp.stack([total.astype(jnp.float32) / paid.astype(jnp.float32),
                       total.astype(jnp.float32),
-                      (paid - total).astype(jnp.float32)])
+                      (paid - total).astype(jnp.float32),
+                      jnp.asarray(quarantined, jnp.float32)])
 
 
 def _pooled_rerank(docs, dmask, queries, cand_ids, a, b, keys,
                    cfg: BatchedConfig, *, fused=None, prereveal=None,
-                   prereveal_vals=None):
+                   prereveal_vals=None, alpha_scale=None, round_cap=None):
     """Pooled frontier engine over pre-gathered candidates.
 
     Stacks the (B, N, L, M) candidates to (B*N, L, M) and the query tokens
@@ -262,9 +274,12 @@ def _pooled_rerank(docs, dmask, queries, cand_ids, a, b, keys,
     ``gather_maxsim_op`` -> scatter chain; ``fused=False`` forces the
     chain for A/B. ``prereveal``/``prereveal_vals`` (B, N, T) seed the
     bandit with exactly-known cells (the stage-1 ANN hit values) at zero
-    reveal cost. Returns (topk_scores (B, K), topk_global_ids (B, K),
-    coverage (B,), stats (3,) = [frontier occupancy, total rounds,
-    lockstep waste])."""
+    reveal cost. ``alpha_scale``/``round_cap`` are the traced per-call
+    fidelity knobs (graceful degradation ladder — see
+    :func:`repro.core.frontier.run_pooled_bandit`); ``None`` is
+    bit-identical to the pre-knob path. Returns (topk_scores (B, K),
+    topk_global_ids (B, K), coverage (B,), stats (4,) = [frontier
+    occupancy, total rounds, lockstep waste, quarantined docs])."""
     Bq, N, L, M = docs.shape
     T = queries.shape[1]
     stacked = docs.reshape(Bq * N, L, M)
@@ -282,13 +297,15 @@ def _pooled_rerank(docs, dmask, queries, cand_ids, a, b, keys,
     res = run_pooled_bandit(cells, a, b, keys, cfg, doc_mask=cand_ids >= 0,
                             compute_cells_fused=cells_fused, fused=fused,
                             prereveal=prereveal,
-                            prereveal_vals=prereveal_vals)
+                            prereveal_vals=prereveal_vals,
+                            alpha_scale=alpha_scale, round_cap=round_cap)
     scores = jnp.take_along_axis(res.s_hat, res.topk, axis=1)
     picked = jnp.take_along_axis(cand_ids, res.topk, axis=1)
     gids = jnp.where(picked >= 0, picked, -1)
     stats = jnp.stack([res.occupancy,
                        res.total_rounds.astype(jnp.float32),
-                       res.lockstep_waste.astype(jnp.float32)])
+                       res.lockstep_waste.astype(jnp.float32),
+                       jnp.sum(res.quarantined).astype(jnp.float32)])
     return scores, gids, res.coverage, stats
 
 
@@ -512,32 +529,45 @@ def make_rerank_two_phase_step(mesh: Mesh, *, topk: int = 10,
 # functions of statically-shaped arrays. Both flavors share the
 # ``gather_candidates`` routing path and one uniform signature:
 #
-#   step(corpus_embs, corpus_mask, queries, cand_ids, a, b, key)
+#   step(corpus_embs, corpus_mask, queries, cand_ids, a, b, key,
+#        [alpha_scale (), round_cap ()])
 #     -> (topk_scores (B, K), topk_global_ids (B, K), reveal_frac (B,),
-#         stats (3,))
+#         stats (4,))
 #
 # ``reveal_frac`` is the fraction of (candidate, token) MaxSim cells the
 # flavor actually computed: 1.0 for dense, the bandit's coverage (Eq. 6)
 # for the adaptive flavor. ``stats`` is the reveal-engine diagnostic
-# vector [frontier_occupancy, total_rounds, lockstep_waste]: for the
-# pooled engine, occupancy is the measured live-slot fraction of the
-# shared frontier; for the vmapped engine it is the lockstep duty cycle
-# sum(rounds) / (B * max(rounds)); dense reports [1, 0, 0].
+# vector [frontier_occupancy, total_rounds, lockstep_waste, quarantined]:
+# for the pooled engine, occupancy is the measured live-slot fraction of
+# the shared frontier; for the vmapped engine it is the lockstep duty
+# cycle sum(rounds) / (B * max(rounds)); dense reports [1, 0, 0, q].
+# ``quarantined`` counts docs (cells for vmapped/dense) whose MaxSim hit
+# a non-finite value and were excluded from the top-K — a poisoned-corpus
+# signal, 0 on clean data. ``alpha_scale`` (f32) and ``round_cap`` (i32,
+# <= 0 disables) are OPTIONAL traced fidelity knobs for the degradation
+# ladder; omitted, the step traces bit-identical to the pre-knob engine.
 # ---------------------------------------------------------------------------
 
 def rerank_dense_step(corpus_embs, corpus_mask, queries, cand_ids, a, b,
-                      key, *, topk: int = 10):
-    """Exact MaxSim over the candidate list; a/b/key accepted (and ignored)
-    so dense and bandit executables are interchangeable to the engine."""
-    del a, b, key
+                      key, *, topk: int = 10, alpha_scale=None,
+                      round_cap=None):
+    """Exact MaxSim over the candidate list; a/b/key (and the fidelity
+    knobs — dense has no fidelity to trade) accepted and ignored so dense
+    and bandit executables are interchangeable to the engine. Non-finite
+    scores (poisoned corpus rows) are quarantined to the -inf sentinel and
+    counted in ``stats[3]``."""
+    del a, b, key, alpha_scale, round_cap
     docs, dmask = gather_candidates(corpus_embs, corpus_mask, cand_ids)
     scores = _local_maxsim_scores(docs, dmask, queries)
-    scores = jnp.where(cand_ids >= 0, scores, _NEG)
+    finite = jnp.isfinite(scores)
+    quar = jnp.sum((cand_ids >= 0) & ~finite).astype(jnp.float32)
+    scores = jnp.where((cand_ids >= 0) & finite, scores, _NEG)
     best, pos = jax.lax.top_k(scores, topk)
     gids = jnp.take_along_axis(cand_ids, pos, axis=1)
     gids = jnp.where(best > _NEG / 2, gids, -1)
     frac = jnp.ones((queries.shape[0],), jnp.float32)
-    stats = jnp.array([1.0, 0.0, 0.0], jnp.float32)
+    stats = jnp.stack([jnp.float32(1.0), jnp.float32(0.0),
+                       jnp.float32(0.0), quar])
     return best, gids, frac, stats
 
 
@@ -546,14 +576,16 @@ def rerank_bandit_step(corpus_embs, corpus_mask, queries, cand_ids, a, b,
                        delta: float = 0.01, block_docs: int = 8,
                        block_tokens: int = 8, max_rounds: int = -1,
                        max_block_docs: int = 0, max_block_tokens: int = 0,
-                       engine: str = "pooled"):
+                       engine: str = "pooled", alpha_scale=None,
+                       round_cap=None):
     """Adaptive Col-Bandit rerank over the candidate list.
 
     ``engine="pooled"`` (default) drives the whole batch through one
     pooled frontier loop — one gather_maxsim kernel launch per round,
     converged queries retired (and, with ``max_block_docs`` >
     ``block_docs``, their reveal slots redistributed to the stragglers).
-    ``engine="vmapped"`` is the legacy per-query lockstep loop."""
+    ``engine="vmapped"`` is the legacy per-query lockstep loop (it
+    ignores the traced ``alpha_scale``/``round_cap`` fidelity knobs)."""
     rerank = _rerank_engine(engine)
     cfg = BatchedConfig(k=topk, delta=delta, alpha_ef=alpha_ef,
                         block_docs=block_docs, block_tokens=block_tokens,
@@ -561,7 +593,8 @@ def rerank_bandit_step(corpus_embs, corpus_mask, queries, cand_ids, a, b,
                         max_block_tokens=max_block_tokens)
     docs, dmask = gather_candidates(corpus_embs, corpus_mask, cand_ids)
     keys = jax.random.split(key, queries.shape[0])
-    return rerank(docs, dmask, queries, cand_ids, a, b, keys, cfg)
+    return rerank(docs, dmask, queries, cand_ids, a, b, keys, cfg,
+                  alpha_scale=alpha_scale, round_cap=round_cap)
 
 
 def make_serving_step(flavor: str, *, topk: int = 10, alpha_ef: float = 0.3,
@@ -601,7 +634,7 @@ def make_serving_step(flavor: str, *, topk: int = 10, alpha_ef: float = 0.3,
 #        a (B, N, T), b (B, N, T), state (FrontierState), fresh (B,) bool,
 #        keys (B,) per-slot PRNG keys)
 #     -> (topk_scores (B, K), topk_global_ids (B, K), reveal_frac (B,),
-#         stats (3,), done (B,) bool, new_state (FrontierState))
+#         stats (4,), done (B,) bool, new_state (FrontierState))
 #
 # The host loop (``serve.AsyncRetrievalEngine`` continuous mode) harvests
 # slots with ``done`` set — their score/gid/coverage rows are final —
@@ -664,7 +697,8 @@ def make_streaming_step(*, topk: int = 10, alpha_ef: float = 0.3,
         gids = jnp.where(picked >= 0, picked, -1)
         stats = jnp.stack([res.occupancy,
                            res.total_rounds.astype(jnp.float32),
-                           res.lockstep_waste.astype(jnp.float32)])
+                           res.lockstep_waste.astype(jnp.float32),
+                           jnp.sum(res.quarantined).astype(jnp.float32)])
         # Harvestable = separated/no-progress OR round-capped: a slot that
         # exhausts max_rounds without separating must still leave the
         # stream, else the host would re-enter it forever. Mirrors
@@ -688,16 +722,22 @@ def make_streaming_step(*, topk: int = 10, alpha_ef: float = 0.3,
 #   step(corpus_embs (C_pad, L, M), corpus_mask (C_pad, L),
 #        queries (B, T, M), cand_local (B, n_shards, N_loc),
 #        a_local/b_local (B, n_shards, N_loc, T),
-#        valid_docs (n_shards,), seed ())
+#        valid_docs (n_shards,), seed (),
+#        [healthy (n_shards,) bool, alpha_scale (), round_cap ()])
 #     -> (topk_scores (B, K), topk_global_ids (B, K), reveal_frac (B,),
-#         stats (n_shards, 3))
+#         stats (n_shards, 4))
 #
 # Every shard scores (dense) or pooled-frontier-reranks (bandit) its OWN
 # resident candidates; the only cross-shard traffic is the per-shard
 # K-sized scorecard all-gather plus two scalar psums for the reveal
 # fraction. ``stats`` keeps the [frontier_occupancy, total_rounds,
-# lockstep_waste] vector but PER SHARD, so the engine can surface shard
-# skew (a shard whose frontier idles is a routing-imbalance signal).
+# lockstep_waste, quarantined] vector but PER SHARD, so the engine can
+# surface shard skew (a shard whose frontier idles is a routing-imbalance
+# signal) and per-shard poisoning. ``healthy`` masks failed shards out of
+# the scorecard merge (their candidates score -inf everywhere, so healthy
+# shards' results pass through untouched — graceful partial coverage);
+# the fidelity knobs are traced scalars as in the flat steps. All three
+# trailing operands are optional and default to the no-fault trace.
 # ---------------------------------------------------------------------------
 
 def make_sharded_serving_step(mesh: Mesh, flavor: str, *, topk: int = 10,
@@ -721,7 +761,8 @@ def make_sharded_serving_step(mesh: Mesh, flavor: str, *, topk: int = 10,
     rerank = _rerank_engine(engine)
 
     def step(corpus_embs, corpus_mask, queries, cand_local, a_local,
-             b_local, valid_docs, seed):
+             b_local, valid_docs, seed, healthy=None, alpha_scale=None,
+             round_cap=None):
         B, S, NL = cand_local.shape
         T = queries.shape[1]
         k_shard = min(topk, NL)
@@ -739,28 +780,48 @@ def make_sharded_serving_step(mesh: Mesh, flavor: str, *, topk: int = 10,
                             max_block_docs=max_block_docs,
                             max_block_tokens=max_block_tokens)
 
-        def shard_fn(c_embs, c_mask, q, cand, a_l, b_l, vd, sd):
+        # Materialize the optional fault/fidelity operands so the shard_map
+        # signature stays static: defaults trace to the no-fault program.
+        healthy = (jnp.ones((n_shards,), jnp.bool_) if healthy is None
+                   else jnp.asarray(healthy, jnp.bool_))
+        knobs = alpha_scale is not None or round_cap is not None
+        asc = (jnp.float32(1.0) if alpha_scale is None
+               else jnp.asarray(alpha_scale, jnp.float32))
+        rcp = (jnp.int32(0) if round_cap is None
+               else jnp.asarray(round_cap, jnp.int32))
+
+        def shard_fn(c_embs, c_mask, q, cand, a_l, b_l, vd, sd, hl, a_s,
+                     r_c):
             cand = cand[:, 0, :]                            # (B, N_loc)
             a_l, b_l = a_l[:, 0], b_l[:, 0]                 # (B, N_loc, T)
             gids = _shard_global_ids(cand, c_embs.shape[0], every, vd)
-            valid = gids >= 0
+            # A failed shard contributes nothing: its candidates become
+            # pads, so the scorecard merge masks them to -inf and the
+            # psum'd reveal fraction reflects only the healthy corpus.
+            valid = (gids >= 0) & hl[_shard_index(every)]
+            gids = jnp.where(valid, gids, -1)
             docs, dmask = gather_candidates(c_embs, c_mask, cand)
             dmask = dmask & valid[:, :, None]
             n_cells = (jnp.sum(valid, axis=1) * T).astype(jnp.float32)
 
             if flavor == "dense":
                 s = _local_maxsim_scores(docs, dmask, q)
-                s = jnp.where(valid, s, _NEG)
+                finite = jnp.isfinite(s)
+                quar = jnp.sum(valid & ~finite).astype(jnp.float32)
+                s = jnp.where(valid & finite, s, _NEG)
                 best, pos = jax.lax.top_k(s, k_shard)
                 bg = jnp.take_along_axis(gids, pos, axis=1)
                 n_rev = n_cells
-                stats_loc = jnp.array([1.0, 0.0, 0.0], jnp.float32)
+                stats_loc = jnp.stack([jnp.float32(1.0), jnp.float32(0.0),
+                                       jnp.float32(0.0), quar])
             else:
                 key = jax.random.fold_in(jax.random.key(base_seed), sd)
                 key = jax.random.fold_in(key, _shard_index(every))
                 keys = jax.random.split(key, cand.shape[0])
+                kw = ({"alpha_scale": a_s, "round_cap": r_c} if knobs
+                      else {})
                 best, bg, cov, stats_loc = rerank(
-                    docs, dmask, q, gids, a_l, b_l, keys, cfg)
+                    docs, dmask, q, gids, a_l, b_l, keys, cfg, **kw)
                 n_rev = cov * n_cells
 
             tot_rev = jax.lax.psum(n_rev, every)
@@ -774,11 +835,11 @@ def make_sharded_serving_step(mesh: Mesh, flavor: str, *, topk: int = 10,
             in_specs=(P(every, None, None), P(every, None),
                       P(None, None, None), P(None, every, None),
                       P(None, every, None, None), P(None, every, None, None),
-                      P(None), P()),
+                      P(None), P(), P(None), P(), P()),
             out_specs=(P(None, None), P(None, None), P(None),
                        P(every, None)),
         )(corpus_embs, corpus_mask, queries, cand_local, a_local, b_local,
-          valid_docs, seed)
+          valid_docs, seed, healthy, asc, rcp)
 
     return step
 
@@ -798,13 +859,18 @@ def make_sharded_serving_step(mesh: Mesh, flavor: str, *, topk: int = 10,
 #
 #   step(corpus_embs (C_pad, L, M), corpus_mask (C_pad, L),
 #        centroids (Kc, M), shard_mass (Kc, n_shards),   # replicated router
-#        queries (B, T, M), valid_docs (n_shards,), seed ())
+#        queries (B, T, M), valid_docs (n_shards,), seed (),
+#        [healthy (n_shards,) bool, alpha_scale (), round_cap ()])
 #     -> (topk_scores (B, K), topk_global_ids (B, K), reveal_frac (B,),
-#         stats (n_shards, 5))
+#         stats (n_shards, 6))
 #
 # ``stats`` extends the per-shard reveal diagnostics with two routing
-# columns: [occupancy, total_rounds, lockstep_waste, mean quota share,
-# max quota share] — the skew signal ``metrics.summary()`` surfaces.
+# columns and the quarantine count: [occupancy, total_rounds,
+# lockstep_waste, mean quota share, max quota share, quarantined] — the
+# skew + poisoning signals ``metrics.summary()`` surfaces. ``healthy``
+# additionally re-routes a failed shard's quota mass onto the healthy
+# shards (``route_quotas(..., healthy=...)``) — shard-local failover with
+# zero extra communication, since the quota table is replicated anyway.
 # ---------------------------------------------------------------------------
 
 def make_routed_serving_step(mesh: Mesh, flavor: str = "bandit", *,
@@ -858,17 +924,30 @@ def make_routed_serving_step(mesh: Mesh, flavor: str = "bandit", *,
                             max_candidates=n_local, support=support)
 
     def step(corpus_embs, corpus_mask, centroids, shard_mass, queries,
-             valid_docs, seed):
-        def shard_fn(c_embs, c_mask, cents, mass, q, vd, sd):
+             valid_docs, seed, healthy=None, alpha_scale=None,
+             round_cap=None):
+        use_healthy = healthy is not None
+        knobs = alpha_scale is not None or round_cap is not None
+        healthy = (jnp.ones((n_shards,), jnp.bool_) if healthy is None
+                   else jnp.asarray(healthy, jnp.bool_))
+        asc = (jnp.float32(1.0) if alpha_scale is None
+               else jnp.asarray(alpha_scale, jnp.float32))
+        rcp = (jnp.int32(0) if round_cap is None
+               else jnp.asarray(round_cap, jnp.int32))
+
+        def shard_fn(c_embs, c_mask, cents, mass, q, vd, sd, hl, a_s, r_c):
             shard_ix = _shard_index(every)
             B, T = q.shape[0], q.shape[1]
             c_loc = c_embs.shape[0]
 
             # Centroid routing (replicated state => identical table on
-            # every shard; each reads its own column).
+            # every shard; each reads its own column). A failed shard's
+            # quota mass is re-routed onto healthy shards HERE, so
+            # failover costs zero extra candidates system-wide.
             m = route_mass(q, cents, mass)                    # (B, S)
             if n_total:
-                quota = route_quotas(m, n_total)              # (B, S) i32
+                quota = route_quotas(m, n_total,
+                                     healthy=hl if use_healthy else None)
                 my_quota = quota[:, shard_ix]                 # (B,)
                 share = quota.astype(jnp.float32) / jnp.float32(n_total)
             else:
@@ -886,18 +965,22 @@ def make_routed_serving_step(mesh: Mesh, flavor: str = "bandit", *,
                     lambda qq, nq: gen(c_embs, c_mask, qq, nq))(q, my_quota)
 
             gids = _shard_global_ids(cand.doc_ids, c_loc, every, vd)
-            valid = gids >= 0
+            valid = (gids >= 0) & hl[shard_ix]
+            gids = jnp.where(valid, gids, -1)
             docs, dmask = gather_candidates(c_embs, c_mask, cand.doc_ids)
             dmask = dmask & valid[:, :, None]
             n_cells = (jnp.sum(valid, axis=1) * T).astype(jnp.float32)
 
             if flavor == "dense":
                 s = _local_maxsim_scores(docs, dmask, q)
-                s = jnp.where(valid, s, _NEG)
+                finite = jnp.isfinite(s)
+                quar = jnp.sum(valid & ~finite).astype(jnp.float32)
+                s = jnp.where(valid & finite, s, _NEG)
                 best, pos = jax.lax.top_k(s, k_shard)
                 bg = jnp.take_along_axis(gids, pos, axis=1)
                 n_rev = n_cells
-                stats3 = jnp.array([1.0, 0.0, 0.0], jnp.float32)
+                stats4 = jnp.stack([jnp.float32(1.0), jnp.float32(0.0),
+                                    jnp.float32(0.0), quar])
             else:
                 key = jax.random.fold_in(jax.random.key(base_seed), sd)
                 key = jax.random.fold_in(key, shard_ix)
@@ -910,7 +993,9 @@ def make_routed_serving_step(mesh: Mesh, flavor: str = "bandit", *,
                     pr = cand.known_mask & valid[:, :, None]
                     kw = dict(prereveal=pr, prereveal_vals=cand.known_vals)
                     n_known = jnp.sum(pr, axis=(1, 2)).astype(jnp.float32)
-                best, bg, cov, stats3 = rerank(
+                if knobs:
+                    kw.update(alpha_scale=a_s, round_cap=r_c)
+                best, bg, cov, stats4 = rerank(
                     docs, dmask, q, gids, a_l, b_l, keys, cfg, **kw)
                 # Reveal accounting: prereveal cells were free (stage 1
                 # already computed them), so they don't count as work.
@@ -920,19 +1005,23 @@ def make_routed_serving_step(mesh: Mesh, flavor: str = "bandit", *,
             tot_cells = jax.lax.psum(n_cells, every)
             frac = tot_rev / jnp.maximum(tot_cells, 1.0)
             g_best, g_ids = _merge_scorecards(best, bg, every, topk)
+            # Column order keeps quarantine LAST so the routing-skew
+            # columns stay at the indices metrics consumers already read.
             stats_loc = jnp.concatenate(
-                [stats3, jnp.stack([jnp.mean(my_share),
-                                    jnp.max(my_share)])])[None, :]
+                [stats4[:3], jnp.stack([jnp.mean(my_share),
+                                        jnp.max(my_share)]),
+                 stats4[3:]])[None, :]
             return g_best, g_ids, frac, stats_loc
 
         return jax.shard_map(
             shard_fn, mesh=mesh, check_vma=False,
             in_specs=(P(every, None, None), P(every, None),
                       P(None, None), P(None, None),
-                      P(None, None, None), P(None), P()),
+                      P(None, None, None), P(None), P(), P(None), P(),
+                      P()),
             out_specs=(P(None, None), P(None, None), P(None),
                        P(every, None)),
         )(corpus_embs, corpus_mask, centroids, shard_mass, queries,
-          valid_docs, seed)
+          valid_docs, seed, healthy, asc, rcp)
 
     return step

@@ -6,6 +6,9 @@ dense/bandit dispatch) and the parity oracle for
 ``AsyncRetrievalEngine`` — the threaded runtime that overlaps host
 batch assembly with device execution and, in continuous mode, refills
 retired frontier slots from the admission queue mid-flight.
+``repro.serve.resilience`` holds the self-healing layer (thread
+supervision, shard failover, the fidelity-degradation ladder) and
+re-exports the fault-injection harness from ``repro.dist.fault``.
 ``repro.serve.lm`` holds the LM prefill/decode engine.
 """
 from repro.serve.bucketing import (ShapeBuckets, pad_candidates, pad_queries,
@@ -14,10 +17,15 @@ from repro.serve.engine import (AdmissionRejected, AsyncRetrievalEngine,
                                 BatchRecord, Completion, EngineConfig,
                                 EngineMetrics, Request, RetrievalEngine)
 from repro.serve.lm import generate, serve_step
+from repro.serve.resilience import (ChaosClock, ChaosKill, DegradeLadder,
+                                    FaultPlan, InjectedFault, Supervisor,
+                                    poison_corpus)
 
 __all__ = [
     "ShapeBuckets", "pad_candidates", "pad_queries", "support_bounds",
     "AdmissionRejected", "AsyncRetrievalEngine", "BatchRecord", "Completion",
     "EngineConfig", "EngineMetrics", "Request", "RetrievalEngine",
+    "ChaosClock", "ChaosKill", "DegradeLadder", "FaultPlan", "InjectedFault",
+    "Supervisor", "poison_corpus",
     "generate", "serve_step",
 ]

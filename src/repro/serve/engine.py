@@ -26,6 +26,7 @@ The LM decode engine that used to live here moved to ``repro.serve.lm``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import os
 import queue as queue_mod
@@ -41,7 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.frontier import FrontierState
-from repro.dist.fault import DeadlineBatcher
+from repro.dist.fault import (ChaosKill, DeadlineBatcher, FaultPlan,
+                              apply_delay)
 from repro.kernels import tuning
 from repro.kernels.ops import autotune_op
 from repro.retrieval.ann import generate_candidates
@@ -54,6 +56,7 @@ from repro.retrieval.service import (init_stream_state,
 from repro.retrieval.sharded import route_batch
 from repro.serve.bucketing import (ShapeBuckets, pad_candidates, pad_queries,
                                    support_bounds)
+from repro.serve.resilience import DegradeLadder, Supervisor
 from repro.serve.lm import generate, serve_step  # noqa: F401  (back-compat)
 
 SDS = jax.ShapeDtypeStruct
@@ -154,6 +157,26 @@ class EngineConfig:
     # advances ``stream_trip_limit`` reveal rounds per device dispatch.
     continuous: bool = False
     stream_trip_limit: int = 4
+    # Self-healing runtime (AsyncRetrievalEngine): when ``supervise`` is
+    # set, a watchdog (serve.resilience.Supervisor) restarts dead pipeline
+    # threads up to ``max_thread_restarts`` each; in-flight work survives
+    # restarts because dispatch/admission state lives on the engine, and
+    # completion delivery is rid-deduplicated (zero lost, zero duplicated).
+    # Budget exhaustion escalates to the loud thread-death failure the
+    # unsupervised engine raises immediately.
+    supervise: bool = False
+    max_thread_restarts: int = 2
+    supervise_interval_s: float = 0.02
+    # Deadline-aware fidelity ladder (``backpressure="degrade"``, bandit
+    # flavor): when a batch's tightest deadline headroom — (deadline - now)
+    # / expected service time — drops below headrooms[i], the batch runs
+    # with alpha_ef scaled by degrade_alpha_scales[i] and (rung >= 2) the
+    # reveal rounds capped at degrade_round_caps[i]. The knobs are traced
+    # scalars on the always-lowered executables: changing rungs never
+    # recompiles, and rung 0 is bit-identical to the undegrade trace.
+    degrade_headrooms: Tuple[float, ...] = (1.0, 0.5, 0.25)
+    degrade_alpha_scales: Tuple[float, ...] = (2.0, 4.0, 8.0)
+    degrade_round_caps: Tuple[int, ...] = (0, 8, 4)
     seed: int = 0
 
 
@@ -180,6 +203,10 @@ class Request:
     # source of truth — the contract the stale-next_expiry admission test
     # pins down.
     deadline_abs: Optional[float] = None
+    # Fraction of the request's ORIGINAL candidate list that survived
+    # admission (backpressure="degrade" truncation); multiplies into the
+    # completion's coverage so a degraded answer is visibly partial.
+    coverage_scale: float = 1.0
 
 
 @dataclasses.dataclass
@@ -193,6 +220,19 @@ class Completion:
     flavor: str
     bucket: Tuple[int, int]       # (token_bucket, cand_bucket)
     reveal_fraction: float        # fraction of MaxSim cells computed
+    # Fraction of the request's candidate universe actually searched:
+    # 1.0 on a fully healthy serve; < 1 when a failed shard's documents
+    # were masked out of the merge (candidate-mass fraction on healthy
+    # shards) or admission truncated the candidate list (coverage_scale).
+    # 0.0 on an ``error`` completion — nothing was searched.
+    coverage: float = 1.0
+    # Fidelity-ladder rung this request's batch ran at (0 = full fidelity).
+    degrade_level: int = 0
+    # Loud-failure surface: None on a served completion; the failure
+    # reason when the engine could not serve the request (stopped with
+    # work queued and flushing impossible, supervision budget exhausted,
+    # continuous-mode slot lost to a thread restart). topk_ids are all -1.
+    error: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -221,6 +261,11 @@ class BatchRecord:
     # shards; uniform = 1/n_shards). The skew signal metrics.summary()
     # aggregates into routed_quota_share_mean / routed_skew.
     shard_quota_share: Optional[Tuple[float, ...]] = None
+    # (doc, query) cells quarantined by the finite-score guard (poisoned
+    # corpus rows surfacing NaN/Inf MaxSim values), summed over shards.
+    quarantined: float = 0.0
+    # Fidelity-ladder rung the batch ran at (0 = full fidelity).
+    degrade_level: int = 0
 
 
 class EngineMetrics:
@@ -246,6 +291,12 @@ class EngineMetrics:
         self.autotune_s: float = 0.0
         self.autotune_buckets: int = 0
         self.tuning_entries_loaded: int = 0
+        # Resilience accounting: shard-health transitions to unhealthy,
+        # the live per-shard health vector (None off-mesh), and serving
+        # threads restarted by the supervision watchdog.
+        self.failovers: int = 0
+        self.shard_health: Optional[List[bool]] = None
+        self.thread_restarts: Dict[str, int] = {}
 
     def record_compile(self, key: tuple, after_warmup: bool) -> None:
         with self._lock:
@@ -267,12 +318,28 @@ class EngineMetrics:
         with self._lock:
             self.degraded += 1
 
+    def record_failover(self) -> None:
+        with self._lock:
+            self.failovers += 1
+
+    def record_shard_health(self, healthy: Sequence[bool]) -> None:
+        with self._lock:
+            self.shard_health = [bool(h) for h in healthy]
+
+    def record_restart(self, name: str) -> None:
+        with self._lock:
+            self.thread_restarts[name] = self.thread_restarts.get(name, 0) + 1
+
     def summary(self) -> Dict[str, Any]:
         with self._lock:
             reqs, bats = list(self.completions), list(self.batches)
             n_compiles = int(sum(self.compiles.values()))
             n_after = int(self.compiles_after_warmup)
             n_rej, n_deg = self.rejected, self.degraded
+            n_fail = self.failovers
+            health = (None if self.shard_health is None
+                      else list(self.shard_health))
+            restarts = dict(self.thread_restarts)
         bandit_bats = [b for b in bats if b.flavor == "bandit"]
         waits = np.array([c.queue_wait_s for c in reqs]) if reqs else np.zeros(1)
         lats = np.array([c.latency_s for c in reqs]) if reqs else np.zeros(1)
@@ -306,6 +373,19 @@ class EngineMetrics:
             "autotune_s": float(self.autotune_s),
             "autotune_buckets": int(self.autotune_buckets),
             "tuning_entries_loaded": int(self.tuning_entries_loaded),
+            # Resilience surface: quarantined poisoned cells, mean answer
+            # coverage (served completions only — error completions carry
+            # coverage 0 but no search), ladder activity, failovers, the
+            # live shard-health vector, and watchdog restarts.
+            "quarantined_total": float(sum(b.quarantined for b in bats)),
+            "mean_coverage": (float(np.mean([c.coverage for c in reqs
+                                             if c.error is None] or [1.0]))),
+            "errors": int(sum(1 for c in reqs if c.error is not None)),
+            "ladder_degraded_batches": int(sum(1 for b in bats
+                                               if b.degrade_level > 0)),
+            "failovers": int(n_fail),
+            **({"shard_healthy": health} if health is not None else {}),
+            "thread_restarts": restarts,
             **self._shard_summary(bats),
         }
 
@@ -345,6 +425,13 @@ class _Prepared(NamedTuple):
     exe: Any
     args: tuple
     t_release: float
+    # Batch ordinal: the idempotency key the supervised dispatch path uses
+    # to guarantee a batch is harvested exactly once across thread restarts.
+    bid: int = -1
+    # Per-real-request fraction of candidate mass on HEALTHY shards at
+    # prepare time (None = fully healthy, i.e. all 1.0).
+    coverage: Optional[np.ndarray] = None
+    degrade_level: int = 0
 
 
 class RetrievalEngine:
@@ -422,8 +509,24 @@ class RetrievalEngine:
         # reveals a distinct cell trajectory and the whole stream replays
         # bit-identically from the same config.
         self._batch_seed = itertools.count()
+        self._bid = itertools.count()            # _Prepared idempotency key
         self._warmed = False
         self.metrics = EngineMetrics()
+        # Fidelity ladder (validated eagerly even when backpressure!="degrade"
+        # so a bad config fails at construction, not mid-serve).
+        self._ladder = DegradeLadder(
+            headrooms=tuple(self.cfg.degrade_headrooms),
+            alpha_scales=tuple(self.cfg.degrade_alpha_scales),
+            round_caps=tuple(self.cfg.degrade_round_caps))
+        # Per-shard health (mesh engines only): the failover mask every
+        # prepared batch snapshots. Mutable at runtime via fail_shard /
+        # restore_shard — the compiled executables take it as a traced
+        # operand, so flipping health never recompiles.
+        self._health_lock = threading.Lock()
+        self._healthy: Optional[np.ndarray] = None
+        if mesh is not None:
+            self._healthy = np.ones((self.corpus.n_shards,), bool)
+            self.metrics.record_shard_health(self._healthy)
 
     def _admission_headroom(self) -> float:
         """Expected batch service time the batcher must leave between
@@ -437,6 +540,41 @@ class RetrievalEngine:
         """The mesh-resident corpus view, None on a single-device engine
         (back-compat name; ``self.corpus`` is the unified facade)."""
         return self.corpus if self.corpus.mesh is not None else None
+
+    # -- shard health / failover ------------------------------------------
+
+    def shard_health(self) -> Optional[np.ndarray]:
+        """Copy of the per-shard health mask (None off-mesh)."""
+        if self._healthy is None:
+            return None
+        with self._health_lock:
+            return self._healthy.copy()
+
+    def set_shard_health(self, shard: int, healthy: bool) -> None:
+        """Flip one shard's health. An unhealthy shard stops receiving
+        routed quota mass (its share re-routes to the healthy shards) and
+        its documents are masked out of the scorecard merge; completions
+        report the resulting partial ``coverage``. Traced, not compiled:
+        the health vector is an executable operand."""
+        if self._healthy is None:
+            raise ValueError("shard health needs a mesh-resident corpus "
+                             "(set mesh_axes)")
+        S = len(self._healthy)
+        if not 0 <= shard < S:
+            raise ValueError(f"shard {shard} out of range [0, {S})")
+        with self._health_lock:
+            went_down = bool(self._healthy[shard]) and not healthy
+            self._healthy[shard] = bool(healthy)
+            snap = self._healthy.copy()
+        if went_down:
+            self.metrics.record_failover()
+        self.metrics.record_shard_health(snap)
+
+    def fail_shard(self, shard: int) -> None:
+        self.set_shard_health(shard, False)
+
+    def restore_shard(self, shard: int) -> None:
+        self.set_shard_health(shard, True)
 
     # -- flavor policy ----------------------------------------------------
 
@@ -487,12 +625,19 @@ class RetrievalEngine:
                     max_block_docs=cfg.max_block_docs,
                     max_block_tokens=cfg.max_block_tokens,
                     engine=cfg.bandit_engine, base_seed=cfg.seed)
+                # Health mask + fidelity knobs are traced operands on the
+                # ONE lowered program: failover and ladder rungs at runtime
+                # never recompile, and the all-healthy/level-0 values are
+                # bit-identical to the knob-less trace.
                 args = (self.corpus_embs, self.corpus_mask,
                         SDS((B, tb, M), jnp.float32),
                         SDS((B, S, nb), jnp.int32),
                         SDS((B, S, nb, tb), jnp.float32),
                         SDS((B, S, nb, tb), jnp.float32),
                         SDS((S,), jnp.int32),
+                        SDS((), jnp.int32),
+                        SDS((S,), jnp.bool_),
+                        SDS((), jnp.float32),
                         SDS((), jnp.int32))
                 exe = jax.jit(step).lower(*args).compile()
             else:
@@ -505,18 +650,21 @@ class RetrievalEngine:
                     engine=cfg.bandit_engine)
                 base = cfg.seed
 
-                def run(ce, cm, q, cand, a, b, seed):
+                def run(ce, cm, q, cand, a, b, seed, a_s, r_c):
                     # Per-batch PRNG: fold the batch ordinal into the
                     # engine-seed stream (never key(seed + ordinal), which
                     # aliases across engines with nearby seeds).
                     k = jax.random.fold_in(jax.random.key(base), seed)
-                    return step(ce, cm, q, cand, a, b, k)
+                    return step(ce, cm, q, cand, a, b, k,
+                                alpha_scale=a_s, round_cap=r_c)
 
                 args = (self.corpus_embs, self.corpus_mask,
                         SDS((B, tb, M), jnp.float32),
                         SDS((B, nb), jnp.int32),
                         SDS((B, nb, tb), jnp.float32),
                         SDS((B, nb, tb), jnp.float32),
+                        SDS((), jnp.int32),
+                        SDS((), jnp.float32),
                         SDS((), jnp.int32))
                 exe = jax.jit(run).lower(*args).compile()
         elif key[0] == "routed":
@@ -539,6 +687,9 @@ class RetrievalEngine:
             args = (self.corpus_embs, self.corpus_mask, cents, mass,
                     SDS((B, tb, M), jnp.float32),
                     SDS((corpus.n_shards,), jnp.int32),
+                    SDS((), jnp.int32),
+                    SDS((corpus.n_shards,), jnp.bool_),
+                    SDS((), jnp.float32),
                     SDS((), jnp.int32))
             exe = jax.jit(step).lower(*args).compile()
         elif key[0] == "stream":
@@ -779,6 +930,23 @@ class RetrievalEngine:
         blocks on them — the property the async pipeline overlaps on."""
         return prep.exe(*prep.args)
 
+    def _degrade_level(self, real: Sequence[Request], flavor: str) -> int:
+        """Fidelity-ladder rung for this batch: 0 unless the degrade
+        policy is on, the batch has fidelity to trade (bandit flavor on a
+        knob-aware reveal engine), and the tightest deadline's headroom
+        ratio has fallen below the ladder thresholds."""
+        cfg = self.cfg
+        if (cfg.backpressure != "degrade" or flavor != "bandit"
+                or cfg.bandit_engine == "vmapped"):
+            return 0
+        deadlines = [r.deadline_abs for r in real
+                     if r.deadline_abs is not None]
+        expected = self._admission_headroom()
+        if not deadlines or expected <= 0:
+            return 0
+        ratio = (min(deadlines) - self.clock()) / expected
+        return self._ladder.level_for(ratio)
+
     def _prepare_batch(self, reqs: Sequence[Request], n_real: int,
                        t_release: float) -> _Prepared:
         """Host-side batch assembly: bucket, pad, stage-1, route — no
@@ -817,8 +985,13 @@ class RetrievalEngine:
         flavor = self.flavor_for(nb)
         exe = self._executable(("step", flavor, tb, nb))
         seed = jnp.int32(next(self._batch_seed))
+        level = self._degrade_level(real, flavor)
+        a_s, r_c = self._ladder.knobs(level)
+        knob_args = (jnp.float32(a_s), jnp.int32(r_c))
         if self.sharded is not None:
             sc = self.sharded
+            hl = self.shard_health()
+            cov = self._candidate_coverage(cand, real, hl, sc.docs_per_shard)
             # One placement computation for ids + payloads; the dense
             # flavor never reads the support bounds, so skip routing them
             # and ship zeros of the compiled shape.
@@ -833,12 +1006,30 @@ class RetrievalEngine:
                 a_l, b_l = routed
             args = (self.corpus_embs, self.corpus_mask, jnp.asarray(queries),
                     jnp.asarray(cand_l), jnp.asarray(a_l), jnp.asarray(b_l),
-                    self._valid_docs, seed)
+                    self._valid_docs, seed, jnp.asarray(hl)) + knob_args
         else:
+            cov = None
             args = (self.corpus_embs, self.corpus_mask, jnp.asarray(queries),
-                    jnp.asarray(cand), jnp.asarray(a), jnp.asarray(b), seed)
+                    jnp.asarray(cand), jnp.asarray(a), jnp.asarray(b),
+                    seed) + knob_args
         return _Prepared(real, n_real, (tb, nb), flavor, exe, args,
-                         t_release)
+                         t_release, next(self._bid), cov, level)
+
+    @staticmethod
+    def _candidate_coverage(cand: np.ndarray, real: Sequence[Request],
+                            healthy: np.ndarray,
+                            docs_per_shard: int) -> Optional[np.ndarray]:
+        """Per-request fraction of its real candidates living on healthy
+        shards — what the merge will actually search after the failover
+        mask drops the dead shards. None (all 1.0) on a healthy mesh."""
+        if healthy.all():
+            return None
+        cov = np.ones((len(real),), np.float32)
+        for i in range(len(real)):
+            ids = cand[i][cand[i] >= 0]
+            if ids.size:
+                cov[i] = float(np.mean(healthy[ids // docs_per_shard]))
+        return cov
 
     def _prepare_batch_routed(self, reqs: Sequence[Request],
                               real: List[Request], n_real: int, tb: int,
@@ -852,10 +1043,22 @@ class RetrievalEngine:
         queries = pad_queries([r.query for r in reqs], tb)
         seed = jnp.int32(next(self._batch_seed))
         cents, mass = self._router_args
+        level = self._degrade_level(real, flavor)
+        a_s, r_c = self._ladder.knobs(level)
+        hl = self.shard_health()
+        cov = None
+        if not hl.all():
+            # Candidates are chosen inside the shard_map — the searchable
+            # universe is the healthy shards' document mass.
+            vd = np.asarray(self.corpus.valid_docs, np.float64)
+            cov = np.full((len(real),),
+                          float(vd[hl].sum() / max(vd.sum(), 1.0)),
+                          np.float32)
         args = (self.corpus_embs, self.corpus_mask, cents, mass,
-                jnp.asarray(queries), self._valid_docs, seed)
+                jnp.asarray(queries), self._valid_docs, seed,
+                jnp.asarray(hl), jnp.float32(a_s), jnp.int32(r_c))
         return _Prepared(real, n_real, (tb, nb), flavor, exe, args,
-                         t_release)
+                         t_release, next(self._bid), cov, level)
 
     def _finish_batch(self, prep: _Prepared, out) -> List[Completion]:
         """Completion harvest: the ONLY stage that blocks on the device."""
@@ -878,9 +1081,11 @@ class RetrievalEngine:
             agg = (float(np.mean(busy[:, 0])) if len(busy)
                    else float(np.mean(stats[:, 0])),
                    float(np.sum(stats[:, 1])), float(np.sum(stats[:, 2])))
+            quarantined = float(np.sum(stats[:, -1]))
         else:
             shard_occ = shard_rounds = None
             agg = (float(stats[0]), float(stats[1]), float(stats[2]))
+            quarantined = float(stats[3])
 
         service_s = t_done - t_release
         with self._state_lock:
@@ -897,7 +1102,9 @@ class RetrievalEngine:
             lockstep_waste=agg[2],
             shard_occupancy=shard_occ,
             shard_rounds=shard_rounds,
-            shard_quota_share=shard_quota)
+            shard_quota_share=shard_quota,
+            quarantined=quarantined,
+            degrade_level=prep.degrade_level)
 
         done: List[Completion] = []
         for i, r in enumerate(real):
@@ -916,7 +1123,11 @@ class RetrievalEngine:
                 deadline_miss=(r.deadline_abs is not None
                                and t_done > r.deadline_abs + 1e-9),
                 flavor=flavor, bucket=bucket,
-                reveal_fraction=float(frac[i]))
+                reveal_fraction=float(frac[i]),
+                coverage=(float(prep.coverage[i])
+                          if prep.coverage is not None else 1.0)
+                         * r.coverage_scale,
+                degrade_level=prep.degrade_level)
             done.append(comp)
         self.metrics.record_batch(record, done)
         return done
@@ -966,7 +1177,8 @@ class AsyncRetrievalEngine(RetrievalEngine):
     def __init__(self, corpus_embs, corpus_mask,
                  config: Optional[EngineConfig] = None, *,
                  clock: Callable[[], float] = time.monotonic,
-                 poll_interval_s: float = 0.002):
+                 poll_interval_s: float = 0.002,
+                 fault_plan: Optional[FaultPlan] = None):
         super().__init__(corpus_embs, corpus_mask, config, clock=clock)
         if self.cfg.backpressure not in ("none", "reject", "degrade"):
             raise ValueError(f"unknown backpressure policy "
@@ -990,41 +1202,112 @@ class AsyncRetrievalEngine(RetrievalEngine):
         self._threads: List[threading.Thread] = []
         self._thread_exc: Optional[BaseException] = None
         self._started = False
+        # Fault-injection harness: an inert/None plan adds nothing to the
+        # serving loops (the chaos hook returns before ticking).
+        self._fault_plan = (fault_plan if fault_plan is not None
+                            and not fault_plan.empty else None)
+        # Supervised-restart state. Every piece of in-flight pipeline work
+        # lives on the ENGINE so a restarted thread resumes it: the batch
+        # the admit thread is offering to a full dispatch queue
+        # (_admit_holding), the dispatched-batch deque (_disp_inflight),
+        # and the continuous stream's occupied slots (_stream_slots).
+        # Harvest idempotency comes from _harvested (batch bids finished)
+        # plus rid-dedup at delivery (_delivered_rids) — together they
+        # give the zero-lost / zero-duplicated completion guarantee.
+        self._supervisor: Optional[Supervisor] = None
+        self._targets: Dict[str, Callable[[], None]] = {}
+        self._thread_by_name: Dict[str, threading.Thread] = {}
+        self._inflight_lock = threading.Lock()
+        self._disp_inflight: deque = deque()
+        self._admit_holding: Optional[_Prepared] = None
+        self._harvested: set = set()
+        self._delivered_rids: set = set()
+        self._stream_slots: List[Optional[Request]] = []
 
     # -- lifecycle --------------------------------------------------------
 
     def start(self) -> "AsyncRetrievalEngine":
-        """Spawn the serving threads. Idempotent while running."""
+        """Spawn the serving threads (plus the supervision watchdog under
+        ``cfg.supervise``). Idempotent while running."""
         if self._started:
             return self
         self._raise_if_failed()
         self._stop_evt.clear()
         if self.cfg.continuous:
-            targets = [("repro-stream", self._stream_loop)]
+            self._targets = {"repro-stream": self._stream_loop}
         else:
-            targets = [("repro-admit", self._admit_loop),
-                       ("repro-dispatch", self._dispatch_loop)]
-        self._threads = [
-            threading.Thread(target=self._guard, args=(fn,), name=name,
-                             daemon=True)
-            for name, fn in targets]
+            self._targets = {"repro-admit": self._admit_loop,
+                             "repro-dispatch": self._dispatch_loop}
+        self._thread_by_name = {}
         self._started = True
-        for t in self._threads:
-            t.start()
+        if self.cfg.supervise:
+            self._supervisor = Supervisor(
+                max_restarts=self.cfg.max_thread_restarts,
+                interval_s=self.cfg.supervise_interval_s,
+                stopping=self._stop_evt.is_set,
+                on_exhausted=self._supervision_exhausted)
+        for name in self._targets:
+            t = self._spawn(name)
+            if self._supervisor is not None:
+                self._supervisor.watch(
+                    name, t, factory=functools.partial(self._spawn, name),
+                    on_restart=functools.partial(self._pre_restart, name))
+        self._threads = list(self._thread_by_name.values())
+        if self._supervisor is not None:
+            self._supervisor.start()
         return self
 
+    def _spawn(self, name: str) -> threading.Thread:
+        """Build AND start one named serving thread — the initial spawn
+        and the supervisor's restart factory."""
+        t = threading.Thread(target=self._guard,
+                             args=(self._targets[name], name), name=name,
+                             daemon=True)
+        self._thread_by_name[name] = t
+        t.start()
+        return t
+
+    def _pre_restart(self, name: str) -> None:
+        """Watchdog callback just before a dead thread is replaced."""
+        self.metrics.record_restart(name)
+        if name == "repro-stream":
+            # The stream loop's frontier state died with its thread: the
+            # occupied slots' bandit progress is unrecoverable, so fail
+            # those requests LOUDLY (queued requests replay fine — the
+            # fresh thread refills from the intact admission queue).
+            self._fail_stream_slots(
+                "continuous-stream thread restarted; in-flight slot lost")
+
+    def _supervision_exhausted(self, name: str,
+                               exc: Optional[BaseException]) -> None:
+        """Restart budget spent: escalate to the unsupervised engine's
+        loud thread-death failure."""
+        self._thread_exc = exc if exc is not None else RuntimeError(
+            f"{name} died with its restart budget exhausted")
+        self._stop_evt.set()
+        with self._done_cv:
+            self._done_cv.notify_all()
+
     def stop(self) -> None:
-        """Stop the serving threads. In-flight batches are harvested;
-        requests still queued are abandoned — ``drain()`` first for a
-        clean shutdown."""
+        """Stop the serving threads, then FLUSH: every admitted request is
+        completed (queued and in-flight batches are served synchronously)
+        or — when serving is impossible, e.g. a dead thread — failed
+        loudly with an ``error`` completion. Nothing is silently dropped
+        and no future dangles after stop."""
         if not self._started:
             return
         self._stop_evt.set()
+        if self._supervisor is not None:
+            self._supervisor.stop()
+            self._supervisor = None
         with self._work_cv:
             self._work_cv.notify_all()
-        for t in self._threads:
+        for t in list(self._thread_by_name.values()):
             t.join(timeout=60.0)
         self._started = False
+        if self._thread_exc is None:
+            self._shutdown_flush()
+        self._fail_pending("engine stopped before serving this request")
         self._raise_if_failed()
 
     def __enter__(self) -> "AsyncRetrievalEngine":
@@ -1033,10 +1316,16 @@ class AsyncRetrievalEngine(RetrievalEngine):
     def __exit__(self, exc_type, exc, tb) -> None:
         self.stop()
 
-    def _guard(self, fn) -> None:
+    def _guard(self, fn, name: str = "") -> None:
         try:
             fn()
-        except BaseException as e:   # propagate to drain()/stop() callers
+        except BaseException as e:
+            if self._supervisor is not None and not self._stop_evt.is_set():
+                # Supervised: die quietly — the watchdog restarts within
+                # budget or escalates through _supervision_exhausted.
+                self._supervisor.note_failure(name, e)
+                return
+            # Unsupervised (or stopping): propagate to drain()/stop().
             self._thread_exc = e
             self._stop_evt.set()
             with self._done_cv:
@@ -1046,6 +1335,26 @@ class AsyncRetrievalEngine(RetrievalEngine):
         if self._thread_exc is not None:
             exc, self._thread_exc = self._thread_exc, None
             raise RuntimeError("serving thread died") from exc
+
+    # -- fault injection ---------------------------------------------------
+
+    def _chaos(self, point: str) -> None:
+        """Tick the fault plan's chaos point (once per thread-loop
+        iteration). Kills raise AFTER state flips apply, matching
+        FaultPlan.tick's ordering."""
+        plan = self._fault_plan
+        if plan is None:
+            return
+        for f in plan.tick(point):
+            if f.action == "kill":
+                raise ChaosKill(f"injected kill at {point!r} "
+                                f"tick {f.at}")
+            if f.action == "shard_down":
+                self.fail_shard(int(f.arg))
+            elif f.action == "shard_up":
+                self.restore_shard(int(f.arg))
+            elif f.action == "delay":
+                apply_delay(self.clock, float(f.arg))
 
     # -- admission --------------------------------------------------------
 
@@ -1078,9 +1387,14 @@ class AsyncRetrievalEngine(RetrievalEngine):
                 min_nb = self.buckets.cand_buckets[0]
                 if (request.cand_ids is not None
                         and len(request.cand_ids) > min_nb):
+                    # First ladder rung: truncate to the cheapest compiled
+                    # candidate bucket; the lost tail is a visible coverage
+                    # deficit on the completion, not a silent downgrade.
                     request = dataclasses.replace(
                         request,
-                        cand_ids=np.asarray(request.cand_ids)[:min_nb])
+                        cand_ids=np.asarray(request.cand_ids)[:min_nb],
+                        coverage_scale=(request.coverage_scale
+                                        * min_nb / len(request.cand_ids)))
                     self.metrics.record_degraded()
         return super().submit(request)
 
@@ -1116,22 +1430,33 @@ class AsyncRetrievalEngine(RetrievalEngine):
             self._done_cv.notify_all()
 
     def _deliver(self, comps: Sequence[Completion]) -> None:
-        self._resolve(comps)
-        if comps:
-            with self._completed_lock:
-                self._completed.extend(comps)
+        """Idempotent completion delivery: a rid is surfaced exactly once,
+        however many times a supervised restart re-harvests its batch."""
+        if not comps:
+            return
+        with self._completed_lock:
+            fresh = [c for c in comps if c.rid not in self._delivered_rids]
+            self._delivered_rids.update(c.rid for c in fresh)
+        if not fresh:
+            return
+        self._resolve(fresh)
+        with self._completed_lock:
+            self._completed.extend(fresh)
 
     def poll(self) -> List[Completion]:
         """Un-started: serve synchronously (parity-oracle mode). Started:
-        non-blocking pop of everything completed since the last poll."""
-        if not self._started:
-            comps = super().poll()
-            self._resolve(comps)
-            return comps
-        self._raise_if_failed()
+        non-blocking pop of everything completed since the last poll.
+        After stop() the completed backlog (including the shutdown flush's
+        work) is still surfaced before falling back to the sync path."""
+        if self._started:
+            self._raise_if_failed()
         with self._completed_lock:
             out = list(self._completed)
             self._completed.clear()
+        if not self._started:
+            comps = super().poll()
+            self._resolve(comps)
+            out.extend(comps)
         return out
 
     def drain(self) -> List[Completion]:
@@ -1164,24 +1489,34 @@ class AsyncRetrievalEngine(RetrievalEngine):
     def _admit_loop(self) -> None:
         """Drive the deadline batcher; prepare released batches; feed the
         bounded dispatch queue (whose ``put`` blocking IS the pipeline's
-        backpressure on admission work)."""
+        backpressure on admission work). A prepared batch is parked on
+        ``_admit_holding`` until the queue accepts it, so a thread death
+        mid-offer hands the batch to the restarted thread (or the stop
+        flush) instead of dropping it."""
         while True:
-            out = self._batcher.poll()
-            if out is None and self._drain_evt.is_set():
-                out = self._batcher.flush()
-            if out is not None:
-                prep = self._prepare_batch(out[0], out[1], self.clock())
+            self._chaos("admit")
+            prep = self._admit_holding
+            if prep is None:
+                out = self._batcher.poll()
+                if out is None and self._drain_evt.is_set():
+                    out = self._batcher.flush()
+                if out is not None:
+                    prep = self._prepare_batch(out[0], out[1], self.clock())
+            if prep is not None:
+                self._admit_holding = prep
                 while True:
                     try:
                         self._prep_q.put(prep, timeout=0.1)
+                        self._admit_holding = None
                         break
                     except queue_mod.Full:
                         if self._stop_evt.is_set():
-                            self._prep_q.put(_STOP)
+                            # still holding: the stop flush serves it
+                            self._put_stop()
                             return
                 continue
             if self._stop_evt.is_set():
-                self._prep_q.put(_STOP)
+                self._put_stop()
                 return
             with self._work_cv:
                 exp = self._batcher.next_expiry()
@@ -1191,34 +1526,137 @@ class AsyncRetrievalEngine(RetrievalEngine):
                 if tmo > 0:
                     self._work_cv.wait(timeout=tmo)
 
+    def _put_stop(self) -> None:
+        """Best-effort dispatch sentinel: never block on a full queue (the
+        dispatcher may be dead — the legacy blocking put deadlocked the
+        admit thread there). A dropped sentinel is safe: the dispatcher
+        also exits on stop_evt once idle, and the stop flush serves
+        whatever never got dispatched and discards stray sentinels."""
+        try:
+            self._prep_q.put_nowait(_STOP)
+        except queue_mod.Full:
+            pass
+
+    def _harvest_head(self) -> bool:
+        """Finish-and-deliver the OLDEST in-flight batch, exactly once.
+
+        Peek-finish-pop (never pop-then-finish): the batch stays on the
+        engine-owned deque until its completions are delivered, so a
+        thread dying inside ``_finish_batch`` leaves it for the restarted
+        thread. The ``bid`` guard skips a head whose predecessor died in
+        the window between delivering and popping; rid-dedup in
+        ``_deliver`` backstops the symmetric window."""
+        with self._inflight_lock:
+            if not self._disp_inflight:
+                return False
+            p, o = self._disp_inflight[0]
+        if p.bid not in self._harvested:
+            comps = self._finish_batch(p, o)
+            self._harvested.add(p.bid)
+            self._deliver(comps)
+        with self._inflight_lock:
+            if self._disp_inflight and self._disp_inflight[0][0].bid == p.bid:
+                self._disp_inflight.popleft()
+            self._inflight = len(self._disp_inflight)
+        return True
+
     def _dispatch_loop(self) -> None:
         """Launch prepared batches; keep up to ``pipeline_depth`` in
         flight; block on device results only when the pipeline is full or
-        idle — the JetStream-style dispatch/harvest split."""
+        idle — the JetStream-style dispatch/harvest split. In-flight
+        batches live on ``self._disp_inflight`` (not the thread stack) so
+        supervision restarts lose nothing."""
         depth = self.cfg.pipeline_depth
-        inflight: deque = deque()
         while True:
+            self._chaos("dispatch")
             try:
                 prep = self._prep_q.get(timeout=self._poll_interval)
             except queue_mod.Empty:
                 prep = None
             if prep is _STOP:
-                while inflight:
-                    p, o = inflight.popleft()
-                    self._inflight = len(inflight)
-                    self._deliver(self._finish_batch(p, o))
+                while self._harvest_head():
+                    pass
                 return
             if prep is not None:
-                inflight.append((prep, self._dispatch_batch(prep)))
-                self._inflight = len(inflight)
-                if len(inflight) >= depth:
-                    p, o = inflight.popleft()
-                    self._inflight = len(inflight)
-                    self._deliver(self._finish_batch(p, o))
-            elif inflight:
-                p, o = inflight.popleft()
-                self._inflight = len(inflight)
-                self._deliver(self._finish_batch(p, o))
+                with self._inflight_lock:
+                    self._disp_inflight.append(
+                        (prep, self._dispatch_batch(prep)))
+                    self._inflight = len(self._disp_inflight)
+                    full = len(self._disp_inflight) >= depth
+                if full:
+                    self._harvest_head()
+            elif not self._harvest_head() and self._stop_evt.is_set():
+                # Restarted after the _STOP sentinel was already consumed
+                # (or a racing shutdown): nothing in flight, nothing
+                # queued — the stop flush owns whatever is left.
+                return
+
+    # -- shutdown flush / loud failure ------------------------------------
+
+    def _shutdown_flush(self) -> None:
+        """Serve every batch the stopped pipeline left behind, on the
+        caller's thread: dispatched-but-unharvested batches, the admit
+        thread's parked offer, queued prepared batches, and the admission
+        queue's remainder. After this only never-admitted rids can be
+        pending (there are none on a healthy stop)."""
+        while self._harvest_head():
+            pass
+        leftovers: List[_Prepared] = []
+        if self._admit_holding is not None:
+            leftovers.append(self._admit_holding)
+            self._admit_holding = None
+        while True:
+            try:
+                prep = self._prep_q.get_nowait()
+            except queue_mod.Empty:
+                break
+            if prep is not _STOP:
+                leftovers.append(prep)
+        for prep in leftovers:
+            if prep.bid in self._harvested:
+                continue
+            comps = self._finish_batch(prep, self._dispatch_batch(prep))
+            self._harvested.add(prep.bid)
+            self._deliver(comps)
+        while True:
+            out = self._batcher.poll() or self._batcher.flush()
+            if out is None:
+                break
+            prep = self._prepare_batch(out[0], out[1], self.clock())
+            self._deliver(self._finish_batch(
+                prep, self._dispatch_batch(prep)))
+
+    def _error_completion(self, rid: int, reason: str,
+                          k: Optional[int] = None) -> Completion:
+        k = self.cfg.max_k if k is None else k
+        return Completion(
+            rid=rid, topk_ids=np.full((k,), -1, np.int32),
+            topk_scores=np.full((k,), -np.inf, np.float32),
+            queue_wait_s=0.0, latency_s=0.0, deadline_miss=True,
+            flavor="error", bucket=(0, 0), reveal_fraction=0.0,
+            coverage=0.0, error=reason)
+
+    def _fail_pending(self, reason: str) -> None:
+        """Resolve every still-pending future with a LOUD error completion
+        — the zero-lost guarantee's last line: after stop() no submitted
+        rid is unaccounted for and no future dangles."""
+        with self._done_cv:
+            pending = sorted(rid for rid, f in self._futures.items()
+                             if not f.done())
+        if pending:
+            self._deliver([self._error_completion(rid, reason)
+                           for rid in pending])
+
+    def _fail_stream_slots(self, reason: str) -> None:
+        """Fail the continuous stream's occupied slots (their on-device
+        frontier state died with the stream thread)."""
+        slots = self._stream_slots
+        comps = []
+        for s, r in enumerate(slots):
+            if r is not None:
+                comps.append(self._error_completion(r.rid, reason, k=r.k))
+                slots[s] = None
+        self._deliver(comps)
 
     # -- continuous (slot-refill) thread ----------------------------------
 
@@ -1236,6 +1674,9 @@ class AsyncRetrievalEngine(RetrievalEngine):
         state = init_stream_state(B, nb, tb)
         keys = jax.random.split(base_key, B)
         slot: List[Optional[Request]] = [None] * B
+        # Engine-visible alias: a supervised restart fails the occupied
+        # slots loudly (their frontier state died with this thread).
+        self._stream_slots = slot
         slot_fill = [0.0] * B
         queries = np.zeros((B, tb, M), np.float32)
         cand = np.full((B, nb), -1, np.int32)
@@ -1243,6 +1684,7 @@ class AsyncRetrievalEngine(RetrievalEngine):
         b_np = np.zeros((B, nb, tb), np.float32)
 
         while True:
+            self._chaos("stream")
             # 1. Refill retired slots from the admission queue.
             newly: List[int] = []
             for s in range(B):
@@ -1327,7 +1769,8 @@ class AsyncRetrievalEngine(RetrievalEngine):
                     deadline_miss=(r.deadline_abs is not None
                                    and t_done > r.deadline_abs + 1e-9),
                     flavor="bandit", bucket=(tb, nb),
-                    reveal_fraction=float(frac[s])))
+                    reveal_fraction=float(frac[s]),
+                    coverage=r.coverage_scale))
                 slot[s] = None
             service_s = t_done - t0
             with self._state_lock:
@@ -1340,5 +1783,6 @@ class AsyncRetrievalEngine(RetrievalEngine):
                 reveal_fraction=float(np.mean(frac[live])),
                 frontier_occupancy=float(stats[0]),
                 total_rounds=float(stats[1]),
-                lockstep_waste=float(stats[2])), comps)
+                lockstep_waste=float(stats[2]),
+                quarantined=float(stats[3])), comps)
             self._deliver(comps)

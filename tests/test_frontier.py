@@ -256,8 +256,9 @@ def test_rerank_bandit_step_engines_agree(serving_setup):
         s, g, f, st = rerank_bandit_step(
             ds.doc_embs, ds.doc_mask, q, cand, a, b, key, topk=5,
             alpha_ef=1e9, block_docs=4, block_tokens=4, engine=eng)
-        assert st.shape == (3,)
+        assert st.shape == (4,)
         assert 0.0 < float(st[0]) <= 1.0
+        assert float(st[3]) == 0.0          # clean corpus: none quarantined
         assert ((np.asarray(f) > 0) & (np.asarray(f) <= 1)).all()
         out[eng] = np.asarray(g)
     for eng in ("pooled", "pooled_fused", "pooled_chain"):

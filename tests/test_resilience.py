@@ -1,0 +1,526 @@
+"""ISSUE 8: fault-injected, self-healing serving.
+
+Units for the resilience layer (FaultPlan determinism, ChaosClock,
+poison_corpus, DegradeLadder, Supervisor) plus engine-level regressions:
+the finite-score quarantine end to end over a poisoned corpus, supervised
+thread-kill recovery with the zero-lost / zero-dup delivery guarantee,
+stop()'s flush-and-complete contract (no dangling futures, no silently
+dropped queued work), the deadline-aware fidelity ladder (traced knobs =
+zero recompiles), and shard failover's partial-coverage accounting (the
+mesh cases run in device subprocesses via tests/_subproc.py).
+"""
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from _subproc import run_in_subprocess
+
+from repro.dist.fault import (ChaosClock, ChaosKill, FaultPlan,
+                              InjectedFault, poison_corpus)
+from repro.serve import (AsyncRetrievalEngine, EngineConfig, Request,
+                         RetrievalEngine)
+from repro.serve.resilience import DegradeLadder, Supervisor
+
+# Threaded chaos tests must never hang CI: enforced by pytest-timeout in
+# the chaos lane, inert where the plugin is not installed.
+pytestmark = pytest.mark.timeout(300)
+
+
+def _dataset(C=32, L=6, T=8, M=16, seed=0):
+    rng = np.random.default_rng(seed)
+    embs = rng.standard_normal((C, L, M)).astype(np.float32)
+    embs /= np.linalg.norm(embs, axis=-1, keepdims=True)
+    mask = np.arange(L)[None] < rng.integers(3, L + 1, C)[:, None]
+    q = rng.standard_normal((T, M)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=-1, keepdims=True)
+    return embs, mask, q
+
+
+# -- fault-injection primitives ------------------------------------------
+
+
+def test_fault_plan_counter_determinism():
+    """Ticking is counter-based: the same plan replayed over the same tick
+    stream fires the identical faults at the identical ticks, and foreign
+    points never fire."""
+    mk = lambda: FaultPlan([
+        InjectedFault(point="dispatch", at=3, action="kill"),
+        InjectedFault(point="dispatch", at=5, action="shard_down", arg=1),
+        InjectedFault(point="admit", at=2, action="delay", arg=0.5),
+    ])
+    logs = []
+    for _ in range(2):
+        plan, log = mk(), []
+        for t in range(1, 7):
+            log.append((t, "admit", [f.action for f in plan.tick("admit")]))
+            log.append((t, "dispatch",
+                        [f.action for f in plan.tick("dispatch")]))
+        logs.append(log)
+    assert logs[0] == logs[1]
+    fired = {(t, p): a for t, p, a in logs[0] if a}
+    assert fired == {(2, "admit"): ["delay"], (3, "dispatch"): ["kill"],
+                     (5, "dispatch"): ["shard_down"]}
+
+
+def test_fault_plan_seeded_replay_and_kill_ordering():
+    """seeded() is a pure function of the seed, and a tick carrying both a
+    state flip and a kill applies the flip first (kills sort last)."""
+    a = FaultPlan.seeded(7, points=("admit", "dispatch"), n_faults=4,
+                         actions=("kill", "shard_down"), shards=(0, 1))
+    b = FaultPlan.seeded(7, points=("admit", "dispatch"), n_faults=4,
+                         actions=("kill", "shard_down"), shards=(0, 1))
+    assert a.faults == b.faults
+    assert FaultPlan.seeded(8).faults != a.faults or True  # just replayable
+    plan = FaultPlan([
+        InjectedFault(point="dispatch", at=1, action="kill"),
+        InjectedFault(point="dispatch", at=1, action="shard_down", arg=0)])
+    due = plan.tick("dispatch")
+    assert [f.action for f in due] == ["shard_down", "kill"]
+    assert not FaultPlan().tick("dispatch") and FaultPlan().empty
+
+
+def test_chaos_clock_virtual_delay():
+    clk = ChaosClock(10.0)
+    assert clk() == 10.0
+    clk.sleep(2.5)
+    assert clk() == 12.5
+    from repro.dist.fault import apply_delay
+    t0 = time.monotonic()
+    apply_delay(clk, 100.0)                 # virtual: must not wall-sleep
+    assert time.monotonic() - t0 < 5.0
+    assert clk() == 112.5
+
+
+def test_poison_corpus_modes_and_copy():
+    embs, _, _ = _dataset()
+    for mode in ("nan", "inf", "neginf"):
+        poisoned, rows = poison_corpus(embs, 0.01, seed=3, mode=mode)
+        assert rows.shape == (embs.shape[0],) and rows.any()
+        assert np.isfinite(embs).all()              # input untouched
+        assert not np.isfinite(poisoned[rows]).all()
+        assert np.array_equal(poisoned[~rows], embs[~rows])
+
+
+# -- degrade ladder -------------------------------------------------------
+
+
+def test_degrade_ladder_levels_and_knobs():
+    lad = DegradeLadder()
+    assert [lad.level_for(r) for r in (2.0, 1.0, 0.7, 0.4, 0.1, -1.0)] == \
+        [0, 0, 1, 2, 3, 3]
+    assert lad.knobs(0) == (1.0, 0)                  # bit-identity rung
+    assert lad.knobs(1) == (2.0, 0)
+    assert lad.knobs(2) == (4.0, 8)
+    assert lad.knobs(3) == (8.0, 4)
+    assert lad.knobs(99) == (8.0, 4)                 # clamps
+    with pytest.raises(ValueError, match="equal length"):
+        DegradeLadder(headrooms=(1.0,), alpha_scales=(2.0, 3.0),
+                      round_caps=(0,))
+    with pytest.raises(ValueError, match="strictly decrease"):
+        DegradeLadder(headrooms=(0.5, 0.5), alpha_scales=(2.0, 3.0),
+                      round_caps=(0, 0))
+    with pytest.raises(ValueError, match=">= 1"):
+        DegradeLadder(headrooms=(1.0,), alpha_scales=(0.5,), round_caps=(0,))
+
+
+def test_engine_deadline_ladder_degrades_without_recompiles():
+    """A bandit engine under backpressure="degrade" with squeezed deadlines
+    runs the ladder: batches record a rung > 0, completions carry it, and
+    — the traced-knob contract — not a single recompile. A frozen
+    ChaosClock makes the headroom ratio (and so the rung) exact."""
+    embs, mask, q = _dataset(C=48)
+    eng = RetrievalEngine(embs, mask, EngineConfig(
+        batch_size=2, token_buckets=(8,), cand_buckets=(16,), max_k=5,
+        flavor="bandit", alpha_ef=0.3, block_docs=4, block_tokens=2,
+        backpressure="degrade", deadline_headroom_s=1.0),
+        clock=ChaosClock())
+    eng.warmup()
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        cand = rng.choice(48, 16, replace=False).astype(np.int32)
+        # deadline 0.3 s vs expected service 1.0 s -> headroom ratio 0.3
+        # -> rung 2 (alpha x4, rounds capped at 8)
+        eng.submit(Request(query=q, k=5, deadline_s=0.3, cand_ids=cand))
+    done = eng.drain()
+    assert len(done) == 4
+    assert all(c.degrade_level == 2 for c in done)
+    assert all(np.isfinite(c.topk_scores).all() for c in done)
+    s = eng.metrics.summary()
+    assert s["ladder_degraded_batches"] == 2
+    assert s["compiles_after_warmup"] == 0
+
+
+def test_engine_ladder_level0_is_bit_identical():
+    """Same stream with comfortable deadlines vs no deadlines: rung 0's
+    (alpha_scale=1, round_cap=0) knobs are bitwise inert."""
+    embs, mask, q = _dataset(C=48)
+    cfg = EngineConfig(batch_size=2, token_buckets=(8,), cand_buckets=(16,),
+                       max_k=5, flavor="bandit", alpha_ef=0.3, block_docs=4,
+                       block_tokens=2)
+    rng = np.random.default_rng(1)
+    cands = [rng.choice(48, 16, replace=False).astype(np.int32)
+             for _ in range(4)]
+    outs = []
+    for deadline in (None, 1e6):
+        bp = "none" if deadline is None else "degrade"
+        eng = RetrievalEngine(embs, mask,
+                              dataclasses.replace(cfg, backpressure=bp))
+        eng.warmup()
+        for c in cands:
+            eng.submit(Request(query=q, k=5, deadline_s=deadline,
+                               cand_ids=c))
+        outs.append({c.rid: c for c in eng.drain()})
+    for rid, c in outs[0].items():
+        np.testing.assert_array_equal(c.topk_ids, outs[1][rid].topk_ids)
+        np.testing.assert_array_equal(c.topk_scores,
+                                      outs[1][rid].topk_scores)
+        assert c.coverage == 1.0 and c.degrade_level == 0
+
+
+# -- finite-score quarantine end to end ----------------------------------
+
+
+def test_engine_quarantines_poisoned_corpus_rows():
+    """A NaN-poisoned corpus row reaching the candidate list is
+    quarantined, never served: top-K excludes it, every returned score is
+    finite, and the quarantine count surfaces in the summary."""
+    embs, mask, q = _dataset(C=32)
+    poisoned, rows = poison_corpus(embs, 1.0 / 32, seed=5)
+    bad = int(np.flatnonzero(rows)[0])
+    for flavor in ("dense", "bandit"):
+        eng = RetrievalEngine(poisoned, mask, EngineConfig(
+            batch_size=2, token_buckets=(8,), cand_buckets=(16,), max_k=5,
+            flavor=flavor, alpha_ef=0.3, block_docs=4, block_tokens=2))
+        eng.warmup()
+        rng = np.random.default_rng(2)
+        for _ in range(4):
+            cand = rng.choice(32, 16, replace=False).astype(np.int32)
+            cand[0] = bad                       # force the poisoned doc in
+            eng.submit(Request(query=q, k=5, cand_ids=cand))
+        done = eng.drain()
+        assert len(done) == 4
+        for c in done:
+            assert bad not in c.topk_ids.tolist(), flavor
+            assert np.isfinite(c.topk_scores).all(), flavor
+            assert c.coverage == 1.0
+        s = eng.metrics.summary()
+        assert s["quarantined_total"] >= 4, flavor
+        assert s["compiles_after_warmup"] == 0, flavor
+
+
+# -- supervision ----------------------------------------------------------
+
+
+def test_supervisor_restarts_within_budget_then_escalates():
+    """Unit: a thread that keeps dying is restarted max_restarts times,
+    then on_exhausted fires exactly once with the recorded exception."""
+    deaths = []
+    exhausted = []
+    sup = Supervisor(max_restarts=2, interval_s=0.005,
+                     on_exhausted=lambda n, e: exhausted.append((n, e)))
+
+    def loop():
+        deaths.append(1)
+        exc = ChaosKill("boom")
+        sup.note_failure("worker", exc)
+        raise exc
+
+    def guard():
+        try:
+            loop()
+        except ChaosKill:
+            pass
+
+    def spawn():
+        t = threading.Thread(target=guard, daemon=True)
+        t.start()
+        return t
+
+    sup.watch("worker", spawn(), factory=spawn)
+    sup.start()
+    deadline = time.monotonic() + 10.0
+    while not exhausted and time.monotonic() < deadline:
+        time.sleep(0.01)
+    sup.stop()
+    assert len(exhausted) == 1
+    assert exhausted[0][0] == "worker"
+    assert isinstance(exhausted[0][1], ChaosKill)
+    assert sup.restarts["worker"] == 2
+    assert len(deaths) == 3                     # initial + two restarts
+
+
+def test_supervised_dispatch_kill_zero_lost_zero_dup():
+    """A FaultPlan kills the dispatch thread mid-stream; the watchdog
+    restarts it and every request completes exactly once, served (no
+    error completions) and bit-identical to an unfaulted run."""
+    embs, mask, q = _dataset(C=32)
+    cfg = EngineConfig(batch_size=2, token_buckets=(8,), cand_buckets=(16,),
+                       max_k=5, flavor="bandit", alpha_ef=0.3, block_docs=4,
+                       block_tokens=2, pipeline_depth=2, supervise=True,
+                       max_thread_restarts=2)
+    rng = np.random.default_rng(3)
+    cands = [rng.choice(32, 16, replace=False).astype(np.int32)
+             for _ in range(12)]
+
+    def run(plan):
+        eng = AsyncRetrievalEngine(embs, mask, cfg, fault_plan=plan)
+        eng.warmup()
+        with eng:
+            for c in cands:
+                eng.submit(Request(query=q, k=5, cand_ids=c))
+            done = eng.drain()
+        return eng, done
+
+    plan = FaultPlan([InjectedFault(point="dispatch", at=4, action="kill")])
+    eng_f, done_f = run(plan)
+    eng_c, done_c = run(None)
+    assert [f.action for f in plan.fired] == ["kill"]
+    assert eng_f.metrics.summary()["thread_restarts"] == {
+        "repro-dispatch": 1}
+    for eng, done in ((eng_f, done_f), (eng_c, done_c)):
+        rids = [c.rid for c in done]
+        assert sorted(rids) == list(range(12))          # zero lost
+        assert len(set(rids)) == len(rids)              # zero dup
+        assert all(c.error is None for c in done)
+        assert eng.metrics.summary()["errors"] == 0
+    by_f = {c.rid: c for c in done_f}
+    by_c = {c.rid: c for c in done_c}
+    for rid in by_f:                                     # served identically
+        np.testing.assert_array_equal(by_f[rid].topk_ids,
+                                      by_c[rid].topk_ids)
+        np.testing.assert_array_equal(by_f[rid].topk_scores,
+                                      by_c[rid].topk_scores)
+
+
+def test_supervised_admit_kill_recovers():
+    """Same guarantee when the ADMIT thread dies (the prepared-batch
+    hand-off must survive the restart)."""
+    embs, mask, q = _dataset(C=32)
+    plan = FaultPlan([InjectedFault(point="admit", at=3, action="kill")])
+    eng = AsyncRetrievalEngine(embs, mask, EngineConfig(
+        batch_size=2, token_buckets=(8,), cand_buckets=(16,), max_k=5,
+        flavor="dense", pipeline_depth=2, supervise=True), fault_plan=plan)
+    eng.warmup()
+    rng = np.random.default_rng(4)
+    with eng:
+        for _ in range(8):
+            cand = rng.choice(32, 16, replace=False).astype(np.int32)
+            eng.submit(Request(query=q, k=5, cand_ids=cand))
+        done = eng.drain()
+    assert sorted(c.rid for c in done) == list(range(8))
+    assert all(c.error is None for c in done)
+    assert eng.metrics.summary()["thread_restarts"] == {"repro-admit": 1}
+
+
+def test_unsupervised_kill_still_fails_loudly():
+    """supervise=False preserves the legacy contract: a dead serving
+    thread surfaces as RuntimeError("serving thread died"). The raise
+    consumes the exception, so the follow-up stop() runs the shutdown
+    flush — every stranded request is resolved, none dangle."""
+    embs, mask, q = _dataset(C=32)
+    plan = FaultPlan([InjectedFault(point="dispatch", at=1, action="kill")])
+    eng = AsyncRetrievalEngine(embs, mask, EngineConfig(
+        batch_size=2, token_buckets=(8,), cand_buckets=(16,), max_k=5,
+        flavor="dense", supervise=False), fault_plan=plan)
+    eng.warmup()
+    rng = np.random.default_rng(5)
+    # submit BEFORE start: the tick-1 kill fires almost instantly, and a
+    # post-kill submit would itself raise via _raise_if_failed.
+    rids = [eng.submit(Request(
+        query=q, k=5,
+        cand_ids=rng.choice(32, 16, replace=False).astype(np.int32)))
+        for _ in range(4)]
+    eng.start()
+    with pytest.raises(RuntimeError, match="serving thread died"):
+        eng.drain()
+    eng.stop()                   # exception consumed above: stop() flushes
+    for rid in rids:                         # resolve-or-fail: no dangles
+        fut = eng.future(rid)
+        assert fut is not None and fut.done()
+    assert sorted(c.rid for c in eng.poll()) == sorted(rids)
+
+
+def test_supervision_budget_exhaustion_escalates():
+    """More kills than max_thread_restarts: the watchdog gives up and the
+    engine fails loudly; every future is still resolved."""
+    embs, mask, q = _dataset(C=32)
+    plan = FaultPlan([InjectedFault(point="dispatch", at=t, action="kill")
+                      for t in (1, 2, 3)])
+    eng = AsyncRetrievalEngine(embs, mask, EngineConfig(
+        batch_size=2, token_buckets=(8,), cand_buckets=(16,), max_k=5,
+        flavor="dense", supervise=True, max_thread_restarts=1,
+        supervise_interval_s=0.005), fault_plan=plan)
+    eng.warmup()
+    rng = np.random.default_rng(6)
+    rids = [eng.submit(Request(
+        query=q, k=5,
+        cand_ids=rng.choice(32, 16, replace=False).astype(np.int32)))
+        for _ in range(4)]
+    eng.start()
+    with pytest.raises(RuntimeError, match="serving thread died"):
+        eng.drain()
+    eng.stop()                   # exception consumed above: stop() flushes
+    assert eng.metrics.summary()["thread_restarts"]["repro-dispatch"] == 1
+    assert all(eng.future(r) is not None and eng.future(r).done()
+               for r in rids)
+
+
+# -- stop() flush-and-complete -------------------------------------------
+
+
+def test_stop_flushes_queued_work_no_futures_dangle():
+    """stop() without drain(): everything admitted is still SERVED (the
+    flush completes queued and in-flight batches) and every future
+    resolves — the old silently-abandoned-queue behavior is gone."""
+    embs, mask, q = _dataset(C=32)
+    eng = AsyncRetrievalEngine(embs, mask, EngineConfig(
+        batch_size=4, deadline_s=30.0, token_buckets=(8,),
+        cand_buckets=(16,), max_k=5, flavor="dense", pipeline_depth=2))
+    eng.warmup()
+    rng = np.random.default_rng(7)
+    eng.start()
+    rids = [eng.submit(Request(
+        query=q, k=5,
+        cand_ids=rng.choice(32, 16, replace=False).astype(np.int32)))
+        for _ in range(10)]                      # 2.5 batches, none due
+    eng.stop()                                   # no drain on purpose
+    done = eng.poll()
+    assert sorted(c.rid for c in done) == sorted(rids)
+    assert all(c.error is None for c in done)
+    for rid in rids:
+        fut = eng.future(rid)
+        assert fut.done() and fut.result().rid == rid
+    assert eng.metrics.summary()["errors"] == 0
+
+
+def test_stop_flushes_continuous_stream():
+    """Continuous mode: stop() serves the queued stream before exiting."""
+    embs, mask, q = _dataset(C=32)
+    eng = AsyncRetrievalEngine(embs, mask, EngineConfig(
+        batch_size=2, token_buckets=(8,), cand_buckets=(16,), max_k=5,
+        flavor="bandit", alpha_ef=0.3, block_docs=4, block_tokens=2,
+        continuous=True, stream_trip_limit=2))
+    eng.warmup()
+    rng = np.random.default_rng(8)
+    eng.start()
+    rids = [eng.submit(Request(
+        query=q, k=5,
+        cand_ids=rng.choice(32, 16, replace=False).astype(np.int32)))
+        for _ in range(6)]
+    eng.stop()
+    done = eng.poll()
+    assert sorted(c.rid for c in done) == sorted(rids)
+    assert all(c.error is None and c.coverage == 1.0 for c in done)
+
+
+# -- shard failover (mesh subprocess) ------------------------------------
+
+_MESH_SETUP = """
+import numpy as np
+from repro.serve import AsyncRetrievalEngine, EngineConfig, Request
+
+rng = np.random.default_rng(0)
+C, L, M, T = 47, 6, 8, 8
+embs = rng.standard_normal((C, L, M)).astype(np.float32)
+embs /= np.linalg.norm(embs, axis=-1, keepdims=True)
+mask = np.arange(L)[None] < rng.integers(3, L + 1, C)[:, None]
+qs = rng.standard_normal((16, T, M)).astype(np.float32)
+qs /= np.linalg.norm(qs, axis=-1, keepdims=True)
+cfg = EngineConfig(batch_size=4, token_buckets=(8,), cand_buckets=(16,),
+                   max_k=5, flavor="bandit", alpha_ef=0.3, block_docs=4,
+                   block_tokens=2,
+                   mesh_axes=(("data", 2), ("model", 2)))
+eng = AsyncRetrievalEngine(embs, mask, cfg)
+eng.warmup()
+
+def serve(n0):
+    for i in range(8):
+        cand = rng.choice(C, 16, replace=False).astype(np.int32)
+        if 30 not in cand:
+            cand[0] = 30        # guarantee a shard-2 doc in every request
+        eng.submit(Request(query=qs[(n0 + i) % 16], k=5, cand_ids=cand))
+    return eng.drain()
+"""
+
+
+def test_shard_failover_partial_coverage_and_recovery():
+    """fail_shard: completions report coverage < 1, the dead shard's docs
+    vanish from top-K, metrics expose health + failover count; restore:
+    coverage returns to 1.0 — all with ZERO recompiles (the health mask is
+    a traced operand)."""
+    out = run_in_subprocess(_MESH_SETUP + """
+healthy = serve(0)
+assert all(c.coverage == 1.0 for c in healthy)
+dps = eng.corpus.docs_per_shard
+eng.fail_shard(2)
+down = serve(8)
+assert all(0.0 <= c.coverage < 1.0 for c in down), \
+    [c.coverage for c in down]
+for c in down:
+    ids = c.topk_ids[c.topk_ids >= 0]
+    assert not np.any(ids // dps == 2), (ids, dps)   # dead shard masked
+s = eng.metrics.summary()
+assert s["failovers"] == 1
+assert s["shard_healthy"] == [True, True, False, True]
+eng.restore_shard(2)
+back = serve(16)
+assert all(c.coverage == 1.0 for c in back)
+assert eng.metrics.summary()["shard_healthy"] == [True] * 4
+assert eng.metrics.compiles_after_warmup == 0
+print("FAILOVER_OK")
+    """, n_devices=4)
+    assert "FAILOVER_OK" in out
+
+
+def test_routed_failover_reroutes_quota_mass():
+    """Routed (shard-local stage-1) engine: failing a shard re-routes its
+    quota mass to the healthy shards (dead shard share -> 0, shares still
+    sum to 1) and completions carry the corpus-mass coverage."""
+    out = run_in_subprocess("""
+import numpy as np
+from repro.serve import EngineConfig, Request, RetrievalEngine
+
+rng = np.random.default_rng(1)
+C, L, M, T = 47, 6, 8, 8
+embs = rng.standard_normal((C, L, M)).astype(np.float32)
+embs /= np.linalg.norm(embs, axis=-1, keepdims=True)
+mask = np.arange(L)[None] < rng.integers(3, L + 1, C)[:, None]
+qs = rng.standard_normal((8, T, M)).astype(np.float32)
+qs /= np.linalg.norm(qs, axis=-1, keepdims=True)
+eng = RetrievalEngine(embs, mask, EngineConfig(
+    batch_size=4, token_buckets=(8,), cand_buckets=(16,), max_k=5,
+    flavor="bandit", alpha_ef=0.3, block_docs=4, block_tokens=2,
+    stage1="local", stage1_kprime=100000, stage1_candidates=16,
+    stage1_total=8, mesh_axes=(("data", 2), ("model", 2))))
+eng.warmup()
+eng.fail_shard(1)
+for i in range(8):
+    eng.submit(Request(query=qs[i], k=5))
+done = eng.drain()
+vd = np.asarray(eng.corpus.valid_docs, float)
+want_cov = float(vd[[0, 2, 3]].sum() / vd.sum())
+assert all(abs(c.coverage - want_cov) < 1e-6 for c in done), \
+    [c.coverage for c in done]
+dps = eng.corpus.docs_per_shard
+for c in done:
+    ids = c.topk_ids[c.topk_ids >= 0]
+    assert len(ids) and not np.any(ids // dps == 1)
+qs_share = eng.metrics.summary()["routed_quota_share_mean"]
+assert qs_share[1] == 0.0, qs_share                 # no quota to the dead
+assert abs(sum(qs_share) - 1.0) < 1e-4
+assert eng.metrics.compiles_after_warmup == 0
+print("ROUTED_FAILOVER_OK")
+    """, n_devices=4)
+    assert "ROUTED_FAILOVER_OK" in out
+
+
+def test_fail_shard_needs_mesh():
+    embs, mask, _ = _dataset()
+    eng = RetrievalEngine(embs, mask, EngineConfig(
+        batch_size=2, token_buckets=(8,), cand_buckets=(16,), max_k=5))
+    assert eng.shard_health() is None
+    with pytest.raises(ValueError, match="mesh"):
+        eng.fail_shard(0)

@@ -75,7 +75,8 @@ def run_parity(mesh, sc, n_local, n_devices_label):
                                 sc.valid_docs_device(), jnp.int32(0))
         label = flavor + n_devices_label
         check_topk(sr, ir, sh, ih, label)
-        assert np.asarray(st).shape == (sc.n_shards, 5), label
+        assert np.asarray(st).shape == (sc.n_shards, 6), label
+        assert (np.asarray(st)[:, 5] == 0).all(), label   # no quarantine
         if flavor == "bandit":
             # full coverage + shared PRNG => identical reveal trajectories
             np.testing.assert_allclose(np.asarray(fr), np.asarray(fh),
@@ -137,7 +138,7 @@ for b in range(B):
     assert len(set(real.tolist())) == len(real), (b, i[b])
     assert len(real) >= 5, (b, i[b])           # 24 candidates >> top-5
 assert ((f > 0.0) & (f <= 1.0 + 1e-6)).all(), f
-assert st.shape == (4, 5)
+assert st.shape == (4, 6)
 qs = st[:, 3]                                   # mean quota share per shard
 assert np.isclose(qs.sum(), 1.0, atol=1e-4), qs
 assert (st[:, 4] >= qs - 1e-6).all()            # max share >= mean share

@@ -107,7 +107,8 @@ step = make_rerank_bandit_step(mesh4, topk=5, alpha_ef=1e9, block_docs=4,
 s4, i4, frac, stats = step(sc.embs, sc.mask, q, jnp.asarray(cand_l4),
                            jnp.asarray(a_l4), jnp.asarray(b_l4),
                            sc.valid_docs_device(), jnp.int32(0))
-assert np.asarray(stats).shape == (4, 3)
+assert np.asarray(stats).shape == (4, 4)
+assert (np.asarray(stats)[:, 3] == 0).all()   # clean corpus: no quarantine
 assert ((np.asarray(frac) > 0) & (np.asarray(frac) <= 1)).all()
 
 s1, i1, _, _ = rerank_bandit_step(
