@@ -59,6 +59,9 @@ STANDALONE = {
                         "§Perf hillclimb (own entry point, 512 fake devices)"),
     "roofline": ("benchmarks.roofline",
                  "roofline terms per cell (own entry point)"),
+    "lint": ("repro.analysis.lint",
+             "trace-safety + lockset lint "
+             "(python -m repro.analysis.lint src)"),
 }
 
 

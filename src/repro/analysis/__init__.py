@@ -1,0 +1,24 @@
+"""Static analysis & compile-contract auditing for the repro codebase.
+
+Three passes, all stdlib-only (no jax import at analysis time):
+
+* :mod:`repro.analysis.hlo_audit` — the compile-contract auditor: parses
+  each AOT-warmed executable's optimized HLO and asserts the serving
+  contracts (no host callbacks, no f64, collective traffic within the
+  K-sized scorecard budget, peak buffers bounded). Wired into the engine
+  as ``EngineConfig(audit=True)``.
+* :mod:`repro.analysis.lint` — trace-safety AST lint encoding this
+  repo's real bug history (PRNG ``key(seed + x)`` aliasing, host syncs
+  under trace, bare kernel asserts, ...). Run as
+  ``python -m repro.analysis.lint src/``.
+* :mod:`repro.analysis.locks` — thread-lockset race lint over classes
+  that declare ``THREAD_ENTRY_POINTS`` / ``GUARDED_BY`` tables (the
+  serving engine); :mod:`repro.analysis.recorder` is its runtime twin,
+  a debug sanitizer the chaos soak can run under.
+
+The machine-checked invariant catalog lives in ``CONTRACTS.md``.
+"""
+from repro.analysis.hlo_audit import (AuditError, AuditSpec,  # noqa: F401
+                                      audit_executable, audit_hlo_text,
+                                      collective_bytes,
+                                      scorecard_budget_bytes)

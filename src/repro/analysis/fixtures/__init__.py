@@ -1,0 +1,4 @@
+"""Lint fixtures: each module DELIBERATELY violates one or more rules so
+tests (and the CI gate's self-check) can assert the linter fires. The
+default lint walk excludes any ``fixtures`` directory — lint these with
+``--include-fixtures`` or by passing a file path explicitly."""

@@ -1,0 +1,8 @@
+"""Trigger fixture for kernel-assert: a bare assert in a kernels/
+directory (stripped under ``python -O``; kernels must raise ValueError
+at the host entry point instead)."""
+
+
+def launch(n: int, bn: int):
+    assert n % bn == 0, (n, bn)                        # kernel-assert
+    return n // bn

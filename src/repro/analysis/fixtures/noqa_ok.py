@@ -1,0 +1,8 @@
+"""Suppression fixture: the one violation here carries a
+``# repro: noqa-<rule>`` marker, so the lint reports it as suppressed
+(not active) — the mechanism tests pin."""
+import jax
+
+
+def suppressed_key(seed: int):
+    return jax.random.key(seed + 1)  # repro: noqa-prng-aliasing

@@ -1,0 +1,33 @@
+"""Trigger fixture for the trace-safety rules (never executed; the lint
+works on the AST). Expected violations, in order: prng-aliasing,
+mutable-default, traced-truthiness, traced-cast (x2),
+host-sync-in-trace, time-in-trace."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def aliased_key(seed: int):
+    return jax.random.key(seed + 7)                    # prng-aliasing
+
+
+def mutable_default(xs=[]):                            # mutable-default
+    return xs
+
+
+def round_loop(x):
+    def cond(state):
+        if jnp.any(state > 0):                         # traced-truthiness
+            return True
+        return False
+
+    def body(state):
+        v = float(jnp.sum(state))                      # traced-cast
+        w = state.max().item()                         # traced-cast
+        host = np.asarray(state)                       # host-sync-in-trace
+        t = time.time()                                # time-in-trace
+        return state - v - w - host.mean() - t
+
+    return jax.lax.while_loop(cond, body, x)

@@ -1,0 +1,309 @@
+"""Compile-contract auditor over optimized HLO text (plus the roofline's
+collective byte accounting, promoted here from ``launch/hlo_analysis``).
+
+``compiled.cost_analysis()`` exposes FLOPs and bytes-accessed but NOT
+collective traffic — we parse the optimized HLO and sum the operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. Sizes are per-replica operand bytes, i.e. the payload a
+single device injects into the interconnect for that op (the standard
+roofline convention: collective_time ~= bytes / link_bw, treating ring
+algorithms' 2(n-1)/n factor as ~1).
+
+On top of the accounting sits the auditor: :func:`audit_executable` walks
+one AOT executable's optimized HLO and raises :class:`AuditError` (with the
+offending HLO lines as provenance) when a serving contract is broken:
+
+``hlo-host-sync``
+    A host round-trip inside a compiled step: infeed/outfeed, send/recv,
+    or a custom-call that either declares a side effect (``io_callback``,
+    ``jax.debug.*`` lower to these) or targets a host callback. Benign
+    backend custom-calls (CPU's ``TopK``) are side-effect-free and pass.
+``hlo-f64``
+    Any f64/c128 buffer — the pipeline is bf16-resident with f32
+    accumulation; a double sneaking in is always an accident.
+``hlo-corpus-promotion``
+    A low-precision (bf16/f16) corpus entering the executable as an f32
+    parameter: someone promoted the resident corpus before lowering.
+    (In-trace tile upcasts are the f32-accumulation contract and XLA may
+    legally hoist them; residency is audited at the program boundary.)
+``hlo-collective-budget``
+    Collective traffic above the declared byte budget. For sharded
+    serving steps the budget is the scorecard contract: per-shard top-K
+    scores + ids all-gathered plus two scalar psums —
+    :func:`scorecard_budget_bytes`.
+``hlo-peak-buffer``
+    ``memory_analysis().temp_size_in_bytes`` above the declared bound
+    (the materialized-similarity-tensor failure mode).
+
+This module is stdlib-only (no jax import): it must be importable by the
+lint CLI and CI without an accelerator runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    # Zero-width HLO types that legally appear in shape position.
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_PARAM_RE = re.compile(r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*\sparameter\(")
+_TARGET_RE = re.compile(r'custom_call_target="([^"]*)"')
+
+# Host-callback custom-call targets (jax callbacks / debug prints across
+# backends). Matched as substrings of custom_call_target.
+_CALLBACK_TARGETS = ("callback", "py_func", "host")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    """Bytes of one ``dtype[dims]`` HLO shape token; ``dims`` is the
+    comma-joined dim list ("" for a scalar ``[]``). Unknown dtypes raise —
+    a silent 0 would undercount collective traffic and let a budget audit
+    pass vacuously."""
+    if dtype not in _DTYPE_BYTES:
+        raise ValueError(f"unknown HLO dtype {dtype!r} in shape "
+                         f"{dtype}[{dims}] — add it to _DTYPE_BYTES")
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes per collective kind (+ 'total').
+
+    ``-done`` ops are skipped so async pairs aren't double counted; tuple
+    outputs count every element shape on the line before the op name."""
+    out: Dict[str, int] = defaultdict(int)
+    for kind, nbytes, _ in collective_lines(hlo_text):
+        out[kind] += nbytes
+        out["total"] += nbytes
+    return dict(out)
+
+
+def collective_lines(hlo_text: str) -> List[Tuple[str, int, str]]:
+    """Every collective op line as (kind, payload_bytes, hlo_line) — the
+    provenance-carrying form of :func:`collective_bytes`."""
+    out: List[Tuple[str, int, str]] = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "-done(" in stripped or "-done." in stripped:
+            continue
+        hit = None
+        for coll in _COLLECTIVES:
+            if f" {coll}(" in stripped or f" {coll}-start(" in stripped:
+                hit = coll
+                break
+        if hit is None:
+            continue
+        lhs = stripped.split(f" {hit}")[0]
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
+        out.append((hit, nbytes, stripped))
+    return out
+
+
+def flops_and_bytes(compiled) -> Dict[str, float]:
+    """Pull FLOPs / bytes-accessed out of compiled.cost_analysis() across
+    jax versions (dict vs list-of-dict)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    return {"hlo_flops": flops, "hlo_bytes": nbytes}
+
+
+def peak_buffer_bytes(compiled) -> float:
+    """Peak temporary-buffer footprint of a compiled executable.
+
+    ``temp_size_in_bytes`` is XLA's allocation for every intermediate the
+    program materializes — the number that blows up when a formulation
+    keeps a (B, N, L, T) similarity tensor live instead of streaming it.
+    Used by the reveal benchmark / tests to assert the dense serving step
+    stays under the materialized-intermediate threshold."""
+    return float(compiled.memory_analysis().temp_size_in_bytes)
+
+
+def memory_stats(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        try:
+            out[k] = float(getattr(ma, k))
+        except AttributeError:
+            pass
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The auditor
+# ---------------------------------------------------------------------------
+
+def scorecard_budget_bytes(batch: int, shards: int, topk: int) -> int:
+    """The one-shard_map pipeline's cross-shard traffic contract: per
+    shard, a (B, K) f32 score + (B, K) s32 gid scorecard all-gather, plus
+    two f32[B] scalar psums (revealed-cell and total-cell counts)."""
+    return 2 * batch * shards * topk * 4 + 2 * batch * 4
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditSpec:
+    """What one executable is allowed to do.
+
+    ``collective_budget``: max collective payload bytes (0 = none allowed,
+    None = unaudited — e.g. the host stage-1 path, whose corpus
+    all-gather is the documented exception). ``peak_bytes``: max
+    ``temp_size_in_bytes`` (None = unaudited). ``corpus_dtype`` +
+    ``corpus_elems``: the resident corpus's HLO dtype and element count,
+    for the boundary-residency rule (inactive unless the corpus is
+    bf16/f16)."""
+
+    collective_budget: Optional[int] = None
+    peak_bytes: Optional[int] = None
+    corpus_dtype: Optional[str] = None
+    corpus_elems: int = 0
+
+
+@dataclasses.dataclass
+class AuditReport:
+    label: str
+    collective_total: int
+    collective: Dict[str, int]
+    peak_bytes: Optional[float] = None
+
+
+class AuditError(RuntimeError):
+    """A compiled executable broke a serving contract. ``rule`` is the
+    machine-readable id; ``lines`` carry the offending HLO ops."""
+
+    def __init__(self, rule: str, label: str, detail: str,
+                 lines: Optional[List[str]] = None):
+        self.rule = rule
+        self.label = label
+        self.lines = list(lines or [])
+        prov = "".join(f"\n    {ln[:200]}" for ln in self.lines[:4])
+        more = (f"\n    ... and {len(self.lines) - 4} more"
+                if len(self.lines) > 4 else "")
+        super().__init__(f"[{rule}] {label}: {detail}{prov}{more}")
+
+
+def _host_sync_lines(hlo_text: str) -> List[str]:
+    out = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if any(f" {op}(" in stripped for op in
+               ("infeed", "outfeed", "send", "recv", "send-done",
+                "recv-done")):
+            out.append(stripped)
+            continue
+        if "custom-call" not in stripped:
+            continue
+        if "custom_call_has_side_effect=true" in stripped:
+            out.append(stripped)
+            continue
+        m = _TARGET_RE.search(stripped)
+        if m and any(pat in m.group(1).lower()
+                     for pat in _CALLBACK_TARGETS):
+            out.append(stripped)
+    return out
+
+
+def _f64_lines(hlo_text: str) -> List[str]:
+    return [ln.strip() for ln in hlo_text.splitlines()
+            if ("f64[" in ln or "c128[" in ln) and "=" in ln]
+
+
+def _entry_lines(hlo_text: str) -> List[str]:
+    """The ENTRY computation's op lines only. Fusion computations carry
+    their own ``parameter(N)`` lines for every operand — including legally
+    hoisted in-trace f32 tiles — so boundary-residency rules must not see
+    them."""
+    out, inside = [], False
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            inside = True
+            continue
+        if inside:
+            if line.startswith("}"):
+                inside = False
+                continue
+            out.append(line)
+    return out
+
+
+def _promoted_param_lines(hlo_text: str, corpus_elems: int) -> List[str]:
+    out = []
+    for line in _entry_lines(hlo_text):
+        m = _PARAM_RE.search(line)
+        if m is None or m.group(1) != "f32":
+            continue
+        if _shape_bytes("f32", m.group(2)) >= corpus_elems * 4:
+            out.append(line.strip())
+    return out
+
+
+def audit_hlo_text(hlo_text: str, spec: AuditSpec,
+                   label: str = "<hlo>") -> AuditReport:
+    """Run every text-level contract rule; raises :class:`AuditError` on
+    the first violation, returns an :class:`AuditReport` otherwise."""
+    bad = _host_sync_lines(hlo_text)
+    if bad:
+        raise AuditError(
+            "hlo-host-sync", label,
+            "host callback / infeed-outfeed / custom-call sync inside a "
+            "compiled step", bad)
+    bad = _f64_lines(hlo_text)
+    if bad:
+        raise AuditError("hlo-f64", label,
+                         "f64/c128 buffer in a bf16/f32 pipeline", bad)
+    if spec.corpus_dtype in ("bf16", "f16") and spec.corpus_elems > 0:
+        bad = _promoted_param_lines(hlo_text, spec.corpus_elems)
+        if bad:
+            raise AuditError(
+                "hlo-corpus-promotion", label,
+                f"{spec.corpus_dtype} corpus ({spec.corpus_elems} elems) "
+                "enters the program as a full-size f32 parameter", bad)
+    lines = collective_lines(hlo_text)
+    total = sum(b for _, b, _ in lines)
+    if spec.collective_budget is not None and total > spec.collective_budget:
+        raise AuditError(
+            "hlo-collective-budget", label,
+            f"collective traffic {total} B exceeds the budget "
+            f"{spec.collective_budget} B",
+            [ln for _, _, ln in lines])
+    per_kind: Dict[str, int] = defaultdict(int)
+    for kind, b, _ in lines:
+        per_kind[kind] += b
+    return AuditReport(label=label, collective_total=total,
+                       collective=dict(per_kind))
+
+
+def audit_executable(compiled, spec: AuditSpec = AuditSpec(),
+                     label: str = "<executable>") -> AuditReport:
+    """Text rules plus the peak-buffer bound on a compiled executable."""
+    report = audit_hlo_text(compiled.as_text(), spec, label)
+    try:
+        report.peak_bytes = peak_buffer_bytes(compiled)
+    except Exception:
+        report.peak_bytes = None     # backend without memory_analysis
+    if (spec.peak_bytes is not None and report.peak_bytes is not None
+            and report.peak_bytes > spec.peak_bytes):
+        raise AuditError(
+            "hlo-peak-buffer", label,
+            f"peak temp buffers {report.peak_bytes:.0f} B exceed the "
+            f"declared bound {spec.peak_bytes} B")
+    return report

@@ -1,0 +1,443 @@
+"""Trace-safety AST lint: repo-specific rules over ``ast``, no new deps.
+
+Every rule encodes a bug class this repo has actually shipped (or nearly
+shipped) — see CONTRACTS.md for the catalog. Run as::
+
+    PYTHONPATH=src python -m repro.analysis.lint src/          # gate
+    PYTHONPATH=src python -m repro.analysis.lint tests/ --report-only
+
+Rules
+-----
+``prng-aliasing``
+    ``jax.random.key(seed + x)`` / ``PRNGKey(seed + x)`` with a
+    non-constant arithmetic argument: nearby seeds alias streams across
+    engines/tests. Derive with ``jax.random.fold_in(key(seed), x)``.
+``traced-truthiness``
+    Python ``if``/``while``/``assert``/ternary on a jnp/lax call result
+    inside a traced function — a TracerBoolConversionError at best, a
+    silently-wrong constant at worst.
+``traced-cast``
+    ``float()``/``int()``/``bool()``/``.item()`` on a jnp/lax call result
+    inside a traced function.
+``host-sync-in-trace``
+    ``np.asarray``/``np.array``/``jax.device_get``/``block_until_ready``
+    inside a traced function (round-loop bodies, jitted steps): a forced
+    device sync (or trace error) in compiled code.
+``time-in-trace``
+    ``time.time()``/``perf_counter()``/``monotonic()`` inside a traced
+    function — traces once, constant-folds forever.
+``kernel-assert``
+    Bare ``assert`` in ``kernels/``: stripped under ``python -O`` and
+    useless inside a traced kernel. Raise ``ValueError`` at the host
+    entry point instead.
+``mutable-default``
+    Mutable default argument (list/dict/set literal or constructor).
+``lockset``
+    From :mod:`repro.analysis.locks`: a thread-shared engine attribute
+    with no declared guard (files declaring ``THREAD_ENTRY_POINTS``).
+
+A "traced function" is one passed to ``lax.while_loop/fori_loop/scan/
+cond/switch/map``, ``jit``/``vmap``/``pmap``/``shard_map``/
+``pallas_call`` (or decorated with the jit family), plus everything
+nested inside one.
+
+Suppression: append ``# repro: noqa-<rule>`` to the offending line. The
+gate counts suppressions — CI runs with ``--max-suppressions 0`` plus the
+committed (empty) baseline ``src/repro/analysis/lint_baseline.txt``, so a
+suppression needs an explicit baseline entry to merge.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+RULES = {
+    "prng-aliasing": "key(seed + x) aliases streams; use fold_in",
+    "traced-truthiness": "Python truthiness on a traced value",
+    "traced-cast": "float()/int()/bool()/.item() on a traced value",
+    "host-sync-in-trace": "np.asarray/device_get/block_until_ready in trace",
+    "time-in-trace": "wall-clock read under trace",
+    "kernel-assert": "bare assert in kernels/ (raise ValueError)",
+    "mutable-default": "mutable default argument",
+    "lockset": "thread-shared attribute without a declared guard",
+}
+
+NOQA = "# repro: noqa-"
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "lint_baseline.txt")
+
+_TRACER_CALLEES = {"while_loop", "fori_loop", "scan", "cond", "switch",
+                   "map", "jit", "pjit", "vmap", "pmap", "shard_map",
+                   "pallas_call", "checkpoint", "remat", "named_scope"}
+_JIT_FAMILY = {"jit", "pjit", "vmap", "pmap", "shard_map", "checkpoint",
+               "remat", "custom_vjp", "custom_jvp"}
+# Which positional args of each control-flow tracer are function-valued.
+_FN_ARG_SLOTS = {"while_loop": (0, 1), "fori_loop": (2,), "scan": (0,),
+                 "map": (0,), "cond": (1, 2), "switch": None}
+# jnp/lax functions that return genuine Python values at trace time.
+_HOST_SAFE = {"issubdtype", "iinfo", "finfo", "result_type",
+              "promote_types", "can_cast", "isdtype", "dtype", "ndim",
+              "broadcast_shapes"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str
+    line: int
+    rule: str
+    msg: str
+    suppressed: bool = False
+
+    def render(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return f"{self.path}:{self.line}: [{self.rule}]{tag} {self.msg}"
+
+
+def _chain(node: ast.AST) -> Tuple[str, ...]:
+    """Dotted-name chain of an expression: jax.lax.scan -> (jax,lax,scan)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    else:
+        parts.append("?")
+    return tuple(reversed(parts))
+
+
+def _is_device_call(node: ast.AST) -> bool:
+    """A call rooted at jnp / lax / jax.numpy / jax.lax whose result is a
+    traced array (not a host-safe dtype/shape query)."""
+    if not isinstance(node, ast.Call):
+        return False
+    c = _chain(node.func)
+    if c[-1] in _HOST_SAFE:
+        return False
+    return (c[0] in ("jnp", "lax")
+            or (len(c) >= 2 and c[0] == "jax" and c[1] in ("numpy", "lax")))
+
+
+def _set_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._repro_parent = node  # type: ignore[attr-defined]
+
+
+_FUNC = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _collect_traced(tree: ast.Module) -> Set[ast.AST]:
+    """The set of FunctionDef nodes whose bodies run under jax tracing
+    (see module docstring for the definition)."""
+    defs_by_scope: Dict[Optional[ast.AST], Dict[str, ast.AST]] = {}
+    scope_of: Dict[ast.AST, Optional[ast.AST]] = {}
+
+    def walk(node: ast.AST, scope: Optional[ast.AST]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, _FUNC):
+                defs_by_scope.setdefault(scope, {})[child.name] = child
+                scope_of[child] = scope
+                walk(child, child)
+            else:
+                walk(child, scope)
+
+    walk(tree, None)
+
+    def resolve(name: str, scope: Optional[ast.AST]) -> Optional[ast.AST]:
+        while True:
+            fn = defs_by_scope.get(scope, {}).get(name)
+            if fn is not None:
+                return fn
+            if scope is None:
+                return None
+            scope = scope_of.get(scope)
+
+    traced: Set[ast.AST] = set()
+
+    def mark(fn: ast.AST) -> None:
+        if fn in traced:
+            return
+        traced.add(fn)
+        for child in ast.walk(fn):          # nested defs trace too
+            if isinstance(child, _FUNC):
+                traced.add(child)
+
+    # Seed: decorators of the jit family.
+    for fn in scope_of:
+        for dec in fn.decorator_list:
+            target = dec
+            if (isinstance(dec, ast.Call) and dec.args
+                    and _chain(dec.func)[-1] == "partial"):
+                target = dec.args[0]
+            elif isinstance(dec, ast.Call):
+                target = dec.func
+            if _chain(target)[-1] in _JIT_FAMILY:
+                mark(fn)
+
+    # Seed: function-valued arguments of tracer calls.
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee_chain = _chain(node.func)
+        callee = callee_chain[-1]
+        if callee not in _TRACER_CALLEES:
+            continue
+        if callee in ("map", "cond", "switch", "checkpoint", "remat") and (
+                len(callee_chain) < 2
+                or callee_chain[0] not in ("jax", "lax")):
+            continue          # builtin map() / a local named cond(), etc.
+        slots = _FN_ARG_SLOTS.get(callee, (0,))
+        enclosing = node
+        while (enclosing is not None
+               and not isinstance(enclosing, _FUNC)):
+            enclosing = getattr(enclosing, "_repro_parent", None)
+        args = (node.args if slots is None
+                else [node.args[i] for i in slots if i < len(node.args)])
+        for arg in args:
+            if isinstance(arg, ast.Name):
+                fn = resolve(arg.id, enclosing)
+                if fn is not None:
+                    mark(fn)
+
+    # Deliberately NOT transitive through plain calls: helpers invoked
+    # from traced code often do legitimate host math on static values
+    # (shape/offset tables via np) — flagging those drowns the signal.
+    return traced
+
+
+def _prng_violations(tree: ast.Module, path: str) -> List[Violation]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or not node.args:
+            continue
+        c = _chain(node.func)
+        is_key = (c[-1] == "PRNGKey"
+                  or (c[-1] == "key" and len(c) >= 2
+                      and c[-2] in ("random", "jr")))
+        if not is_key:
+            continue
+        arg = node.args[0]
+        if not isinstance(arg, ast.BinOp):
+            continue
+        if any(isinstance(leaf, (ast.Name, ast.Attribute, ast.Call))
+               for leaf in ast.walk(arg)):
+            out.append(Violation(
+                path, node.lineno, "prng-aliasing",
+                "key(seed + x) aliases PRNG streams across nearby seeds; "
+                "use jax.random.fold_in(jax.random.key(seed), x)"))
+    return out
+
+
+def _mutable_default_violations(tree: ast.Module,
+                                path: str) -> List[Violation]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, _FUNC):
+            continue
+        defaults = list(node.args.defaults) + [
+            d for d in node.args.kw_defaults if d is not None]
+        for d in defaults:
+            mutable = isinstance(d, (ast.List, ast.Dict, ast.Set)) or (
+                isinstance(d, ast.Call) and isinstance(d.func, ast.Name)
+                and d.func.id in ("list", "dict", "set"))
+            if mutable:
+                out.append(Violation(
+                    path, d.lineno, "mutable-default",
+                    f"mutable default argument in {node.name}(); "
+                    "default to None and build inside"))
+    return out
+
+
+def _kernel_assert_violations(tree: ast.Module,
+                              path: str) -> List[Violation]:
+    if f"{os.sep}kernels{os.sep}" not in os.path.abspath(path):
+        return []
+    return [Violation(path, node.lineno, "kernel-assert",
+                      "bare assert in kernels/ vanishes under python -O; "
+                      "raise ValueError")
+            for node in ast.walk(tree) if isinstance(node, ast.Assert)]
+
+
+def _traced_body_violations(tree: ast.Module, path: str) -> List[Violation]:
+    out: List[Violation] = []
+    traced = _collect_traced(tree)
+    seen: Set[Tuple[int, str]] = set()
+
+    def add(line: int, rule: str, msg: str) -> None:
+        if (line, rule) not in seen:
+            seen.add((line, rule))
+            out.append(Violation(path, line, rule, msg))
+
+    for fn in traced:
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While, ast.IfExp, ast.Assert)):
+                test = node.test
+                for sub in ast.walk(test):
+                    if _is_device_call(sub):
+                        add(node.lineno, "traced-truthiness",
+                            f"Python truthiness on {_dot(sub)} result in "
+                            f"traced {fn.name}(); use jnp.where/lax.cond")
+            if not isinstance(node, ast.Call):
+                continue
+            c = _chain(node.func)
+            if (c[-1] in ("float", "int", "bool") and len(c) == 1
+                    and len(node.args) == 1
+                    and _is_device_call(node.args[0])):
+                add(node.lineno, "traced-cast",
+                    f"{c[-1]}() on a traced value in {fn.name}()")
+            if (c[-1] == "item" and isinstance(node.func, ast.Attribute)
+                    and not node.args):
+                add(node.lineno, "traced-cast",
+                    f".item() forces a host sync in traced {fn.name}()")
+            if (c[-1] in ("asarray", "array", "copy")
+                    and c[0] in ("np", "numpy")) or \
+                    (c[-1] == "device_get" and c[0] == "jax") or \
+                    c[-1] == "block_until_ready":
+                add(node.lineno, "host-sync-in-trace",
+                    f"{'.'.join(c)} in traced {fn.name}() forces a host "
+                    "round-trip")
+            if c[0] == "time" and c[-1] in ("time", "perf_counter",
+                                            "monotonic"):
+                add(node.lineno, "time-in-trace",
+                    f"{'.'.join(c)}() in traced {fn.name}() constant-folds "
+                    "at trace time")
+    return out
+
+
+def _dot(call: ast.AST) -> str:
+    return ".".join(_chain(call.func)) if isinstance(call, ast.Call) else "?"
+
+
+def lint_source(src: str, path: str) -> List[Violation]:
+    """All rule violations for one file's source, with per-line noqa
+    suppression applied (suppressed violations are returned flagged, so
+    the gate can count them)."""
+    tree = ast.parse(src, filename=path)
+    _set_parents(tree)
+    raw = (_prng_violations(tree, path)
+           + _mutable_default_violations(tree, path)
+           + _kernel_assert_violations(tree, path)
+           + _traced_body_violations(tree, path))
+    srclines = src.splitlines()
+    out = []
+    for v in raw:
+        line = srclines[v.line - 1] if 0 < v.line <= len(srclines) else ""
+        out.append(dataclasses.replace(v, suppressed=NOQA + v.rule in line))
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule))
+
+
+def lint_file(path: str) -> List[Violation]:
+    with open(path, "r", encoding="utf-8") as f:
+        src = f.read()
+    violations = lint_source(src, path)
+    if "THREAD_ENTRY_POINTS" in src:
+        from repro.analysis import locks
+        violations += locks.check_source(src, path)
+    return violations
+
+
+def iter_py_files(paths: Sequence[str],
+                  include_fixtures: bool = False) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)                      # explicit file: always lint
+            continue
+        for root, dirs, files in os.walk(p):
+            if not include_fixtures and "fixtures" in root.split(os.sep):
+                dirs[:] = []
+                continue
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    out.append(os.path.join(root, f))
+    return sorted(set(out))
+
+
+def load_baseline(path: str) -> Set[Tuple[str, str]]:
+    """Baseline entries are ``<path-suffix>:<rule>`` lines ('#' comments
+    allowed); a violation matches when its rule matches and its path ends
+    with the entry's path suffix."""
+    entries: Set[Tuple[str, str]] = set()
+    if not os.path.exists(path):
+        return entries
+    with open(path, "r", encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            fpath, _, rule = line.rpartition(":")
+            entries.add((fpath.replace("\\", "/"), rule))
+    return entries
+
+
+def _baselined(v: Violation, baseline: Set[Tuple[str, str]]) -> bool:
+    vpath = v.path.replace(os.sep, "/")
+    return any(rule == v.rule and vpath.endswith(fpath)
+               for fpath, rule in baseline)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repo-specific trace-safety + thread-lockset lint")
+    ap.add_argument("paths", nargs="*", default=["src"])
+    ap.add_argument("--report-only", action="store_true",
+                    help="print violations but exit 0")
+    ap.add_argument("--baseline", default=None,
+                    help="known-violation file (path:rule lines); "
+                    f"default {DEFAULT_BASELINE}")
+    ap.add_argument("--max-suppressions", type=int, default=None,
+                    help="fail when more than N '# repro: noqa-*' "
+                    "suppressions are in effect")
+    ap.add_argument("--include-fixtures", action="store_true",
+                    help="also lint the analysis fixtures (each one "
+                    "deliberately violates a rule)")
+    ap.add_argument("--json", action="store_true", dest="as_json")
+    args = ap.parse_args(argv)
+
+    baseline = load_baseline(args.baseline or DEFAULT_BASELINE)
+    files = iter_py_files(args.paths or ["src"], args.include_fixtures)
+    active: List[Violation] = []
+    suppressed: List[Violation] = []
+    baselined: List[Violation] = []
+    for path in files:
+        for v in lint_file(path):
+            if v.suppressed:
+                suppressed.append(v)
+            elif _baselined(v, baseline):
+                baselined.append(v)
+            else:
+                active.append(v)
+
+    if args.as_json:
+        print(json.dumps({
+            "files": len(files),
+            "violations": [dataclasses.asdict(v) for v in active],
+            "suppressed": [dataclasses.asdict(v) for v in suppressed],
+            "baselined": [dataclasses.asdict(v) for v in baselined],
+        }, indent=1))
+    else:
+        for v in active + suppressed:
+            print(v.render())
+        print(f"{len(files)} files: {len(active)} violation(s), "
+              f"{len(suppressed)} suppressed, {len(baselined)} baselined")
+
+    failed = bool(active)
+    if (args.max_suppressions is not None
+            and len(suppressed) > args.max_suppressions):
+        print(f"suppression budget exceeded: {len(suppressed)} > "
+              f"{args.max_suppressions}")
+        failed = True
+    if args.report_only:
+        return 0
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

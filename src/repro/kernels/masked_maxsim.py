@@ -63,8 +63,13 @@ def masked_maxsim(doc_embs: jax.Array, doc_tok_mask: jax.Array,
     bt = block_t if block_t > 0 else T
     bt = min(bt, T)
     bl = min(block_l, L)
-    assert N % bn == 0 and T % bt == 0 and L % bl == 0
-    assert tile_mask.shape == (N // bn, T // bt), (tile_mask.shape, N // bn, T // bt)
+    if N % bn or T % bt or L % bl:
+        raise ValueError(f"masked_maxsim blocks must tile the operands: "
+                         f"(N,T,L)=({N},{T},{L}) vs (bn,bt,bl)="
+                         f"({bn},{bt},{bl})")
+    if tile_mask.shape != (N // bn, T // bt):
+        raise ValueError(f"tile_mask must be (N//bn, T//bt)="
+                         f"({N // bn},{T // bt}); got {tile_mask.shape}")
     n_l_blocks = L // bl
 
     grid = (N // bn, T // bt, n_l_blocks)

@@ -63,7 +63,10 @@ def maxsim(doc_embs: jax.Array, doc_tok_mask: jax.Array, queries: jax.Array,
     bt = block_t if block_t > 0 else T
     bt = min(bt, T)
     bl = min(block_l, L)
-    assert N % bn == 0 and T % bt == 0 and L % bl == 0, (N, T, L, bn, bt, bl)
+    if N % bn or T % bt or L % bl:
+        raise ValueError(f"maxsim blocks must tile the operands: "
+                         f"(N,T,L)=({N},{T},{L}) vs (bn,bt,bl)="
+                         f"({bn},{bt},{bl})")
     n_l_blocks = L // bl
 
     grid = (N // bn, T // bt, n_l_blocks)

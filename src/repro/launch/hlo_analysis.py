@@ -1,100 +1,13 @@
-"""HLO-text analysis: collective byte accounting for the roofline.
-
-``compiled.cost_analysis()`` exposes FLOPs and bytes-accessed but NOT
-collective traffic — we parse the optimized HLO and sum the operand sizes of
-every all-gather / all-reduce / reduce-scatter / all-to-all /
-collective-permute. Sizes are per-replica operand bytes, i.e. the payload a
-single device injects into the interconnect for that op (the standard
-roofline convention: collective_time ~= bytes / link_bw, treating ring
-algorithms' 2(n-1)/n factor as ~1).
-"""
+"""Back-compat shim: the HLO accounting moved to
+:mod:`repro.analysis.hlo_audit` (where the compile-contract auditor lives);
+this module re-exports the original surface for the roofline/dryrun
+harnesses and older imports."""
 from __future__ import annotations
 
-import re
-from collections import defaultdict
-from typing import Dict
+from repro.analysis.hlo_audit import (_COLLECTIVES, _DTYPE_BYTES,  # noqa: F401
+                                      _SHAPE_RE, _shape_bytes,
+                                      collective_bytes, flops_and_bytes,
+                                      memory_stats, peak_buffer_bytes)
 
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
-    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16,
-}
-
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-# e.g.  %x = bf16[2,16,128]{2,1,0} all-gather(...)
-_OP_RE = re.compile(
-    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
-    + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
-
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-
-
-def _shape_bytes(dtype: str, dims: str) -> int:
-    if dtype not in _DTYPE_BYTES:
-        return 0
-    n = 1
-    if dims:
-        for d in dims.split(","):
-            n *= int(d)
-    return n * _DTYPE_BYTES[dtype]
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Sum output-shape bytes per collective kind (+ 'total').
-
-    ``-done`` ops are skipped so async pairs aren't double counted; tuple
-    outputs count every element shape on the line before the op name."""
-    out: Dict[str, int] = defaultdict(int)
-    for line in hlo_text.splitlines():
-        stripped = line.strip()
-        if "-done(" in stripped or "-done." in stripped:
-            continue
-        hit = None
-        for coll in _COLLECTIVES:
-            if f" {coll}(" in stripped or f" {coll}-start(" in stripped:
-                hit = coll
-                break
-        if hit is None:
-            continue
-        lhs = stripped.split(f" {hit}")[0]
-        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
-        out[hit] += nbytes
-        out["total"] += nbytes
-    return dict(out)
-
-
-def flops_and_bytes(compiled) -> Dict[str, float]:
-    """Pull FLOPs / bytes-accessed out of compiled.cost_analysis() across
-    jax versions (dict vs list-of-dict)."""
-    ca = compiled.cost_analysis()
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0] if ca else {}
-    flops = float(ca.get("flops", 0.0))
-    nbytes = float(ca.get("bytes accessed", 0.0))
-    return {"hlo_flops": flops, "hlo_bytes": nbytes}
-
-
-def peak_buffer_bytes(compiled) -> float:
-    """Peak temporary-buffer footprint of a compiled executable.
-
-    ``temp_size_in_bytes`` is XLA's allocation for every intermediate the
-    program materializes — the number that blows up when a formulation
-    keeps a (B, N, L, T) similarity tensor live instead of streaming it.
-    Used by the reveal benchmark / tests to assert the dense serving step
-    stays under the materialized-intermediate threshold."""
-    return float(compiled.memory_analysis().temp_size_in_bytes)
-
-
-def memory_stats(compiled) -> Dict[str, float]:
-    ma = compiled.memory_analysis()
-    out = {}
-    for k in ("argument_size_in_bytes", "output_size_in_bytes",
-              "temp_size_in_bytes", "generated_code_size_in_bytes",
-              "alias_size_in_bytes"):
-        try:
-            out[k] = float(getattr(ma, k))
-        except AttributeError:
-            pass
-    return out
+__all__ = ["collective_bytes", "flops_and_bytes", "memory_stats",
+           "peak_buffer_bytes"]

@@ -103,8 +103,15 @@ def _shard_global_ids(cand, c_loc, every, valid_docs=None):
 
 
 def _merge_scorecards(scores, gids, every, topk):
-    """All-gather (B, N_loc) per-shard scorecards and take the global top-K.
+    """All-gather per-shard scorecards and take the global top-K.
     The only cross-shard traffic in the corpus-resident flavors.
+
+    Each shard first reduces its (B, N_loc) scorecard to its local top-K —
+    a slot that does not make a shard's own top-K cannot make the global
+    one — so the gather moves exactly (B, K) scores + ids per shard
+    whatever the candidate width. That makes the serving engine's audited
+    collective budget (``analysis.hlo_audit.scorecard_budget_bytes``) a
+    structural property of this merge, not an optimizer accident.
 
     Pad entries (gid < 0: -1-padded slots, ragged-tail clamps, short
     per-shard top-K lists) are masked to the -inf sentinel HERE, not left
@@ -112,6 +119,10 @@ def _merge_scorecards(scores, gids, every, topk):
     to ship its pads' raw scores into the gather, where a 0.0 pad could
     outrank a genuinely negative real score. Result sets with fewer than
     ``topk`` valid candidates overall return -1 ids for the shortfall."""
+    scores = jnp.where(gids >= 0, scores, _NEG)
+    if scores.shape[1] > topk:
+        scores, pos = jax.lax.top_k(scores, topk)
+        gids = jnp.take_along_axis(gids, pos, axis=1)
     all_scores = jax.lax.all_gather(scores, every, axis=1, tiled=True)
     all_gids = jax.lax.all_gather(gids, every, axis=1, tiled=True)
     all_scores = jnp.where(all_gids >= 0, all_scores, _NEG)

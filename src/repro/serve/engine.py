@@ -41,6 +41,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.hlo_audit import (AuditSpec, audit_executable,
+                                      scorecard_budget_bytes)
 from repro.core.frontier import FrontierState
 from repro.dist.fault import (ChaosKill, DeadlineBatcher, FaultPlan,
                               apply_delay)
@@ -178,6 +180,17 @@ class EngineConfig:
     degrade_alpha_scales: Tuple[float, ...] = (2.0, 4.0, 8.0)
     degrade_round_caps: Tuple[int, ...] = (0, 8, 4)
     seed: int = 0
+    # Compile-contract auditing (repro.analysis.hlo_audit): when set,
+    # warmup() walks every AOT executable's optimized HLO and raises
+    # AuditError (with op provenance) on any host sync, f64 math,
+    # f32-resident corpus promotion, over-budget collective traffic
+    # (scorecard merge + two scalar psums is the sharded contract) or
+    # peak temp buffers past ``audit_peak_bytes`` (0 = a generous
+    # corpus-derived bound). ``audit_require_bf16`` additionally treats a
+    # non-bf16 corpus itself as a promotion-contract violation.
+    audit: bool = False
+    audit_peak_bytes: int = 0
+    audit_require_bf16: bool = False
 
 
 class AdmissionRejected(RuntimeError):
@@ -606,9 +619,18 @@ class RetrievalEngine:
             return self._compile(key)
 
     def _compile(self, key: tuple):
-        exe = self._exec.get(key)
-        if exe is not None:
-            return exe
+        with self._exec_lock:
+            exe = self._exec.get(key)
+            if exe is not None:
+                return exe
+            exe = self._build(key)
+            self._exec[key] = exe
+        self.metrics.record_compile(key, after_warmup=self._warmed)
+        return exe
+
+    def _build(self, key: tuple):
+        """Lower + AOT-compile the executable for one bucket key (no cache
+        interaction — ``_compile`` owns the cache and its lock)."""
         cfg = self.cfg
         B = cfg.batch_size
         M = self.corpus_embs.shape[2]
@@ -740,8 +762,6 @@ class RetrievalEngine:
             exe = jax.jit(stage1).lower(*args).compile()
         else:
             raise KeyError(key)
-        self._exec[key] = exe
-        self.metrics.record_compile(key, after_warmup=self._warmed)
         return exe
 
     def _autotune_dims(self) -> List[Tuple[str, Dict[str, int]]]:
@@ -833,7 +853,68 @@ class RetrievalEngine:
         if cfg.continuous:
             self._executable(("stream", *self._stream_bucket))
         self._warmed = True
+        if cfg.audit:
+            self.audit()
         return self.compiled_buckets
+
+    # -- compile-contract audit -------------------------------------------
+
+    _HLO_DTYPES = {"bfloat16": "bf16", "float16": "f16", "float32": "f32",
+                   "float64": "f64"}
+
+    def _audit_spec(self, key: tuple) -> AuditSpec:
+        """The per-bucket compile contract ``audit()`` asserts.
+
+        Collective budget: a mesh-resident step/routed executable may move
+        exactly the scorecard merge (per-shard (scores, gids) top-K lists)
+        plus two scalar-per-query psums across shards —
+        ``scorecard_budget_bytes(B, S, max_k)``; candidate embeddings and
+        reveal traffic must stay shard-local. Host stage-1 over a sharded
+        corpus legitimately all-gathers the index (the documented
+        exemption: candidate-less traffic belongs on the routed path), so
+        that one key is unbudgeted. Everything off-mesh gets budget 0.
+        """
+        cfg = self.cfg
+        corpus_dtype = self._HLO_DTYPES.get(str(self.corpus_embs.dtype))
+        if cfg.audit_require_bf16:
+            # Declare the contract dtype rather than the observed one: a
+            # corpus already resident in f32 then trips the promotion rule
+            # on its own (corpus-sized f32) entry parameters.
+            corpus_dtype = "bf16"
+        corpus_elems = int(np.prod(self.corpus_embs.shape))
+        corpus_bytes = corpus_elems * self.corpus_embs.dtype.itemsize
+        meshed = self.corpus.mesh is not None
+        if meshed:
+            # Optimized HLO is per-device SPMD: entry parameters carry
+            # shard-local shapes, so the promotion threshold must too.
+            corpus_elems //= max(self.corpus.n_shards, 1)
+        if key[0] in ("step", "routed") and meshed:
+            budget = scorecard_budget_bytes(cfg.batch_size,
+                                            self.corpus.n_shards, cfg.max_k)
+        elif key[0] == "stage1" and meshed:
+            budget = None
+        else:
+            budget = 0
+        peak = cfg.audit_peak_bytes or (8 * corpus_bytes + (256 << 20))
+        return AuditSpec(collective_budget=budget, peak_bytes=peak,
+                         corpus_dtype=corpus_dtype,
+                         corpus_elems=corpus_elems)
+
+    def audit(self) -> Dict[tuple, Any]:
+        """Run the compile-contract auditor over every compiled bucket:
+        no host callbacks / infeed / outfeed, no f64, no f32-resident
+        corpus promotion (bf16 corpora), collective bytes within the
+        scorecard budget, peak temp buffers bounded. Raises
+        :class:`repro.analysis.hlo_audit.AuditError` with op provenance on
+        the first violated contract; returns ``{bucket key: AuditReport}``
+        when every executable passes."""
+        with self._exec_lock:
+            items = sorted(self._exec.items())
+        reports: Dict[tuple, Any] = {}
+        for key, exe in items:
+            reports[key] = audit_executable(exe, self._audit_spec(key),
+                                            label=repr(key))
+        return reports
 
     @property
     def _stream_bucket(self) -> Tuple[int, int]:
@@ -1138,6 +1219,58 @@ class RetrievalEngine:
 _STOP = object()
 
 
+# -- static thread-safety contract (repro.analysis.locks) --------------------
+# The lockset linter roots one attribute-access set per thread type at these
+# methods (closing over ``self.*`` method references) and fails any attribute
+# shared by >= 2 thread types that is neither in GUARDED_BY nor consistently
+# accessed under one ``with self.<lock>:``.
+THREAD_ENTRY_POINTS = {
+    "caller": ("submit", "poll", "drain", "stop", "start", "warmup",
+               "future", "next_expiry", "autotune", "audit",
+               "set_shard_health", "fail_shard", "restore_shard",
+               "shard_health"),
+    "admit": ("_admit_loop", "_guard"),
+    "dispatch": ("_dispatch_loop", "_guard"),
+    "stream": ("_stream_loop", "_guard"),
+    "supervisor": ("_pre_restart", "_supervision_exhausted", "_spawn"),
+}
+
+# Attribute -> its guard. A lock name ("_done_cv", "_exec_lock", ...) is
+# VERIFIED: every write outside __init__ must sit under ``with self.<lock>``.
+# The mode strings document guards the linter cannot check lexically:
+#   internal — the object locks itself (DeadlineBatcher, EngineMetrics);
+#   atomic   — single CPython-atomic pointer swap, readers tolerate either
+#              value (the supervisor handle);
+#   ordered  — writes happen-before the reading thread starts (start()'s
+#              thread bookkeeping, supervisor-callback state mutated only
+#              while the watched thread is dead) or after it joins;
+#   init     — written once before any serving thread exists (warmup flag).
+GUARDED_BY = {
+    "_futures": "_done_cv",
+    "_submitted": "_done_cv",
+    "_finished": "_done_cv",
+    "_thread_exc": "_done_cv",
+    "_completed": "_completed_lock",
+    "_delivered_rids": "_completed_lock",
+    "_disp_inflight": "_inflight_lock",
+    "_inflight": "_inflight_lock",
+    "_stream_q": "_work_cv",
+    "_service_ema": "_state_lock",
+    "_healthy": "_health_lock",
+    "_exec": "_exec_lock",
+    "_batcher": "internal",
+    "_supervisor": "atomic",
+    "_admit_holding": "ordered",
+    "_harvested": "ordered",
+    "_stream_slots": "ordered",
+    "_targets": "ordered",
+    "_thread_by_name": "ordered",
+    "_threads": "ordered",
+    "_started": "ordered",
+    "_warmed": "init",
+}
+
+
 class AsyncRetrievalEngine(RetrievalEngine):
     """Async continuous-serving runtime over the same compiled buckets.
 
@@ -1282,10 +1415,10 @@ class AsyncRetrievalEngine(RetrievalEngine):
                                exc: Optional[BaseException]) -> None:
         """Restart budget spent: escalate to the unsupervised engine's
         loud thread-death failure."""
-        self._thread_exc = exc if exc is not None else RuntimeError(
-            f"{name} died with its restart budget exhausted")
-        self._stop_evt.set()
         with self._done_cv:
+            self._thread_exc = exc if exc is not None else RuntimeError(
+                f"{name} died with its restart budget exhausted")
+            self._stop_evt.set()
             self._done_cv.notify_all()
 
     def stop(self) -> None:
@@ -1326,14 +1459,15 @@ class AsyncRetrievalEngine(RetrievalEngine):
                 self._supervisor.note_failure(name, e)
                 return
             # Unsupervised (or stopping): propagate to drain()/stop().
-            self._thread_exc = e
-            self._stop_evt.set()
             with self._done_cv:
+                self._thread_exc = e
+                self._stop_evt.set()
                 self._done_cv.notify_all()
 
     def _raise_if_failed(self) -> None:
-        if self._thread_exc is not None:
+        with self._done_cv:
             exc, self._thread_exc = self._thread_exc, None
+        if exc is not None:
             raise RuntimeError("serving thread died") from exc
 
     # -- fault injection ---------------------------------------------------
@@ -1365,7 +1499,9 @@ class AsyncRetrievalEngine(RetrievalEngine):
             with self._work_cv:
                 return (len(self._stream_q) + B - 1) // B
         queued = (len(self._batcher) + B - 1) // B
-        return queued + self._prep_q.qsize() + self._inflight
+        with self._inflight_lock:
+            inflight = self._inflight
+        return queued + self._prep_q.qsize() + inflight
 
     def submit(self, request: Request) -> int:
         if self.cfg.continuous and not self._started:

@@ -1,0 +1,269 @@
+"""ISSUE 9 compile-contract auditor (repro.analysis.hlo_audit).
+
+Unit rules run over synthetic HLO text; the engine cases warm a REAL
+serving engine under ``EngineConfig(audit=True)`` and pin the paper-level
+contract: a mesh-resident serving step's only cross-shard traffic is the
+scorecard merge — per-shard top-K (scores, gids) all-gathers plus two
+scalar psums, exactly :func:`scorecard_budget_bytes` — no compiled step
+ever syncs with the host, and a bf16 corpus never enters an executable
+as a full-size f32 parameter. Mesh engines run in device subprocesses
+(tests/_subproc.py)."""
+import numpy as np
+import pytest
+
+from _subproc import run_in_subprocess
+from repro.analysis.hlo_audit import (AuditError, AuditSpec, _shape_bytes,
+                                      audit_hlo_text, collective_bytes,
+                                      scorecard_budget_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Shape / byte accounting
+# ---------------------------------------------------------------------------
+
+def test_shape_bytes_scalar_vector_and_zero_width():
+    assert _shape_bytes("f32", "") == 4            # scalar f32[]
+    assert _shape_bytes("pred", "") == 1
+    assert _shape_bytes("bf16", "8,128") == 8 * 128 * 2
+    assert _shape_bytes("s32", "3") == 12
+    assert _shape_bytes("token", "") == 0          # token[] is legal HLO
+
+
+def test_shape_bytes_unknown_dtype_raises():
+    """A dtype missing from the table must fail LOUDLY: a silent 0 would
+    undercount collective traffic and pass the budget audit vacuously."""
+    with pytest.raises(ValueError, match="unknown HLO dtype 'f320'"):
+        _shape_bytes("f320", "8")
+    with pytest.raises(ValueError, match="unknown HLO dtype"):
+        _shape_bytes("quaternion", "")
+
+
+_COLLECTIVE_HLO = """\
+HloModule m
+
+ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %tup = (f32[2,4]{1,0}, s32[2,4]{1,0}) all-reduce(%p0, %p0), to_apply=%add
+  %sc = f32[] all-reduce(%p0), to_apply=%add
+  %st = f32[4,8]{1,0} all-gather-start(%p0), dimensions={0}
+  %dn = f32[4,8]{1,0} all-gather-done(%st)
+}
+"""
+
+
+def test_collective_bytes_tuple_scalar_and_async_pairs():
+    got = collective_bytes(_COLLECTIVE_HLO)
+    # tuple result: BOTH element shapes count; scalar f32[] adds 4.
+    assert got["all-reduce"] == (2 * 4 * 4) * 2 + 4
+    # -start counted once, the matching -done skipped (no double count).
+    assert got["all-gather"] == 4 * 8 * 4
+    assert got["total"] == got["all-reduce"] + got["all-gather"]
+
+
+def test_scorecard_budget_formula():
+    # (B, K) f32 scores + (B, K) s32 gids per shard, + two f32[B] psums.
+    assert scorecard_budget_bytes(2, 4, 4) == 2 * 2 * 4 * 4 * 4 + 2 * 2 * 4
+    assert scorecard_budget_bytes(1, 1, 1) == 8 + 8
+
+
+# ---------------------------------------------------------------------------
+# Text-level audit rules
+# ---------------------------------------------------------------------------
+
+_CLEAN = """\
+HloModule m
+
+%fused_computation (param_0: f32[64,128]) -> f32[64,128] {
+  %param_0 = f32[64,128]{1,0} parameter(0)
+  ROOT %t = f32[64,128]{1,0} tanh(%param_0)
+}
+
+ENTRY %main (Arg_0.1: bf16[64,128]) -> f32[8] {
+  %Arg_0.1 = bf16[64,128]{1,0} parameter(0)
+  %c = f32[64,128]{1,0} convert(%Arg_0.1)
+  ROOT %r = f32[8]{0} slice(%c), slice={[0:8], [0:1]}
+}
+"""
+
+
+def test_audit_passes_clean_hlo():
+    spec = AuditSpec(collective_budget=0, corpus_dtype="bf16",
+                     corpus_elems=64 * 128)
+    rep = audit_hlo_text(_CLEAN, spec)
+    assert rep.collective_total == 0
+
+
+def test_host_sync_rule_fires_on_side_effecting_custom_call():
+    bad = _CLEAN.replace(
+        "%c = f32[64,128]{1,0} convert(%Arg_0.1)",
+        '%c = f32[64,128]{1,0} custom-call(%Arg_0.1), '
+        'custom_call_target="xla_python_cpu_callback", '
+        "custom_call_has_side_effect=true")
+    with pytest.raises(AuditError) as ei:
+        audit_hlo_text(bad, AuditSpec())
+    assert ei.value.rule == "hlo-host-sync"
+    assert "custom-call" in str(ei.value)      # provenance line attached
+
+
+def test_host_sync_rule_fires_on_infeed():
+    bad = _CLEAN.replace("%c = f32[64,128]{1,0} convert(%Arg_0.1)",
+                         "%c = (f32[64,128]{1,0}, token[]) infeed(%tok)")
+    with pytest.raises(AuditError) as ei:
+        audit_hlo_text(bad, AuditSpec())
+    assert ei.value.rule == "hlo-host-sync"
+
+
+def test_host_sync_rule_passes_benign_topk_custom_call():
+    """CPU lowers lax.top_k to a side-effect-FREE custom-call — the rule
+    is side-effect/target based, not any-custom-call based."""
+    ok = _CLEAN.replace(
+        "%c = f32[64,128]{1,0} convert(%Arg_0.1)",
+        '%c = (f32[64,8]{1,0}, s32[64,8]{1,0}) custom-call(%Arg_0.1), '
+        'custom_call_target="TopK"')
+    audit_hlo_text(ok, AuditSpec())
+
+
+def test_f64_rule():
+    bad = _CLEAN.replace("%c = f32[64,128]{1,0} convert(%Arg_0.1)",
+                         "%c = f64[64,128]{1,0} convert(%Arg_0.1)")
+    with pytest.raises(AuditError) as ei:
+        audit_hlo_text(bad, AuditSpec())
+    assert ei.value.rule == "hlo-f64"
+
+
+def test_corpus_promotion_rule_checks_entry_params_only():
+    """The fusion computation in _CLEAN already holds a corpus-sized f32
+    ``parameter(0)`` (XLA legally hoists bf16->f32 converts into fusions);
+    only an ENTRY parameter means the RESIDENT corpus was promoted."""
+    spec = AuditSpec(corpus_dtype="bf16", corpus_elems=64 * 128)
+    audit_hlo_text(_CLEAN, spec)               # fusion param: no violation
+    bad = _CLEAN.replace("%Arg_0.1 = bf16[64,128]{1,0} parameter(0)",
+                         "%Arg_0.1 = f32[64,128]{1,0} parameter(0)")
+    with pytest.raises(AuditError) as ei:
+        audit_hlo_text(bad, spec)
+    assert ei.value.rule == "hlo-corpus-promotion"
+
+
+def test_corpus_promotion_rule_inactive_for_f32_corpus():
+    bad_param = _CLEAN.replace("bf16[64,128]{1,0} parameter",
+                               "f32[64,128]{1,0} parameter")
+    audit_hlo_text(bad_param, AuditSpec(corpus_dtype="f32",
+                                        corpus_elems=64 * 128))
+
+
+def test_collective_budget_rule():
+    bad = _CLEAN.replace(
+        "%c = f32[64,128]{1,0} convert(%Arg_0.1)",
+        "%c = f32[64,128]{1,0} all-gather(%Arg_0.1), dimensions={0}")
+    with pytest.raises(AuditError) as ei:
+        audit_hlo_text(bad, AuditSpec(collective_budget=64))
+    assert ei.value.rule == "hlo-collective-budget"
+    audit_hlo_text(bad, AuditSpec(collective_budget=64 * 128 * 4))  # within
+    audit_hlo_text(bad, AuditSpec(collective_budget=None))          # unaudited
+
+
+# ---------------------------------------------------------------------------
+# The real engine under EngineConfig(audit=True)
+# ---------------------------------------------------------------------------
+
+def _toy(dtype=np.float32, C=64, L=8, M=16, seed=0):
+    rng = np.random.default_rng(seed)
+    embs = rng.standard_normal((C, L, M)).astype(dtype)
+    mask = np.ones((C, L), bool)
+    return embs, mask
+
+
+_CFG = dict(batch_size=2, token_buckets=(8,), cand_buckets=(16,), max_k=4,
+            block_docs=4, block_tokens=4)
+
+
+def test_engine_warmup_audit_single_device_passes():
+    from repro.serve.engine import EngineConfig, RetrievalEngine
+    embs, mask = _toy()
+    eng = RetrievalEngine(embs, mask,
+                          EngineConfig(flavor="dense", audit=True, **_CFG))
+    eng.warmup()
+    rep = eng.audit()
+    assert set(rep) == set(eng.compiled_buckets)
+    # Off-mesh there is no legitimate collective traffic at all.
+    assert all(r.collective_total == 0 for r in rep.values())
+
+
+def test_engine_audit_flags_injected_host_callback():
+    """Inject a host-callback executable into the warmed cache: audit()
+    must fail it with the host-sync rule and name the bucket."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serve.engine import EngineConfig, RetrievalEngine
+    embs, mask = _toy()
+    eng = RetrievalEngine(embs, mask,
+                          EngineConfig(flavor="dense", audit=True, **_CFG))
+    eng.warmup()
+
+    def chatty(x):
+        jax.debug.callback(lambda v: None, x)
+        return x * 2.0
+
+    bad = jax.jit(chatty).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)).compile()
+    eng._exec[("step", "dense", 8, 16)] = bad
+    with pytest.raises(AuditError) as ei:
+        eng.audit()
+    assert ei.value.rule == "hlo-host-sync"
+    assert "('step', 'dense', 8, 16)" in str(ei.value)
+
+
+def test_engine_audit_require_bf16_flags_f32_corpus():
+    from repro.serve.engine import EngineConfig, RetrievalEngine
+    embs, mask = _toy(np.float32)
+    eng = RetrievalEngine(embs, mask, EngineConfig(
+        flavor="dense", audit=True, audit_require_bf16=True, **_CFG))
+    with pytest.raises(AuditError) as ei:
+        eng.warmup()
+    assert ei.value.rule == "hlo-corpus-promotion"
+
+
+def test_engine_audit_peak_buffer_bound():
+    from repro.serve.engine import EngineConfig, RetrievalEngine
+    embs, mask = _toy()
+    eng = RetrievalEngine(embs, mask, EngineConfig(
+        flavor="dense", audit=True, audit_peak_bytes=1, **_CFG))
+    with pytest.raises(AuditError) as ei:
+        eng.warmup()
+    assert ei.value.rule == "hlo-peak-buffer"
+
+
+_ROUTED_AUDIT = """
+import numpy as np
+import jax.numpy as jnp
+from repro.analysis.hlo_audit import scorecard_budget_bytes
+from repro.serve.engine import EngineConfig, RetrievalEngine
+
+rng = np.random.default_rng(0)
+C, L, M = 64, 8, 16
+embs = rng.standard_normal((C, L, M)).astype(np.float32)
+mask = np.ones((C, L), bool)
+cfg = EngineConfig(batch_size=2, token_buckets=(8,), cand_buckets=(16,),
+                   max_k=4, flavor="%(flavor)s", mesh_axes=(("data", 4),),
+                   stage1="local", stage1_centroids=4, stage1_total=16,
+                   block_docs=4, block_tokens=4, audit=True,
+                   audit_require_bf16=True)
+eng = RetrievalEngine(jnp.asarray(embs, jnp.bfloat16), mask, cfg)
+eng.warmup()                                   # audit=True runs here
+budget = scorecard_budget_bytes(2, 4, 4)
+reports = eng.audit()
+stepish = {k: r for k, r in reports.items() if k[0] in ("step", "routed")}
+assert stepish, sorted(reports)
+for key, rep in stepish.items():
+    assert 0 < rep.collective_total <= budget, (key, rep.collective_total)
+print("AUDIT_OK", budget)
+"""
+
+
+@pytest.mark.parametrize("flavor", ["dense", "bandit"])
+def test_routed_mesh_warmup_audit_within_scorecard_budget(flavor):
+    """The acceptance pin: a 4-shard routed engine warms under audit=True
+    and every sharded/routed step's collective traffic fits the scorecard
+    budget — made structural by _merge_scorecards's per-shard pre-top-K."""
+    out = run_in_subprocess(_ROUTED_AUDIT % {"flavor": flavor}, n_devices=4)
+    assert "AUDIT_OK 272" in out

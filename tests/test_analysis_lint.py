@@ -1,0 +1,187 @@
+"""ISSUE 9 trace-safety + thread-lockset lint (repro.analysis.lint/locks)
+and the runtime access recorder (repro.analysis.recorder).
+
+Pins: every committed fixture fires exactly its rule, ``# repro:
+noqa-<rule>`` suppresses without hiding (the gate still counts it), the
+committed baseline is EMPTY and the real src/ tree passes the merge gate
+(``--max-suppressions 0``), the engine's declared threading discipline
+verifies, and tampering with the engine's tables is caught."""
+import os
+import threading
+
+import pytest
+
+from repro.analysis import lint, locks
+from repro.analysis.recorder import ThreadAccessRecorder
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIX = os.path.join(ROOT, "src", "repro", "analysis", "fixtures")
+ENGINE = os.path.join(ROOT, "src", "repro", "serve", "engine.py")
+
+
+def _pairs(viols):
+    return sorted((v.rule, v.line) for v in viols)
+
+
+# ---------------------------------------------------------------------------
+# Fixtures fire their rules
+# ---------------------------------------------------------------------------
+
+def test_trace_unsafe_fixture_fires_every_trace_rule():
+    v = lint.lint_file(os.path.join(FIX, "trace_unsafe.py"))
+    assert not any(x.suppressed for x in v)
+    assert _pairs(v) == sorted([
+        ("prng-aliasing", 13),
+        ("mutable-default", 16),
+        ("traced-truthiness", 22),
+        ("traced-cast", 27),
+        ("traced-cast", 28),
+        ("host-sync-in-trace", 29),
+        ("time-in-trace", 30),
+    ])
+
+
+def test_kernel_assert_fixture():
+    v = lint.lint_file(os.path.join(FIX, "kernels", "bad_assert.py"))
+    assert _pairs(v) == [("kernel-assert", 7)]
+
+
+def test_locks_bad_fixture_flags_shared_attr_and_guard_escape():
+    v = locks.check_file(os.path.join(FIX, "locks_bad.py"))
+    assert all(x.rule == "lockset" for x in v)
+    shared = [x for x in v if "no GUARDED_BY entry" in x.msg]
+    assert shared and all("_count" in x.msg for x in shared)
+    escape = [x for x in v if "outside its declared guard" in x.msg]
+    assert [x.line for x in escape] == [28]
+    assert "self._lock" in escape[0].msg
+    # lint_file folds the lockset pass in for table-declaring files.
+    assert _pairs(lint.lint_file(os.path.join(FIX, "locks_bad.py"))) \
+        == _pairs(v)
+
+
+def test_noqa_suppression_counts_but_is_not_active():
+    v = lint.lint_file(os.path.join(FIX, "noqa_ok.py"))
+    assert [x.rule for x in v if x.suppressed] == ["prng-aliasing"]
+    assert not [x for x in v if not x.suppressed]
+
+
+# ---------------------------------------------------------------------------
+# CLI gate semantics
+# ---------------------------------------------------------------------------
+
+def test_cli_fails_on_fixture_violations(capsys):
+    rc = lint.main([os.path.join(FIX, "trace_unsafe.py")])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "[prng-aliasing]" in out and "7 violation(s)" in out
+
+
+def test_cli_report_only_exits_zero(capsys):
+    assert lint.main([os.path.join(FIX, "trace_unsafe.py"),
+                      "--report-only"]) == 0
+    assert "[prng-aliasing]" in capsys.readouterr().out
+
+
+def test_cli_suppression_budget(capsys):
+    noqa = os.path.join(FIX, "noqa_ok.py")
+    assert lint.main([noqa]) == 0                      # suppressed: passes
+    assert lint.main([noqa, "--max-suppressions", "0"]) == 1
+    assert "suppression budget exceeded" in capsys.readouterr().out
+
+
+def test_src_tree_passes_merge_gate(capsys):
+    """THE satellite-1 pin: the real source tree is clean under the CI
+    gate — zero active violations, zero suppressions in effect."""
+    assert lint.main([os.path.join(ROOT, "src"),
+                      "--max-suppressions", "0"]) == 0
+    assert " 0 violation(s), 0 suppressed" in capsys.readouterr().out
+
+
+def test_committed_baseline_is_empty():
+    assert lint.load_baseline(lint.DEFAULT_BASELINE) == set()
+
+
+def test_fixture_tree_excluded_unless_opted_in():
+    files = lint.iter_py_files([os.path.join(ROOT, "src")])
+    assert not any(os.sep + "fixtures" + os.sep in f for f in files)
+    with_fix = lint.iter_py_files([os.path.join(ROOT, "src")],
+                                  include_fixtures=True)
+    assert any(f.endswith("trace_unsafe.py") for f in with_fix)
+
+
+# ---------------------------------------------------------------------------
+# The engine's declared threading discipline
+# ---------------------------------------------------------------------------
+
+def test_engine_lockset_clean():
+    assert locks.check_file(ENGINE) == []
+
+
+def test_engine_lockset_catches_removed_declaration():
+    src = open(ENGINE).read()
+    entry = '"_thread_exc": "_done_cv",'
+    assert entry in src
+    v = locks.check_source(src.replace(entry, ""), ENGINE)
+    assert any("_thread_exc" in x.msg and "no GUARDED_BY entry" in x.msg
+               for x in v), v
+
+
+def test_engine_lockset_catches_write_outside_declared_guard():
+    src = open(ENGINE).read()
+    entry = '"_inflight": "_inflight_lock",'
+    assert entry in src
+    v = locks.check_source(
+        src.replace(entry, '"_inflight": "_completed_lock",'), ENGINE)
+    assert any("self._inflight written in" in x.msg
+               and "self._completed_lock" in x.msg for x in v), v
+
+
+# ---------------------------------------------------------------------------
+# Runtime access recorder (the lockset pass's dynamic twin)
+# ---------------------------------------------------------------------------
+
+class _Plain:
+    def __init__(self):
+        self.shared_undeclared = 0
+        self.shared_declared = 0
+        self.private = 0
+
+
+def _hammer(obj, n_threads=4, n_iter=50):
+    def work():
+        for _ in range(n_iter):
+            obj.shared_undeclared += 1
+            obj.shared_declared += 1
+    ts = [threading.Thread(target=work, name=f"w{i}")
+          for i in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+
+
+def test_recorder_flags_undeclared_shared_writes_only():
+    obj = _Plain()
+    with ThreadAccessRecorder(obj,
+                              declared={"shared_declared"}) as rec:
+        _hammer(obj)
+        obj.private += 1                       # main thread only
+    v = rec.violations()
+    assert len(v) == 1 and v[0].startswith("shared_undeclared:")
+    assert "no declared guard" in v[0]
+    shared = rec.shared()
+    assert "shared_declared" in shared         # observed, just declared
+    assert "private" not in shared             # one thread: not shared
+
+
+def test_recorder_uninstall_restores_class():
+    obj = _Plain()
+    cls = type(obj)
+    rec = ThreadAccessRecorder(obj).install()
+    assert type(obj) is not cls
+    obj.private = 5
+    rec.uninstall()
+    assert type(obj) is cls and obj.private == 5
+    before = dict(rec.writes)
+    obj.private = 6                            # uninstrumented: unrecorded
+    assert rec.writes == before

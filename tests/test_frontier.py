@@ -132,7 +132,7 @@ def test_fused_round_bit_identical_to_chain(seed):
     occupancy, and bit-identical score estimates."""
     H = _mixed_h(seed, Q=6, N=40, T=16, n_hard=2)
     a, b = _bounds(H)
-    keys = jax.random.split(jax.random.key(seed + 50), 6)
+    keys = jax.random.split(jax.random.fold_in(jax.random.key(seed), 50), 6)
     kw = dict(k=5, alpha_ef=0.3, block_docs=8, block_tokens=4)
     chain = run_pooled_oracle(H, a, b, keys, fused=False, **kw)
     fused = run_pooled_oracle(H, a, b, keys, fused=True, **kw)

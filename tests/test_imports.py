@@ -63,6 +63,9 @@ def test_repro_package_imports():
     mods = _modules_under("src/repro", "repro")
     assert "repro.dist.sharding" in mods      # the restored subsystem
     assert "repro.dist.fault" in mods
+    assert "repro.analysis.lint" in mods      # static-analysis subsystem
+    assert "repro.analysis.hlo_audit" in mods
+    assert "repro.analysis.fixtures.trace_unsafe" in mods
     _import_all(mods)
 
 

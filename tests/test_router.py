@@ -178,7 +178,7 @@ def test_prereveal_chain_fused_parity(seed):
     pr = (rng.random((Q, N, T)) < 0.4) & doc_mask[:, :, None]
     a = np.zeros((Q, N, T), np.float32)
     b = np.ones((Q, N, T), np.float32)
-    keys = jax.random.split(jax.random.key(seed % 997), Q)
+    keys = jax.random.split(jax.random.fold_in(jax.random.key(997), seed), Q)
     cfg = BatchedConfig(k=2, block_docs=2, block_tokens=2, max_rounds=64)
 
     res = {}
