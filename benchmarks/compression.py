@@ -1,0 +1,307 @@
+"""Compressed resident corpus: bytes/doc, in-kernel dequant throughput,
+and top-K fidelity per ``CorpusFormat``.
+
+The compression question this answers: when the (C, L, M) token index is
+re-encoded as int8 rows (per-(doc,token) symmetric scale) or as centroid
+ids + int8 residuals against the router codebook, (1) how many resident
+bytes does a document cost, (2) what does the fused reveal path sustain
+when dequantization happens INSIDE the kernel, and (3) how much top-K
+fidelity survives against the exhaustive f32 oracle?
+
+Three format rows share one synthetic corpus and one workload:
+
+* ``bf16``     — dense corpus cast to bf16: the uncompressed resident
+  baseline the throughput gate is measured against.
+* ``int8``     — ``kernels.quant.quantize_int8``: ~3.9x fewer resident
+  bytes than the f32-resident seed path (~1.9x vs true bf16 residency).
+* ``residual`` — centroid id + int8 residual, codebook = the spherical
+  k-means router centroids (``retrieval.corpus.build_router``).
+
+Acceptance gates (the ISSUE 10 contract):
+
+* int8 bytes/doc at least 3.5x below the f32-resident baseline;
+* int8 fused-reveal cells/s at least 0.9x the bf16 fused path;
+* int8 AND residual top-5 overlap vs the exhaustive f32 oracle >= 0.9.
+
+Registered in ``benchmarks/run.py`` as ``compress``; standalone:
+
+  PYTHONPATH=src python -m benchmarks.compression
+  PYTHONPATH=src python -m benchmarks.compression \
+      --smoke --baseline BENCH_compress.json --max-ratio 2.0   # CI gate
+
+Emits ``BENCH_compress.json``. The CI perf-smoke lane re-runs the small
+``smoke`` section and fails on wall-clock regression past ``--max-ratio``
+(machine-normalized by the median wall ratio over formats), on any
+bytes/doc drift (encoding sizes are deterministic — a drift is a format
+change, not noise), or on a broken acceptance gate.
+
+Caveat: on CPU the kernels execute in interpret mode, so cells/s measures
+the interpreted dequant+score loop, not MXU/VMEM behavior; the bandwidth
+win of moving 1-byte rows through HBM only shows on a real TPU. The
+throughput gate still binds — in-kernel dequant must not cost more than
+the tolerated compute overhead even without the bandwidth payoff.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import fused_reveal_op, maxsim_scores_op
+from repro.kernels.quant import corpus_asarray, corpus_nbytes, quantize
+from repro.retrieval.corpus import build_router
+
+FORMATS = ("bf16", "int8", "residual")
+
+
+def _make_corpus(C: int, L: int, M: int, seed: int):
+    """Unit-normalized token corpus with ragged masks (every doc keeps at
+    least half its tokens, so no all-masked sentinel rows confound the
+    fidelity measurement)."""
+    rng = np.random.default_rng(seed)
+    embs = rng.standard_normal((C, L, M)).astype(np.float32)
+    embs /= np.linalg.norm(embs, axis=-1, keepdims=True)
+    mask = np.arange(L)[None] < rng.integers(L // 2, L + 1, C)[:, None]
+    return embs, mask
+
+
+def _resident(embs: np.ndarray, fmt: str, codebook):
+    """The corpus as it would sit in device memory under ``fmt``. The
+    bf16 row is CAST (not just relabeled): it is the uncompressed resident
+    baseline the throughput gate compares against."""
+    if fmt == "bf16":
+        return jnp.asarray(embs, jnp.bfloat16)
+    return corpus_asarray(quantize(
+        embs, fmt, codebook=codebook if fmt == "residual" else None))
+
+
+def _bytes_row(embs: np.ndarray, fmt: str, codebook) -> Dict:
+    C = embs.shape[0]
+    resident = _resident(embs, fmt, codebook)
+    nbytes = corpus_nbytes(resident)
+    f32_bytes = embs.size * 4
+    bf16_bytes = embs.size * 2
+    return {
+        "resident_bytes": int(nbytes),
+        "bytes_per_doc": nbytes / C,
+        "reduction_vs_f32": f32_bytes / nbytes,
+        "reduction_vs_bf16": bf16_bytes / nbytes,
+    }
+
+
+def _time_fused(resident, mask, B: int, G: int, TQ: int, seed: int,
+                iters: int, repeats: int) -> Dict:
+    """Best-of-``repeats`` fused-reveal wall over ``iters`` launches of a
+    fixed (B, G) selection against the resident corpus."""
+    D, L, M = resident.shape
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((TQ, M)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=-1, keepdims=True)
+    di = jnp.asarray(rng.integers(0, D, B, dtype=np.int32))
+    ti = jnp.asarray(rng.integers(0, TQ, (B, G), dtype=np.int32))
+    nm = jnp.ones((B, G), jnp.bool_)
+    m, qd = jnp.asarray(mask), jnp.asarray(q)
+
+    def launch():
+        return jax.block_until_ready(
+            fused_reveal_op(resident, m, qd, di, ti, nm))
+
+    vals, stats = launch()                       # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            launch()
+        best = min(best, time.perf_counter() - t0)
+    cells = B * G * iters
+    return {
+        "wall_s": best,
+        "cells_per_s": cells / max(best, 1e-9),
+        # trajectory facts for the drift gate: the revealed-cell statistics
+        # are a pure function of (inputs, format) — any change is a kernel
+        # semantics change, not noise.
+        "stat_count": float(np.asarray(stats)[:, 0].sum()),
+    }
+
+
+def _fidelity(embs, mask, resident, Q: int, T: int, k: int,
+              seed: int) -> Dict:
+    """Mean top-``k`` overlap of the format corpus's exhaustive MaxSim
+    ranking against the f32 numpy oracle, over ``Q`` queries."""
+    rng = np.random.default_rng(seed)
+    overlaps = []
+    m = jnp.asarray(mask)
+    for _ in range(Q):
+        q = rng.standard_normal((T, embs.shape[2])).astype(np.float32)
+        q /= np.linalg.norm(q, axis=-1, keepdims=True)
+        sims = np.einsum("nlm,tm->nlt", embs, q, dtype=np.float32)
+        sims = np.where(mask[:, :, None], sims, -np.inf)
+        oracle = np.argsort(-sims.max(axis=1).sum(axis=-1))[:k]
+        got = np.asarray(maxsim_scores_op(resident, m, jnp.asarray(q)))
+        topk = np.argsort(-got)[:k]
+        overlaps.append(len(set(oracle) & set(topk)) / k)
+    return {"topk_overlap": float(np.mean(overlaps)), "k": k, "queries": Q}
+
+
+def _section(C: int, L: int, M: int, *, B: int, G: int, TQ: int, Q: int,
+             T: int, k: int, seed: int, iters: int, repeats: int) -> Dict:
+    embs, mask = _make_corpus(C, L, M, seed)
+    codebook = np.asarray(build_router(
+        embs, mask, n_shards=1, docs_per_shard=C, n_centroids=8,
+        seed=seed).centroids, np.float32)
+    rows = {}
+    print(f"corpus C={C} L={L} M={M} | reveal B={B} G={G} x{iters}")
+    print(f"{'format':9s} {'bytes/doc':>10s} {'vs f32':>7s} {'vs bf16':>8s} "
+          f"{'cells/s':>12s} {'top-5 ovl':>10s}")
+    for fmt in FORMATS:
+        resident = _resident(embs, fmt, codebook)
+        row = _bytes_row(embs, fmt, codebook)
+        row.update(_time_fused(resident, mask, B, G, TQ, seed, iters,
+                               repeats))
+        row.update(_fidelity(embs, mask, resident, Q, T, k, seed + 1))
+        rows[fmt] = row
+        print(f"{fmt:9s} {row['bytes_per_doc']:10.1f} "
+              f"{row['reduction_vs_f32']:6.2f}x {row['reduction_vs_bf16']:7.2f}x "
+              f"{row['cells_per_s']:12.0f} {row['topk_overlap']:10.3f}")
+    return {
+        "config": {"C": C, "L": L, "M": M, "B": B, "G": G, "TQ": TQ,
+                   "Q": Q, "T": T, "k": k, "seed": seed, "iters": iters,
+                   "repeats": repeats},
+        "formats": rows,
+    }
+
+
+def _gates(rows: Dict) -> Dict:
+    """The ISSUE 10 acceptance gates over one section's format rows."""
+    return {
+        "int8_bytes_reduction_3p5x_vs_f32":
+            rows["int8"]["reduction_vs_f32"] >= 3.5,
+        "int8_fused_at_least_0p9x_bf16":
+            rows["int8"]["cells_per_s"]
+            >= 0.9 * rows["bf16"]["cells_per_s"],
+        "int8_top5_overlap_0p9":
+            rows["int8"]["topk_overlap"] >= 0.9,
+        "residual_top5_overlap_0p9":
+            rows["residual"]["topk_overlap"] >= 0.9,
+    }
+
+
+# Small config the CI perf-smoke lane re-runs against the committed
+# baseline. Sized so each format's fused wall stays in the tens of
+# milliseconds on the interpret path (single-digit-ms walls put dispatch
+# jitter inside the gate) while the fidelity loop stays cheap.
+SMOKE = dict(C=128, L=12, M=64, B=128, G=8, TQ=64, Q=8, T=8, k=5, seed=0,
+             iters=4, repeats=3)
+FULL = dict(C=256, L=12, M=64, B=256, G=8, TQ=128, Q=16, T=8, k=5, seed=0,
+            iters=4, repeats=5)
+
+
+def _run_smoke() -> Dict:
+    return _section(SMOKE["C"], SMOKE["L"], SMOKE["M"], B=SMOKE["B"],
+                    G=SMOKE["G"], TQ=SMOKE["TQ"], Q=SMOKE["Q"], T=SMOKE["T"],
+                    k=SMOKE["k"], seed=SMOKE["seed"], iters=SMOKE["iters"],
+                    repeats=SMOKE["repeats"])
+
+
+def run(quick: bool = False, out: str = "BENCH_compress.json") -> Dict:
+    cfg = dict(SMOKE if quick else FULL)
+    main = _section(cfg["C"], cfg["L"], cfg["M"], B=cfg["B"], G=cfg["G"],
+                    TQ=cfg["TQ"], Q=cfg["Q"], T=cfg["T"], k=cfg["k"],
+                    seed=cfg["seed"], iters=cfg["iters"],
+                    repeats=cfg["repeats"])
+    print("\nsmoke config (CI gate):")
+    smoke = main if quick else _run_smoke()
+    accept = _gates(main["formats"])
+    result = {
+        "config": main["config"],
+        "formats": main["formats"],
+        "smoke": smoke,
+        "accept": accept,
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {out}")
+    assert all(accept.values()), accept
+    return result
+
+
+def check_smoke_regression(baseline_path: str,
+                           max_ratio: float = 2.0) -> int:
+    """CI gate: re-run the smoke section and fail (non-zero) when
+
+    * any format's bytes/doc differs from the committed baseline (the
+      encoders are deterministic — a byte drift is a format change);
+    * any ISSUE 10 acceptance gate no longer holds on the fresh run;
+    * any format's fused wall regresses more than ``max_ratio``x,
+      machine-normalized by the MEDIAN (wall_now / wall_baseline) over
+      formats, so a uniformly slower box normalizes away while one
+      genuinely regressed format cannot drag the median.
+    """
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    base = baseline.get("smoke", {}).get("formats")
+    if not base:
+        print(f"{baseline_path} has no smoke section — regenerate with "
+              "`python -m benchmarks.compression`")
+        return 2
+    smoke = _run_smoke()
+    rows = smoke["formats"]
+    shared = [f for f in rows if f in base]
+    machine = float(np.median([
+        rows[f]["wall_s"] / max(base[f]["wall_s"], 1e-9) for f in shared]))
+    print(f"\nmachine speed factor vs baseline (median over "
+          f"{len(shared)} formats): {machine:.2f}x")
+    failures = []
+    for fmt in shared:
+        row, b = rows[fmt], base[fmt]
+        ratio = row["wall_s"] / max(b["wall_s"] * machine, 1e-9)
+        status = "OK"
+        if ratio > max_ratio:
+            status = f"REGRESSION ({ratio:.2f}x > {max_ratio}x normalized)"
+            failures.append(fmt)
+        if row["resident_bytes"] != b["resident_bytes"]:
+            status = (f"BYTES DRIFT ({row['resident_bytes']} vs "
+                      f"{b['resident_bytes']})")
+            failures.append(fmt)
+        print(f"{fmt:9s} wall {row['wall_s']*1e3:8.1f} ms vs baseline "
+              f"{b['wall_s']*1e3:8.1f} ms ({ratio:.2f}x normalized)  "
+              f"{status}")
+    gates = _gates(rows)
+    for name, ok in gates.items():
+        print(f"gate {name}: {'OK' if ok else 'FAILED'}")
+        if not ok:
+            failures.append(name)
+    if failures:
+        print(f"\ncompression smoke FAILED: {sorted(set(failures))}")
+        return 1
+    print("\ncompression smoke OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="run only the small-config regression gate")
+    ap.add_argument("--baseline", default="BENCH_compress.json",
+                    help="baseline JSON for --smoke comparison")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="max allowed wall-clock ratio vs baseline")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_compress.json")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return check_smoke_regression(args.baseline, args.max_ratio)
+    run(quick=args.quick, out=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,12 +32,19 @@ from repro.kernels import tuning
 from repro.kernels.ops import autotune_op
 
 # (op, dims) buckets: serving-analog shapes kept small enough for the
-# interpret-mode CI lane (grid size drives trace time on CPU).
+# interpret-mode CI lane (grid size drives trace time on CPU). Quantized
+# buckets carry the FMT ordinal (ops._fmt_dims: int8=2, residual=4) —
+# autotune_op encodes the synthetic corpus into that format itself, so the
+# dequant kernels learn their own block sizes without touching the dense
+# buckets' keys.
 BUCKETS: List = [
     ("maxsim", dict(N=32, T=48, L=256, M=128)),
     ("maxsim_batch", dict(B=4, N=16, T=16, L=128, M=128)),
     ("gather_maxsim", dict(B=64, G=4, L=128, M=128, D=256, TQ=256)),
     ("fused_reveal", dict(B=64, G=4, L=128, M=128, D=256, TQ=256)),
+    ("fused_reveal", dict(B=64, G=4, L=128, M=128, D=256, TQ=256, FMT=2)),
+    ("fused_reveal", dict(B=64, G=4, L=128, M=128, D=256, TQ=256, FMT=4)),
+    ("maxsim_batch", dict(B=4, N=16, T=16, L=128, M=128, FMT=2)),
 ]
 
 

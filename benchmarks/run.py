@@ -53,6 +53,8 @@ HARNESSES = {
                 "corpus-sharded pooled-bandit serving, 1/4/16 shards"),
     "chaos": ("benchmarks.chaos_serving",
               "fault-injected serving: supervision, failover, ladder"),
+    "compress": ("benchmarks.compression",
+                 "compressed corpus: bytes/doc, dequant cells/s, fidelity"),
 }
 STANDALONE = {
     "perf_iterations": ("benchmarks.perf_iterations",
@@ -108,8 +110,9 @@ def main(argv=None):
     n_docs = 192 if args.quick else 384
     n_q = 6 if args.quick else 12
 
-    from benchmarks import (chaos_serving, fig2_tradeoff, fig4_exploration,
-                            fig5_ann_bounds, generalized_recsys, kernel_bench,
+    from benchmarks import (chaos_serving, compression, fig2_tradeoff,
+                            fig4_exploration, fig5_ann_bounds,
+                            generalized_recsys, kernel_bench,
                             reveal_throughput, serving_latency, serving_load,
                             sharded_serving, table1_efficiency,
                             table2_effectiveness)
@@ -137,6 +140,7 @@ def main(argv=None):
         # the mesh chaos measurement runs in its own subprocess (it pins 4
         # host devices), so it is safe from this single-device process.
         "chaos": lambda: chaos_serving.run(quick=args.quick),
+        "compress": lambda: compression.run(quick=args.quick),
     }
     wanted = [args.only] if args.only else list(benches)
 

@@ -26,6 +26,14 @@ offending HLO lines as provenance) when a serving contract is broken:
     parameter: someone promoted the resident corpus before lowering.
     (In-trace tile upcasts are the f32-accumulation contract and XLA may
     legally hoist them; residency is audited at the program boundary.)
+``hlo-int8-residency``
+    The compressed-corpus twin of the promotion rule: a quantized (s8)
+    corpus must cross the ENTRY boundary AT int8 — the audit demands a
+    corpus-sized s8 entry parameter and rejects any corpus-sized f32/bf16
+    entry parameter (someone dequantized the payload before lowering,
+    which re-inflates HBM residency and defeats the in-kernel dequant
+    contract). In-kernel reconstruction to f32 tiles is expected and
+    invisible here: only the program boundary is audited.
 ``hlo-collective-budget``
     Collective traffic above the declared byte budget. For sharded
     serving steps the budget is the scorecard contract: per-shard top-K
@@ -168,9 +176,10 @@ class AuditSpec:
     None = unaudited — e.g. the host stage-1 path, whose corpus
     all-gather is the documented exception). ``peak_bytes``: max
     ``temp_size_in_bytes`` (None = unaudited). ``corpus_dtype`` +
-    ``corpus_elems``: the resident corpus's HLO dtype and element count,
-    for the boundary-residency rule (inactive unless the corpus is
-    bf16/f16)."""
+    ``corpus_elems``: the resident corpus's HLO dtype and PAYLOAD element
+    count, for the boundary-residency rules — ``bf16``/``f16`` arms the
+    promotion rule, ``s8`` arms the int8-residency rule (the compressed
+    corpus must enter the program as an s8 parameter, never widened)."""
 
     collective_budget: Optional[int] = None
     peak_bytes: Optional[int] = None
@@ -256,6 +265,27 @@ def _promoted_param_lines(hlo_text: str, corpus_elems: int) -> List[str]:
     return out
 
 
+def _int8_boundary_lines(hlo_text: str,
+                         corpus_elems: int) -> Tuple[List[str], List[str]]:
+    """(s8 corpus-sized entry params, widened f32/bf16 corpus-sized entry
+    params). The int8-residency contract holds when the first list is
+    non-empty and the second is empty: the compressed payload crossed the
+    boundary at one byte per element and nobody shipped a dequantized
+    copy alongside (or instead of) it."""
+    s8, widened = [], []
+    for line in _entry_lines(hlo_text):
+        m = _PARAM_RE.search(line)
+        if m is None:
+            continue
+        dtype = m.group(1)
+        if dtype == "s8" and _shape_bytes("s8", m.group(2)) >= corpus_elems:
+            s8.append(line.strip())
+        elif dtype in ("f32", "bf16") and _shape_bytes(
+                dtype, m.group(2)) >= corpus_elems * _DTYPE_BYTES[dtype]:
+            widened.append(line.strip())
+    return s8, widened
+
+
 def audit_hlo_text(hlo_text: str, spec: AuditSpec,
                    label: str = "<hlo>") -> AuditReport:
     """Run every text-level contract rule; raises :class:`AuditError` on
@@ -277,6 +307,20 @@ def audit_hlo_text(hlo_text: str, spec: AuditSpec,
                 "hlo-corpus-promotion", label,
                 f"{spec.corpus_dtype} corpus ({spec.corpus_elems} elems) "
                 "enters the program as a full-size f32 parameter", bad)
+    if spec.corpus_dtype == "s8" and spec.corpus_elems > 0:
+        s8, widened = _int8_boundary_lines(hlo_text, spec.corpus_elems)
+        if widened:
+            raise AuditError(
+                "hlo-int8-residency", label,
+                f"quantized corpus ({spec.corpus_elems} payload elems) "
+                "shipped a corpus-sized f32/bf16 entry parameter — "
+                "dequantized before lowering", widened)
+        if not s8:
+            raise AuditError(
+                "hlo-int8-residency", label,
+                f"quantized corpus ({spec.corpus_elems} payload elems) "
+                "has no corpus-sized s8 entry parameter — the compressed "
+                "payload did not cross the program boundary at int8")
     lines = collective_lines(hlo_text)
     total = sum(b for _, b, _ in lines)
     if spec.collective_budget is not None and total > spec.collective_budget:

@@ -214,6 +214,13 @@ def corpus_specs(mesh) -> Dict[str, P]:
     return {"embs": P(every, None, None),       # (C, L, M)
             "mask": P(every, None),             # (C, L)
             "pooled": P(every, None),           # (C, M) two-phase summaries
+            # quantized-corpus sidecars (kernels.quant.QuantTokens): the
+            # int8 payload shards like "embs", the per-row scale / centroid
+            # id planes like "mask" — same doc dim, same contiguous blocks
+            "scales": P(every, None),           # (C, L) bf16
+            "codes": P(every, None),            # (C, L) i32
+            # the residual codebook is Kc x M and read by every shard:
+            "codebook": P(None, None),          # (Kc, M)
             # centroid-router state is tiny (Kc x M / Kc x S) and every
             # shard routes every query, so it replicates:
             "centroids": P(None, None),         # (Kc, M)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.quant import QuantTokens, corpus_take, dequant_block
+
 _NEG = -3e38  # python float: jnp constants would be captured as kernel consts
 
 
@@ -46,16 +48,50 @@ def _gather_maxsim_kernel(e_ref, m_ref, q_ref, out_ref, acc_ref, *,
         out_ref[...] = acc_ref[...]
 
 
+def _gather_maxsim_q_kernel(*refs, n_l_blocks, residual):
+    """Quantized-corpus variant: the XLA-level doc gather moved int8 bytes
+    (plus tiny sidecars); rows are reconstructed per VMEM block here."""
+    if residual:
+        e_ref, s_ref, c_ref, cb_ref, m_ref, q_ref, out_ref, acc_ref = refs
+    else:
+        e_ref, s_ref, m_ref, q_ref, out_ref, acc_ref = refs
+        c_ref = cb_ref = None
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, _NEG)
+
+    e = dequant_block(e_ref[...], s_ref[...],
+                      None if c_ref is None else c_ref[...],
+                      None if cb_ref is None else cb_ref[...])
+    q = q_ref[...].astype(jnp.float32)     # (BB, G, M)
+    mask = m_ref[...]                      # (BB, BL)
+    sims = jax.lax.dot_general(
+        e, q, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    sims = jnp.where(mask[:, :, None], sims, _NEG)
+    acc_ref[...] = jnp.maximum(acc_ref[...], jnp.max(sims, axis=1))
+
+    @pl.when(l == n_l_blocks - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "block_l",
                                              "interpret"))
 def gather_maxsim(doc_embs: jax.Array, doc_tok_mask: jax.Array,
                   queries: jax.Array, doc_idx: jax.Array, tok_idx: jax.Array,
                   *, block_b: int = 8, block_l: int = 256,
                   interpret: bool = False) -> jax.Array:
-    """out (B, G) — MaxSim values for the selected cells."""
+    """out (B, G) — MaxSim values for the selected cells.
+
+    With a quantized corpus the gather moves int8 payload + sidecars only;
+    dequantization happens per VMEM block inside the kernel.
+    """
     B, G = tok_idx.shape
     L, M = doc_embs.shape[1], doc_embs.shape[2]
-    e = jnp.take(doc_embs, doc_idx, axis=0)            # (B, L, M)
+    e = corpus_take(doc_embs, doc_idx, axis=0)         # (B, L, M)
     m = jnp.take(doc_tok_mask, doc_idx, axis=0)        # (B, L)
     q = jnp.take(queries, tok_idx, axis=0)             # (B, G, M)
 
@@ -70,6 +106,35 @@ def gather_maxsim(doc_embs: jax.Array, doc_tok_mask: jax.Array,
     n_l_blocks = L // bl
 
     grid = (B // bb, n_l_blocks)
+    if isinstance(e, QuantTokens):
+        residual = e.codes is not None
+        in_specs = [
+            pl.BlockSpec((bb, bl, M), lambda i, l: (i, l, 0)),
+            pl.BlockSpec((bb, bl), lambda i, l: (i, l)),
+        ]
+        operands = [e.data, e.scales]
+        if residual:
+            kc = e.codebook.shape[0]
+            in_specs += [
+                pl.BlockSpec((bb, bl), lambda i, l: (i, l)),
+                pl.BlockSpec((kc, M), lambda i, l: (0, 0)),
+            ]
+            operands += [e.codes, e.codebook]
+        in_specs += [
+            pl.BlockSpec((bb, bl), lambda i, l: (i, l)),
+            pl.BlockSpec((bb, G, M), lambda i, l: (i, 0, 0)),
+        ]
+        operands += [m, q]
+        return pl.pallas_call(
+            functools.partial(_gather_maxsim_q_kernel, n_l_blocks=n_l_blocks,
+                              residual=residual),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bb, G), lambda i, l: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((B, G), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((bb, G), jnp.float32)],
+            interpret=interpret,
+        )(*operands)
     return pl.pallas_call(
         functools.partial(_gather_maxsim_kernel, n_l_blocks=n_l_blocks),
         grid=grid,

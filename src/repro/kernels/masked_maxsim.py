@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.quant import QuantTokens, dequant_block
+
 _NEG = -3e38  # python float: jnp constants would be captured as kernel consts
 
 
@@ -38,6 +40,45 @@ def _masked_maxsim_kernel(mask_ref, e_ref, m_ref, q_ref, out_ref, acc_ref, *,
             acc_ref[...] = jnp.full_like(acc_ref, _NEG)
 
         e = e_ref[...].astype(jnp.float32)
+        q = q_ref[...].astype(jnp.float32)
+        tok_mask = m_ref[...]
+        sims = jax.lax.dot_general(
+            e, q, (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        sims = jnp.where(tok_mask[:, :, None], sims, _NEG)
+        acc_ref[...] = jnp.maximum(acc_ref[...], jnp.max(sims, axis=1))
+
+        @pl.when(l == n_l_blocks - 1)
+        def _done():
+            out_ref[...] = acc_ref[...]
+
+
+def _masked_maxsim_q_kernel(*refs, n_l_blocks, residual):
+    """Quantized-corpus variant: identical tile skipping, but the embedding
+    block is reconstructed from int8 (+ sidecars) in VMEM inside the active
+    branch — inactive tiles skip the dequant work too."""
+    if residual:
+        (mask_ref, e_ref, s_ref, c_ref, cb_ref, m_ref, q_ref, out_ref,
+         acc_ref) = refs
+    else:
+        mask_ref, e_ref, s_ref, m_ref, q_ref, out_ref, acc_ref = refs
+        c_ref = cb_ref = None
+    l = pl.program_id(2)
+    active = mask_ref[0, 0]
+
+    @pl.when(jnp.logical_not(active) & (l == 0))
+    def _skip():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(active)
+    def _compute():
+        @pl.when(l == 0)
+        def _init():
+            acc_ref[...] = jnp.full_like(acc_ref, _NEG)
+
+        e = dequant_block(e_ref[...], s_ref[...],
+                          None if c_ref is None else c_ref[...],
+                          None if cb_ref is None else cb_ref[...])
         q = q_ref[...].astype(jnp.float32)
         tok_mask = m_ref[...]
         sims = jax.lax.dot_general(
@@ -73,6 +114,36 @@ def masked_maxsim(doc_embs: jax.Array, doc_tok_mask: jax.Array,
     n_l_blocks = L // bl
 
     grid = (N // bn, T // bt, n_l_blocks)
+    if isinstance(doc_embs, QuantTokens):
+        residual = doc_embs.codes is not None
+        in_specs = [
+            pl.BlockSpec((1, 1), lambda i, j, l: (i, j)),
+            pl.BlockSpec((bn, bl, M), lambda i, j, l: (i, l, 0)),
+            pl.BlockSpec((bn, bl), lambda i, j, l: (i, l)),
+        ]
+        operands = [tile_mask, doc_embs.data, doc_embs.scales]
+        if residual:
+            kc = doc_embs.codebook.shape[0]
+            in_specs += [
+                pl.BlockSpec((bn, bl), lambda i, j, l: (i, l)),
+                pl.BlockSpec((kc, M), lambda i, j, l: (0, 0)),
+            ]
+            operands += [doc_embs.codes, doc_embs.codebook]
+        in_specs += [
+            pl.BlockSpec((bn, bl), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bt, M), lambda i, j, l: (j, 0)),
+        ]
+        operands += [doc_tok_mask, queries]
+        return pl.pallas_call(
+            functools.partial(_masked_maxsim_q_kernel, n_l_blocks=n_l_blocks,
+                              residual=residual),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bn, bt), lambda i, j, l: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((N, T), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((bn, bt), jnp.float32)],
+            interpret=interpret,
+        )(*operands)
     return pl.pallas_call(
         functools.partial(_masked_maxsim_kernel, n_l_blocks=n_l_blocks),
         grid=grid,

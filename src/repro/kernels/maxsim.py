@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.quant import QuantTokens, dequant_block
+
 _NEG = -3e38  # python float: jnp constants would be captured as kernel consts
 
 
@@ -49,6 +51,37 @@ def _maxsim_kernel(e_ref, m_ref, q_ref, out_ref, acc_ref, *, n_l_blocks):
         out_ref[...] = acc_ref[...]
 
 
+def _maxsim_q_kernel(*refs, n_l_blocks, residual):
+    """Quantized-corpus variant: the int8 payload (plus scale / centroid
+    sidecars) arrives per block; rows are reconstructed in VMEM right before
+    the f32 dot — the dequantized tile never exists outside this step."""
+    if residual:
+        e_ref, s_ref, c_ref, cb_ref, m_ref, q_ref, out_ref, acc_ref = refs
+    else:
+        e_ref, s_ref, m_ref, q_ref, out_ref, acc_ref = refs
+        c_ref = cb_ref = None
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, _NEG)
+
+    e = dequant_block(e_ref[...], s_ref[...],
+                      None if c_ref is None else c_ref[...],
+                      None if cb_ref is None else cb_ref[...])
+    q = q_ref[...].astype(jnp.float32)          # (BT, M)
+    mask = m_ref[...]                           # (BN, BL)
+    sims = jax.lax.dot_general(
+        e, q, (((2,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    sims = jnp.where(mask[:, :, None], sims, _NEG)
+    acc_ref[...] = jnp.maximum(acc_ref[...], jnp.max(sims, axis=1))
+
+    @pl.when(l == n_l_blocks - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "block_t", "block_l",
                                              "interpret"))
 def maxsim(doc_embs: jax.Array, doc_tok_mask: jax.Array, queries: jax.Array,
@@ -56,6 +89,10 @@ def maxsim(doc_embs: jax.Array, doc_tok_mask: jax.Array, queries: jax.Array,
            interpret: bool = False) -> jax.Array:
     """Dense MaxSim matrix H (N, T). Shapes must be pre-padded so that
     BN | N, BT | T, BL | L (``repro.kernels.ops.maxsim_op`` handles padding).
+
+    ``doc_embs`` may be a quantized corpus (``quant.QuantTokens``): the
+    int8 payload and its sidecars are tiled through VMEM and dequantized
+    in-kernel, so HBM only ever moves compressed bytes.
     """
     N, L, M = doc_embs.shape
     T = queries.shape[0]
@@ -70,6 +107,35 @@ def maxsim(doc_embs: jax.Array, doc_tok_mask: jax.Array, queries: jax.Array,
     n_l_blocks = L // bl
 
     grid = (N // bn, T // bt, n_l_blocks)
+    if isinstance(doc_embs, QuantTokens):
+        residual = doc_embs.codes is not None
+        in_specs = [
+            pl.BlockSpec((bn, bl, M), lambda i, j, l: (i, l, 0)),
+            pl.BlockSpec((bn, bl), lambda i, j, l: (i, l)),
+        ]
+        operands = [doc_embs.data, doc_embs.scales]
+        if residual:
+            kc = doc_embs.codebook.shape[0]
+            in_specs += [
+                pl.BlockSpec((bn, bl), lambda i, j, l: (i, l)),
+                pl.BlockSpec((kc, M), lambda i, j, l: (0, 0)),
+            ]
+            operands += [doc_embs.codes, doc_embs.codebook]
+        in_specs += [
+            pl.BlockSpec((bn, bl), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bt, M), lambda i, j, l: (j, 0)),
+        ]
+        operands += [doc_tok_mask, queries]
+        return pl.pallas_call(
+            functools.partial(_maxsim_q_kernel, n_l_blocks=n_l_blocks,
+                              residual=residual),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bn, bt), lambda i, j, l: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((N, T), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((bn, bt), jnp.float32)],
+            interpret=interpret,
+        )(*operands)
     return pl.pallas_call(
         functools.partial(_maxsim_kernel, n_l_blocks=n_l_blocks),
         grid=grid,

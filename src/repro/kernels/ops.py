@@ -17,11 +17,15 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref, tuning
 from repro.kernels.maxsim import maxsim
 from repro.kernels.masked_maxsim import masked_maxsim
 from repro.kernels.gather_maxsim import gather_maxsim
+from repro.kernels.quant import (QuantTokens, corpus_asarray, corpus_format,
+                                 corpus_pad_to, corpus_take, format_ordinal,
+                                 quantize_int8, quantize_residual)
 from repro.kernels.reveal import STATS_USED, fused_reveal
 
 
@@ -31,6 +35,17 @@ def _impl() -> str:
         return env
     platform = jax.default_backend()
     return "pallas" if platform == "tpu" else "interpret"
+
+
+def _fmt_dims(dims: Dict[str, int], doc_embs) -> Dict[str, int]:
+    """Key tuning buckets per corpus format: a quantized launch adds an FMT
+    dim (power-of-two ordinal) so int8/residual learn their own block sizes.
+    bf16/dense launches add nothing — their bucket keys (and any persisted
+    tuned tables) are unchanged from before compression existed."""
+    fmt = corpus_format(doc_embs)
+    if fmt != "bf16":
+        dims["FMT"] = format_ordinal(fmt)
+    return dims
 
 
 def _resolve(op: str, dims: Dict[str, int], **overrides) -> Dict[str, int]:
@@ -72,12 +87,12 @@ def maxsim_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
         return ref.maxsim_ref(doc_embs, doc_tok_mask, queries)
     N, L, M = doc_embs.shape
     T = queries.shape[0]
-    cfg = _resolve("maxsim", dict(N=N, T=T, L=L, M=M), block_n=block_n,
-                   block_t=block_t, block_l=block_l)
+    cfg = _resolve("maxsim", _fmt_dims(dict(N=N, T=T, L=L, M=M), doc_embs),
+                   block_n=block_n, block_t=block_t, block_l=block_l)
     bn = min(cfg["block_n"], max(N, 1))
     bt = min(cfg["block_t"], max(T, 1))
     bl = min(cfg["block_l"], max(L, 1))
-    e = _pad_to(_pad_to(doc_embs, 0, bn), 1, bl)
+    e = corpus_pad_to(corpus_pad_to(doc_embs, 0, bn), 1, bl)
     m = _pad_to(_pad_to(doc_tok_mask, 0, bn), 1, bl)  # pads False => masked
     q = _pad_to(queries, 0, bt)
     h = maxsim(e, m, q, block_n=bn, block_t=bt, block_l=bl,
@@ -98,10 +113,11 @@ def masked_maxsim_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
                                      tile_mask, block_n, block_t)
     N, L, M = doc_embs.shape
     T = queries.shape[0]
-    cfg = _resolve("masked_maxsim", dict(N=N, T=T, L=L, M=M),
+    cfg = _resolve("masked_maxsim",
+                   _fmt_dims(dict(N=N, T=T, L=L, M=M), doc_embs),
                    block_l=block_l)
     bn, bt, bl = block_n, block_t, min(cfg["block_l"], max(L, 1))
-    e = _pad_to(_pad_to(doc_embs, 0, bn), 1, bl)
+    e = corpus_pad_to(corpus_pad_to(doc_embs, 0, bn), 1, bl)
     m = _pad_to(_pad_to(doc_tok_mask, 0, bn), 1, bl)
     q = _pad_to(queries, 0, bt)
     # Grow tile_mask to the padded grid (padded tiles stay inactive).
@@ -144,11 +160,12 @@ def gather_maxsim_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
     B, G = tok_idx.shape
     D, L, M = doc_embs.shape
     cfg = _resolve("gather_maxsim",
-                   dict(B=B, G=G, L=L, M=M, D=D, TQ=queries.shape[0]),
+                   _fmt_dims(dict(B=B, G=G, L=L, M=M, D=D,
+                                  TQ=queries.shape[0]), doc_embs),
                    block_b=block_b, block_l=block_l)
     bb = min(cfg["block_b"], max(B, 1))
     bl = min(cfg["block_l"], max(L, 1))
-    e = _pad_to(doc_embs, 1, bl)
+    e = corpus_pad_to(doc_embs, 1, bl)
     m = _pad_to(doc_tok_mask, 1, bl)
     pad_b = (-B) % bb
     di = jnp.concatenate([doc_idx,
@@ -196,11 +213,12 @@ def fused_reveal_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
     D, L, M = doc_embs.shape
     gather = impl == "pallas"
     cfg = _resolve("fused_reveal",
-                   dict(B=B, G=G, L=L, M=M, D=D, TQ=queries.shape[0]),
+                   _fmt_dims(dict(B=B, G=G, L=L, M=M, D=D,
+                                  TQ=queries.shape[0]), doc_embs),
                    block_b=block_b, block_l=block_l)
     bb = 1 if gather else min(cfg["block_b"], max(B, 1))
     bl = min(cfg["block_l"], max(L, 1))
-    e = _pad_to(doc_embs, 1, bl)
+    e = corpus_pad_to(doc_embs, 1, bl)
     m = _pad_to(doc_tok_mask, 1, bl)
     pad_b = (-B) % bb
     di = jnp.concatenate([doc_idx,
@@ -211,7 +229,7 @@ def fused_reveal_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
                           jnp.zeros((pad_b, G), jnp.bool_)])
     q_sel = jnp.take(queries, ti, axis=0)              # (B+pad, G, M)
     if not gather:
-        e = jnp.take(e, di, axis=0)                    # (B+pad, L, M)
+        e = corpus_take(e, di, axis=0)                 # (B+pad, L, M)
         m = jnp.take(m, di, axis=0)
     vals, stats = fused_reveal(e, m, q_sel, nm, di, block_b=bb, block_l=bl,
                                gather=gather, interpret=(impl == "interpret"))
@@ -234,7 +252,8 @@ def maxsim_batch_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
     impl = _impl()
     Bq, N, L, M = doc_embs.shape
     T = queries.shape[1]
-    cfg = _resolve("maxsim_batch", dict(B=Bq, N=N, T=T, L=L, M=M),
+    cfg = _resolve("maxsim_batch",
+                   _fmt_dims(dict(B=Bq, N=N, T=T, L=L, M=M), doc_embs),
                    block_n=block_n, block_t=block_t, block_l=block_l)
     if impl == "ref":
         return ref.maxsim_batch_ref(doc_embs, doc_tok_mask, queries,
@@ -242,12 +261,18 @@ def maxsim_batch_op(doc_embs: jax.Array, doc_tok_mask: jax.Array,
     bn = min(cfg["block_n"], max(N, 1))
     bt = min(cfg["block_t"], max(T, 1))
     bl = min(cfg["block_l"], max(L, 1))
-    e = _pad_to(_pad_to(doc_embs, 1, bn), 2, bl)
+    e = corpus_pad_to(corpus_pad_to(doc_embs, 1, bn), 2, bl)
     m = _pad_to(_pad_to(doc_tok_mask, 1, bn), 2, bl)  # pads False => masked
     q = _pad_to(queries, 1, bt)
+    if isinstance(e, QuantTokens):
+        # vmap over the query-batch axis of every per-doc leaf; the
+        # codebook is shared across the batch, not mapped
+        e_axes = QuantTokens(0, 0, None if e.codes is None else 0, None)
+    else:
+        e_axes = 0
     h = jax.vmap(lambda eb, mb, qb: maxsim(
         eb, mb, qb, block_n=bn, block_t=bt, block_l=bl,
-        interpret=(impl == "interpret")))(e, m, q)
+        interpret=(impl == "interpret")), in_axes=(e_axes, 0, 0))(e, m, q)
     return h[:, :N, :T]
 
 
@@ -275,6 +300,10 @@ def autotune_op(op: str, dims: Dict[str, int], *, repeats: int = 2,
     * ``gather_maxsim``: B, G, L, M, D (doc rows), TQ (query-token rows)
     * ``fused_reveal``:  B, G, L, M, D, TQ
 
+    A quantized bucket (``FMT`` dim present — see ``_fmt_dims``) is timed
+    against a synthetic corpus encoded into that format, so the recorded
+    block sizes reflect the dequant kernels' actual cost profile.
+
     Returns (best_config, {candidate-json: seconds}). Under
     ``REPRO_KERNEL_IMPL=ref`` the ops ignore block sizes entirely, so this
     records nothing and returns the defaults unmeasured.
@@ -283,13 +312,28 @@ def autotune_op(op: str, dims: Dict[str, int], *, repeats: int = 2,
         return dict(tuning.DEFAULTS.get(op, {})), {}
     key = jax.random.key(seed)
     d = dict(dims)
+    fmt = {1: "bf16", 2: "int8", 4: "residual"}.get(int(d.get("FMT", 1)))
+    if fmt is None:
+        raise ValueError(f"autotune_op: unknown FMT ordinal {d['FMT']!r}")
 
     def _norm(k, shape):
         return jax.random.normal(k, shape, jnp.float32).astype(dtype)
 
+    def _corpus(arr):
+        """Encode the synthetic corpus into the bucket's resident format."""
+        if fmt == "bf16":
+            return arr
+        a = np.asarray(jax.device_get(arr), np.float32)
+        if fmt == "int8":
+            return corpus_asarray(quantize_int8(a))
+        rng = np.random.default_rng(seed)
+        cb = rng.standard_normal((8, a.shape[-1])).astype(np.float32)
+        cb /= np.linalg.norm(cb, axis=-1, keepdims=True)
+        return corpus_asarray(quantize_residual(a, cb))
+
     if op == "maxsim":
         ks = jax.random.split(key, 2)
-        E = _norm(ks[0], (d["N"], d["L"], d["M"]))
+        E = _corpus(_norm(ks[0], (d["N"], d["L"], d["M"])))
         mask = jnp.ones((d["N"], d["L"]), jnp.bool_)
         Q = _norm(ks[1], (d["T"], d["M"]))
 
@@ -298,7 +342,7 @@ def autotune_op(op: str, dims: Dict[str, int], *, repeats: int = 2,
                 maxsim_op(E, mask, Q, **cfg))
     elif op == "maxsim_batch":
         ks = jax.random.split(key, 2)
-        E = _norm(ks[0], (d["B"], d["N"], d["L"], d["M"]))
+        E = _corpus(_norm(ks[0], (d["B"], d["N"], d["L"], d["M"])))
         mask = jnp.ones((d["B"], d["N"], d["L"]), jnp.bool_)
         Q = _norm(ks[1], (d["B"], d["T"], d["M"]))
 
@@ -308,7 +352,7 @@ def autotune_op(op: str, dims: Dict[str, int], *, repeats: int = 2,
     elif op in ("gather_maxsim", "fused_reveal"):
         ks = jax.random.split(key, 4)
         D, TQ = d.get("D", max(d["B"], 8)), d.get("TQ", 64)
-        E = _norm(ks[0], (D, d["L"], d["M"]))
+        E = _corpus(_norm(ks[0], (D, d["L"], d["M"])))
         mask = jnp.ones((D, d["L"]), jnp.bool_)
         Q = _norm(ks[1], (TQ, d["M"]))
         di = jax.random.randint(ks[2], (d["B"],), 0, D, jnp.int32)

@@ -3,13 +3,32 @@
 These are the ground truth the kernels are validated against (per-kernel
 shape/dtype sweeps in tests/test_kernels_*.py) and the fallback path used on
 platforms without Pallas support.
+
+Every oracle that consumes document embeddings also accepts a quantized
+corpus (``quant.QuantTokens``): rows are reconstructed with the same
+``dequant_block`` math the Pallas kernels run per VMEM block, then the
+existing f32 oracle math applies unchanged.  ``maxsim_batch_ref`` — the
+REPRO_KERNEL_IMPL=ref *serving* path — dequantizes per L-chunk inside its
+streaming loop so the peak temporary stays (B, N, block_l, T)-sized and the
+full f32 corpus is never materialized, mirroring the kernels' VMEM
+discipline.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.quant import QuantTokens, corpus_index, corpus_pad_to, \
+    dequant_block, dequantize
+
 _NEG = jnp.float32(-3e38)
+
+
+def _dense_rows(doc_embs) -> jax.Array:
+    """Oracle-side reconstruction: f32 rows from either format."""
+    if isinstance(doc_embs, QuantTokens):
+        return dequantize(doc_embs)
+    return doc_embs.astype(jnp.float32)
 
 
 def maxsim_ref(doc_embs: jax.Array, doc_tok_mask: jax.Array,
@@ -21,7 +40,7 @@ def maxsim_ref(doc_embs: jax.Array, doc_tok_mask: jax.Array,
     queries:      (T, M)     query token embeddings
     returns H:    (N, T) f32 — H[i, t] = max_j <e_ij, q_t> over valid j
     """
-    sims = jnp.einsum("nlm,tm->nlt", doc_embs.astype(jnp.float32),
+    sims = jnp.einsum("nlm,tm->nlt", _dense_rows(doc_embs),
                       queries.astype(jnp.float32))
     sims = jnp.where(doc_tok_mask[:, :, None], sims, _NEG)
     return jnp.max(sims, axis=1)
@@ -64,19 +83,29 @@ def maxsim_batch_ref(doc_embs: jax.Array, doc_tok_mask: jax.Array,
     """
     Bq, N, L, M = doc_embs.shape
     T = queries.shape[1]
-    e = doc_embs.astype(jnp.float32)
+    quantized = isinstance(doc_embs, QuantTokens)
+    e = doc_embs if quantized else doc_embs.astype(jnp.float32)
     q = queries.astype(jnp.float32)
     bl = min(block_l, max(L, 1))
     pad = (-L) % bl
     if pad:
-        e = jnp.pad(e, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        e = corpus_pad_to(e, 2, bl)
         m = jnp.pad(doc_tok_mask, ((0, 0), (0, 0), (0, pad)))
     else:
         m = doc_tok_mask
     n_blocks = e.shape[2] // bl
 
     def step(l, h):
-        e_c = jax.lax.dynamic_slice_in_dim(e, l * bl, bl, axis=2)
+        if quantized:
+            # dequantize ONE chunk: the peak f32 temporary stays
+            # (B, N, block_l, ·) even on a quantized corpus
+            d_c = jax.lax.dynamic_slice_in_dim(e.data, l * bl, bl, axis=2)
+            s_c = jax.lax.dynamic_slice_in_dim(e.scales, l * bl, bl, axis=2)
+            c_c = (None if e.codes is None else
+                   jax.lax.dynamic_slice_in_dim(e.codes, l * bl, bl, axis=2))
+            e_c = dequant_block(d_c, s_c, c_c, e.codebook)
+        else:
+            e_c = jax.lax.dynamic_slice_in_dim(e, l * bl, bl, axis=2)
         m_c = jax.lax.dynamic_slice_in_dim(m, l * bl, bl, axis=2)
         sims = jnp.einsum("bnlm,btm->bnlt", e_c, q)
         sims = jnp.where(m_c[:, :, :, None], sims, _NEG)
@@ -94,7 +123,7 @@ def gather_maxsim_ref(doc_embs: jax.Array, doc_tok_mask: jax.Array,
 
     doc_idx: (B,) int32; tok_idx: (B, G) int32 -> out (B, G) f32.
     """
-    e = doc_embs[doc_idx].astype(jnp.float32)            # (B, L, M)
+    e = _dense_rows(corpus_index(doc_embs, doc_idx))     # (B, L, M)
     m = doc_tok_mask[doc_idx]                            # (B, L)
     q = queries[tok_idx].astype(jnp.float32)             # (B, G, M)
     sims = jnp.einsum("blm,bgm->blg", e, q)

@@ -42,6 +42,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.quant import QuantTokens, corpus_take, dequant_block
+
 _NEG = -3e38  # python float: jnp constants would be captured as kernel consts
 
 STATS_W = 8        # lane-padded stats row width
@@ -87,6 +89,55 @@ def _fused_reveal_kernel(doc_idx_ref, e_ref, m_ref, q_ref, new_ref,
                       jnp.where(lane == 2, d_sq[:, None], 0.0)))
 
 
+def _fused_reveal_q_kernel(doc_idx_ref, *refs, n_l_blocks, residual):
+    """Quantized-corpus fused reveal: the scalar-prefetched index maps DMA
+    the selected doc's int8 payload block (plus scale / centroid-id rows)
+    straight from the compressed resident corpus — HBM only ever moves
+    compressed bytes, and the f32 row exists solely in VMEM between the
+    dequant and the dot."""
+    del doc_idx_ref  # consumed by the index maps, not the body
+    if residual:
+        (e_ref, s_ref, c_ref, cb_ref, m_ref, q_ref, new_ref, vals_ref,
+         stats_ref, acc_ref) = refs
+    else:
+        e_ref, s_ref, m_ref, q_ref, new_ref, vals_ref, stats_ref, \
+            acc_ref = refs
+        c_ref = cb_ref = None
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, _NEG)
+
+    e = dequant_block(e_ref[...], s_ref[...],
+                      None if c_ref is None else c_ref[...],
+                      None if cb_ref is None else cb_ref[...])
+    q = q_ref[...].astype(jnp.float32)     # (BB, G, M)
+    mask = m_ref[...]                      # (BB, BL)
+    sims = jax.lax.dot_general(
+        e, q, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    sims = jnp.where(mask[:, :, None], sims, _NEG)
+    acc_ref[...] = jnp.maximum(acc_ref[...], jnp.max(sims, axis=1))
+
+    @pl.when(l == n_l_blocks - 1)
+    def _done():
+        v = acc_ref[...]                   # (BB, G)
+        vals_ref[...] = v
+        new = new_ref[...]                 # (BB, G) bool — fresh cells only
+        nf = new.astype(jnp.float32)
+        vm = jnp.where(new, v, 0.0)
+        d_n = jnp.sum(nf, axis=-1)         # (BB,)
+        d_tot = jnp.sum(vm, axis=-1)
+        # vm * v, not nf * v * v — see _fused_reveal_kernel
+        d_sq = jnp.sum(vm * v, axis=-1)
+        lane = jax.lax.broadcasted_iota(jnp.int32, (v.shape[0], STATS_W), 1)
+        stats_ref[...] = jnp.where(
+            lane == 0, d_n[:, None],
+            jnp.where(lane == 1, d_tot[:, None],
+                      jnp.where(lane == 2, d_sq[:, None], 0.0)))
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "block_l", "gather",
                                              "interpret"))
 def fused_reveal(doc_embs: jax.Array, doc_tok_mask: jax.Array,
@@ -96,7 +147,10 @@ def fused_reveal(doc_embs: jax.Array, doc_tok_mask: jax.Array,
     """One fused reveal round.
 
     doc_embs:     (D, L, M) corpus/stacked docs (``gather=True``) or the
-                  pre-gathered (F, L, M) frontier rows (``gather=False``)
+                  pre-gathered (F, L, M) frontier rows (``gather=False``);
+                  may be a quantized corpus (``quant.QuantTokens``), in
+                  which case each grid step DMAs the compressed payload
+                  block and dequantizes it in VMEM
     doc_tok_mask: matching (D, L) / (F, L) token validity
     q_sel:        (F, G, M) pre-gathered query tokens per frontier row
     new_mask:     (F, G) bool — cells that are fresh this round
@@ -121,9 +175,43 @@ def fused_reveal(doc_embs: jax.Array, doc_tok_mask: jax.Array,
     if gather:
         e_spec = pl.BlockSpec((bb, bl, M), lambda i, l, di: (di[i], l, 0))
         m_spec = pl.BlockSpec((bb, bl), lambda i, l, di: (di[i], l))
+        row_spec = pl.BlockSpec((bb, bl), lambda i, l, di: (di[i], l))
     else:
         e_spec = pl.BlockSpec((bb, bl, M), lambda i, l, di: (i, l, 0))
         m_spec = pl.BlockSpec((bb, bl), lambda i, l, di: (i, l))
+        row_spec = pl.BlockSpec((bb, bl), lambda i, l, di: (i, l))
+
+    if isinstance(doc_embs, QuantTokens):
+        residual = doc_embs.codes is not None
+        in_specs = [e_spec, row_spec]
+        operands = [doc_embs.data, doc_embs.scales]
+        if residual:
+            kc = doc_embs.codebook.shape[0]
+            in_specs += [row_spec,
+                         pl.BlockSpec((kc, M), lambda i, l, di: (0, 0))]
+            operands += [doc_embs.codes, doc_embs.codebook]
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(F // bb, n_l_blocks),
+            in_specs=in_specs + [
+                m_spec,
+                pl.BlockSpec((bb, G, M), lambda i, l, di: (i, 0, 0)),
+                pl.BlockSpec((bb, G), lambda i, l, di: (i, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((bb, G), lambda i, l, di: (i, 0)),
+                pl.BlockSpec((bb, STATS_W), lambda i, l, di: (i, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((bb, G), jnp.float32)],
+        )
+        return pl.pallas_call(
+            functools.partial(_fused_reveal_q_kernel, n_l_blocks=n_l_blocks,
+                              residual=residual),
+            grid_spec=grid_spec,
+            out_shape=[jax.ShapeDtypeStruct((F, G), jnp.float32),
+                       jax.ShapeDtypeStruct((F, STATS_W), jnp.float32)],
+            interpret=interpret,
+        )(doc_idx, *operands, doc_tok_mask, q_sel, new_mask)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

@@ -46,21 +46,36 @@ DEFAULTS: Dict[str, Dict[str, int]] = {
     "fused_reveal": {"block_b": 8, "block_l": 256},
 }
 
-# Candidate grids per op — deliberately tiny: autotuning compiles one
-# executable per candidate, and warmup budgets are real. Candidates whose
-# block exceeds the (padded) dimension collapse to the clamped config, so
-# duplicates are pruned against the launch dims before timing.
+# Candidate grids per op — small but non-degenerate: autotuning compiles
+# one executable per candidate, and warmup budgets are real. Candidates
+# whose block exceeds the (padded) dimension collapse to the clamped
+# config, so duplicates are pruned against the launch dims before timing.
+# The maxsim/maxsim_batch grids were widened after BENCH_kernels.json
+# showed speedups pinned at 1.0: at bucketed serving shapes (T<=64,
+# N<=32) the old 3-4 point grids clamped every candidate onto the
+# default, so there was nothing to win. The same grids serve the
+# quantized (int8/residual) launches — those buckets carry an FMT dim
+# (see ops._fmt_dims), so each format records its own winner per shape.
 CANDIDATES: Dict[str, List[Dict[str, int]]] = {
     "maxsim": [
         {"block_n": 8, "block_t": 128, "block_l": 256},
         {"block_n": 8, "block_t": 128, "block_l": 128},
         {"block_n": 16, "block_t": 128, "block_l": 128},
+        {"block_n": 16, "block_t": 128, "block_l": 256},
+        {"block_n": 32, "block_t": 128, "block_l": 128},
         {"block_n": 8, "block_t": 64, "block_l": 256},
+        {"block_n": 8, "block_t": 32, "block_l": 256},
+        {"block_n": 16, "block_t": 64, "block_l": 128},
+        {"block_n": 32, "block_t": 32, "block_l": 128},
     ],
     "maxsim_batch": [
         {"block_n": 8, "block_t": 8, "block_l": 128},
         {"block_n": 8, "block_t": 16, "block_l": 128},
+        {"block_n": 16, "block_t": 16, "block_l": 128},
         {"block_n": 16, "block_t": 8, "block_l": 64},
+        {"block_n": 8, "block_t": 16, "block_l": 64},
+        {"block_n": 4, "block_t": 16, "block_l": 128},
+        {"block_n": 16, "block_t": 16, "block_l": 64},
     ],
     "gather_maxsim": [
         {"block_b": 8, "block_l": 256},

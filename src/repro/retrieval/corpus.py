@@ -39,6 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.kernels.quant import (CORPUS_FORMATS, corpus_asarray, corpus_take,
+                                 quantize)
 from repro.retrieval.sharded import ShardedCorpus, shard_corpus
 
 
@@ -48,9 +50,12 @@ def gather_tokens(embs: jax.Array, mask: jax.Array,
 
     embs (C, L, M), mask (C, L), doc_ids (..., N) with -1 padding ->
     (..., N, L, M) embeddings + (..., N, L) mask, all-False for -1 ids.
+    A quantized corpus (``QuantTokens``) gathers leaf-wise — the moved
+    bytes stay compressed — and comes back as ``QuantTokens`` with the
+    same (..., N, L, M) payload layout.
     """
     safe = jnp.maximum(doc_ids, 0)
-    docs = jnp.take(embs, safe, axis=0)
+    docs = corpus_take(embs, safe, axis=0)
     dmask = jnp.take(mask, safe, axis=0) & (doc_ids >= 0)[..., None]
     return docs, dmask
 
@@ -252,7 +257,8 @@ class Corpus:
     (doc dim over every axis, ragged tail padded + tracked) and ``router``
     holds the replicated centroid-router state for shard-local stage-1."""
 
-    embs: jax.Array                      # (C_pad, L, M) f32 | bf16
+    embs: jax.Array                      # (C_pad, L, M) f32 | bf16 |
+                                         #   QuantTokens (compressed)
     mask: jax.Array                      # (C_pad, L) bool
     mesh: Optional[Mesh]
     n_docs: int
@@ -261,6 +267,7 @@ class Corpus:
     valid_docs: np.ndarray               # (n_shards,) i32
     router: Optional[CentroidRouter] = None
     pooled: Optional[jax.Array] = None
+    fmt: str = "bf16"                    # resident format (CORPUS_FORMATS)
 
     @property
     def padded_docs(self) -> int:
@@ -285,36 +292,56 @@ class Corpus:
 
 def build_corpus(embs, mask, *, mesh: Optional[Mesh] = None,
                  n_centroids: int = 0, router_iters: int = 10,
-                 router_seed: int = 0, pooled=None) -> Corpus:
+                 router_seed: int = 0, pooled=None,
+                 corpus_format: str = "bf16") -> Corpus:
     """Build the unified corpus facade.
 
     With a mesh, this is ``shard_corpus`` plus (``n_centroids > 0``) the
     centroid router, built at shard time over the same contiguous-block
     placement. Without one, the single-device view: one shard owning all
-    ``C`` docs (bf16 corpora stay bf16, as in ``shard_corpus``)."""
+    ``C`` docs (bf16 corpora stay bf16, as in ``shard_corpus``).
+
+    ``corpus_format`` ('bf16' | 'int8' | 'residual') selects the resident
+    encoding — see ``shard_corpus``. 'residual' needs centroids, so it
+    bumps ``n_centroids`` to 8 when none were requested; the router built
+    for stage-1 routing doubles as the codebook."""
+    if corpus_format not in CORPUS_FORMATS:
+        raise ValueError(f"unknown corpus format {corpus_format!r}; "
+                         f"expected one of {CORPUS_FORMATS}")
     if mesh is not None:
         sc: ShardedCorpus = shard_corpus(
             embs, mask, mesh, pooled=pooled, n_centroids=n_centroids,
-            router_iters=router_iters, router_seed=router_seed)
+            router_iters=router_iters, router_seed=router_seed,
+            corpus_format=corpus_format)
         return Corpus(embs=sc.embs, mask=sc.mask, mesh=mesh,
                       n_docs=sc.n_docs, n_shards=sc.n_shards,
                       docs_per_shard=sc.docs_per_shard,
                       valid_docs=sc.valid_docs, router=sc.router,
-                      pooled=sc.pooled)
-    dev = jnp.asarray(embs)
-    if dev.dtype != jnp.bfloat16:
-        dev = dev.astype(jnp.float32)
-    dmask = jnp.asarray(mask, jnp.bool_)
-    if dev.ndim != 3 or dmask.ndim != 2 or dev.shape[:2] != dmask.shape:
+                      pooled=sc.pooled, fmt=sc.fmt)
+    host = np.asarray(embs)
+    dmask_h = np.asarray(mask, bool)
+    if host.ndim != 3 or dmask_h.ndim != 2 or host.shape[:2] != dmask_h.shape:
         raise ValueError("corpus must be (C, L, M) embs + (C, L) mask")
-    C = dev.shape[0]
+    C = host.shape[0]
+    if corpus_format == "residual" and not n_centroids:
+        n_centroids = 8  # the residual codebook IS the router's centroids
     router = None
     if n_centroids:
         router = build_router(embs, mask, n_shards=1, docs_per_shard=C,
                               n_centroids=n_centroids, n_iters=router_iters,
                               seed=router_seed)
-    return Corpus(embs=dev, mask=dmask, mesh=None, n_docs=C, n_shards=1,
-                  docs_per_shard=C,
+    if corpus_format == "bf16":
+        dev = jnp.asarray(embs)
+        if dev.dtype != jnp.bfloat16:
+            dev = dev.astype(jnp.float32)
+    else:
+        codebook = (None if corpus_format != "residual"
+                    else np.asarray(router.centroids, np.float32))
+        dev = corpus_asarray(quantize(host.astype(np.float32), corpus_format,
+                                      codebook=codebook))
+    return Corpus(embs=dev, mask=jnp.asarray(dmask_h, jnp.bool_), mesh=None,
+                  n_docs=C, n_shards=1, docs_per_shard=C,
                   valid_docs=np.asarray([C], np.int32), router=router,
                   pooled=None if pooled is None
-                  else jnp.asarray(pooled, jnp.float32))
+                  else jnp.asarray(pooled, jnp.float32),
+                  fmt=corpus_format)

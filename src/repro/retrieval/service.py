@@ -35,8 +35,10 @@ from repro.core.frontier import (FrontierState, init_frontier_state,
                                  run_pooled_bandit)
 from repro.kernels.ops import (fused_reveal_op, gather_maxsim_op,
                                maxsim_batch_op)
+from repro.kernels.quant import QuantTokens, corpus_reshape
 from repro.retrieval.ann import generate_candidates
 from repro.retrieval.corpus import gather_tokens, route_mass, route_quotas
+from repro.retrieval.sharded import corpus_embs_spec
 
 _NEG = jnp.float32(-3e38)
 
@@ -46,7 +48,9 @@ def _local_maxsim_scores(doc_embs, doc_mask, queries):
 
     Lowered through the tiled ``maxsim_batch_op`` kernel path (Pallas on
     TPU, interpret on CPU, L-chunked jnp under REPRO_KERNEL_IMPL=ref) —
-    no dispatch target materializes the (B, N, L, T) similarity tensor."""
+    no dispatch target materializes the (B, N, L, T) similarity tensor.
+    ``doc_embs`` may be a quantized gather (``QuantTokens`` with a
+    (B, N, L, M) payload): the kernels dequantize per VMEM block."""
     h = maxsim_batch_op(doc_embs, doc_mask, queries)          # (B, N, T)
     h = jnp.where(jnp.any(doc_mask, axis=2)[:, :, None], h, 0.0)
     return jnp.sum(h, axis=-1)
@@ -72,6 +76,31 @@ def gather_candidates(corpus_embs, corpus_mask, cand_ids):
     (one shared gather => every flavor agrees on pad semantics).
     """
     return gather_tokens(corpus_embs, corpus_mask, cand_ids)
+
+
+def _gathered_docs_spec(every, corpus_format: str):
+    """shard_map PartitionSpec for a pre-gathered (B, N, L, M) candidate
+    operand, batch-sharded over ``every``. Quantized formats need a
+    ``QuantTokens`` OF specs mirroring the operand's pytree structure."""
+    dense = P(every, None, None, None)
+    if corpus_format == "bf16":
+        return dense
+    side = P(every, None, None)
+    residual = corpus_format == "residual"
+    return QuantTokens(data=dense, scales=side,
+                       codes=side if residual else None,
+                       codebook=P(None, None) if residual else None)
+
+
+def _require_dense(corpus_embs, where: str):
+    """Loud failure for the flavors whose math needs raw embedding rows
+    (stage-1 kNN, pooled summaries, the legacy per-query einsum)."""
+    if isinstance(corpus_embs, QuantTokens):
+        raise ValueError(
+            f"{where} requires a dense (bf16/f32) corpus; got a "
+            f"{corpus_embs.fmt!r}-quantized one. Rebuild the corpus with "
+            "corpus_format='bf16' or pick a quantization-aware flavor "
+            "(dense/bandit/streaming).")
 
 
 def _shard_index(every):
@@ -165,7 +194,7 @@ def _chunked_over_queries(score_chunk, args, chunk=512):
 
 
 def make_rerank_dense_step(mesh: Mesh, *, topk: int = 10,
-                           valid_docs=None):
+                           valid_docs=None, corpus_format: str = "bf16"):
     """Returns a jit-able step:
     (corpus_embs (C,L,M), corpus_mask (C,L), queries (B,T,M),
      cand_local (B, n_shards, N_loc) local slot ids, -1 pad)
@@ -177,9 +206,13 @@ def make_rerank_dense_step(mesh: Mesh, *, topk: int = 10,
     traffic is the (B, n_shards*N_loc) scorecard all-gather.
 
     ``valid_docs`` is ShardedCorpus's (n_shards,) ragged-tail table (see
-    ``_shard_global_ids``); omit it for an exactly-divisible corpus."""
+    ``_shard_global_ids``); omit it for an exactly-divisible corpus.
+    ``corpus_format`` must match the resident corpus (``ShardedCorpus
+    .fmt``) — shard_map in_specs are built before the operands arrive, so
+    the quantized pytree structure has to be declared up front."""
     every = tuple(mesh.axis_names)
     vd = None if valid_docs is None else jnp.asarray(valid_docs, jnp.int32)
+    embs_spec = corpus_embs_spec(mesh, corpus_format)
 
     def step(corpus_embs, corpus_mask, queries, cand_local):
         def shard_fn(c_embs, c_mask, q, cand):
@@ -198,7 +231,7 @@ def make_rerank_dense_step(mesh: Mesh, *, topk: int = 10,
 
         return jax.shard_map(
             shard_fn, mesh=mesh, check_vma=False,
-            in_specs=(P(every, None, None),
+            in_specs=(embs_spec,
                       P(every, None),
                       P(None, None, None),
                       P(None, every, None)),
@@ -246,6 +279,7 @@ def _vmapped_rerank(docs, dmask, queries, cand_ids, a, b, keys,
     top-K entry to the -inf sentinel so poisoned cells can never surface
     in a result list."""
     del alpha_scale, round_cap
+    _require_dense(docs, "the vmapped lockstep engine")
     scores, gids, cov, rounds = jax.vmap(_bandit_one_query(cfg))(
         docs, dmask, queries, cand_ids, a, b, keys)
     bad = ~jnp.isfinite(scores)
@@ -293,7 +327,7 @@ def _pooled_rerank(docs, dmask, queries, cand_ids, a, b, keys,
     occupancy, total rounds, lockstep waste, quarantined docs])."""
     Bq, N, L, M = docs.shape
     T = queries.shape[1]
-    stacked = docs.reshape(Bq * N, L, M)
+    stacked = corpus_reshape(docs, Bq * N)     # quantized: leaf-wise reshape
     stacked_mask = dmask.reshape(Bq * N, L)
     flat_q = queries.reshape(Bq * T, M)
 
@@ -343,7 +377,8 @@ def make_rerank_bandit_step(mesh: Mesh, *, topk: int = 10,
                             max_rounds: int = 64, max_block_docs: int = 0,
                             max_block_tokens: int = 0,
                             engine: str = "pooled",
-                            placement: str = "query", base_seed: int = 0):
+                            placement: str = "query", base_seed: int = 0,
+                            corpus_format: str = "bf16"):
     """Adaptive reranking step: the Col-Bandit over a sharded machine.
 
     ``placement`` picks which side of the gather stays resident:
@@ -367,7 +402,7 @@ def make_rerank_bandit_step(mesh: Mesh, *, topk: int = 10,
             block_docs=block_docs, block_tokens=block_tokens,
             max_rounds=max_rounds, max_block_docs=max_block_docs,
             max_block_tokens=max_block_tokens, engine=engine,
-            base_seed=base_seed)
+            base_seed=base_seed, corpus_format=corpus_format)
     if placement != "query":
         raise ValueError(f"unknown placement: {placement!r} "
                          "(expected 'query' or 'corpus')")
@@ -392,7 +427,7 @@ def make_rerank_bandit_step(mesh: Mesh, *, topk: int = 10,
                                  keys, cfg)
         return gids, cov
 
-    in_specs = (P(every, None, None, None),   # docs (B, N, L, M)
+    in_specs = (_gathered_docs_spec(every, corpus_format),  # docs (B,N,L,M)
                 P(every, None, None),          # dmask (B, N, L)
                 P(every, None, None),          # queries (B, T, M)
                 P(every, None),                # cand_ids (B, N)
@@ -446,6 +481,8 @@ def make_rerank_budgeted_step(mesh: Mesh, *, topk: int = 10,
     vd = None if valid_docs is None else jnp.asarray(valid_docs, jnp.int32)
 
     def step(corpus_embs, corpus_mask, queries, cand_local, tok_idx):
+        _require_dense(corpus_embs, "the budgeted serving step")
+
         def shard_fn(c_embs, c_mask, q, cand, toks):
             cand = cand[:, 0, :]                              # (B, N_loc)
             toks = toks[:, 0, :, :]                           # (B, N_loc, G')
@@ -492,6 +529,8 @@ def make_rerank_two_phase_step(mesh: Mesh, *, topk: int = 10,
     vd = None if valid_docs is None else jnp.asarray(valid_docs, jnp.int32)
 
     def step(corpus_embs, corpus_mask, corpus_pooled, queries, cand_local):
+        _require_dense(corpus_embs, "the two-phase serving step")
+
         def shard_fn(c_embs, c_mask, c_pool, q, cand):
             cand = cand[:, 0, :]                              # (B, N_loc)
             gids = _shard_global_ids(cand, c_embs.shape[0], every, vd)
@@ -686,7 +725,7 @@ def make_streaming_step(*, topk: int = 10, alpha_ef: float = 0.3,
         docs, dmask = gather_candidates(corpus_embs, corpus_mask, cand_ids)
         Bq, N, L, M = docs.shape
         T = queries.shape[1]
-        stacked = docs.reshape(Bq * N, L, M)
+        stacked = corpus_reshape(docs, Bq * N)
         stacked_mask = dmask.reshape(Bq * N, L)
         flat_q = queries.reshape(Bq * T, M)
 
@@ -756,13 +795,17 @@ def make_sharded_serving_step(mesh: Mesh, flavor: str, *, topk: int = 10,
                               block_docs: int = 8, block_tokens: int = 8,
                               max_rounds: int = -1, max_block_docs: int = 0,
                               max_block_tokens: int = 0,
-                              engine: str = "pooled", base_seed: int = 0):
+                              engine: str = "pooled", base_seed: int = 0,
+                              corpus_format: str = "bf16"):
     """Corpus-resident shard_map serving step (dense | bandit).
 
     The per-batch PRNG key is ``fold_in(key(base_seed), seed)`` with the
     shard index folded on top, so every (batch, shard) pair reveals an
     independent cell trajectory while the whole step stays a deterministic
-    function of (base_seed, seed, inputs)."""
+    function of (base_seed, seed, inputs). ``corpus_format`` must match
+    the resident ``ShardedCorpus.fmt``: a quantized corpus arrives as a
+    ``QuantTokens`` pytree, and the shard_map in_specs (declared here,
+    before tracing) must mirror its structure leaf-for-leaf."""
     every = tuple(mesh.axis_names)
     n_shards = 1
     for ax in every:
@@ -770,6 +813,7 @@ def make_sharded_serving_step(mesh: Mesh, flavor: str, *, topk: int = 10,
     if flavor not in ("dense", "bandit"):
         raise ValueError(f"unknown sharded serving flavor: {flavor!r}")
     rerank = _rerank_engine(engine)
+    embs_spec = corpus_embs_spec(mesh, corpus_format)
 
     def step(corpus_embs, corpus_mask, queries, cand_local, a_local,
              b_local, valid_docs, seed, healthy=None, alpha_scale=None,
@@ -843,7 +887,7 @@ def make_sharded_serving_step(mesh: Mesh, flavor: str, *, topk: int = 10,
 
         return jax.shard_map(
             shard_fn, mesh=mesh, check_vma=False,
-            in_specs=(P(every, None, None), P(every, None),
+            in_specs=(embs_spec, P(every, None),
                       P(None, None, None), P(None, every, None),
                       P(None, every, None, None), P(None, every, None, None),
                       P(None), P(), P(None), P(), P()),
@@ -893,8 +937,14 @@ def make_routed_serving_step(mesh: Mesh, flavor: str = "bandit", *,
                              block_docs: int = 8, block_tokens: int = 8,
                              max_rounds: int = -1, max_block_docs: int = 0,
                              max_block_tokens: int = 0,
-                             engine: str = "pooled", base_seed: int = 0):
+                             engine: str = "pooled", base_seed: int = 0,
+                             corpus_format: str = "bf16"):
     """Shard-local stage-1 serving step (dense | bandit), centroid-routed.
+
+    Dense corpora only: shard-local stage-1 runs kNN over the raw
+    (C_loc * L, M) token rows, which a compressed-resident corpus does not
+    expose (``corpus_format != 'bf16'`` raises). Use the gather flavors
+    (``make_sharded_serving_step``) for quantized corpora.
 
     Every shard runs the replicated centroid router over the full query
     batch (identical (B, n_shards) quota table everywhere — routing costs
@@ -917,6 +967,13 @@ def make_routed_serving_step(mesh: Mesh, flavor: str = "bandit", *,
         n_shards *= int(mesh.shape[ax])
     if flavor not in ("dense", "bandit"):
         raise ValueError(f"unknown routed serving flavor: {flavor!r}")
+    if corpus_format != "bf16":
+        raise ValueError(
+            "the routed serving step requires a dense (bf16/f32) corpus: "
+            "shard-local stage-1 kNN scans raw token rows, which a "
+            f"{corpus_format!r}-compressed corpus does not expose. Use "
+            "make_sharded_serving_step (host-routed gather flavors) for "
+            "quantized corpora.")
     rerank = _rerank_engine(engine)
     if prereveal_ann and engine == "vmapped":
         raise ValueError("prereveal_ann requires a pooled reveal engine "

@@ -33,6 +33,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 
 from repro.dist.sharding import corpus_axes, corpus_specs
+from repro.kernels.quant import CORPUS_FORMATS, QuantTokens, quantize
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,9 +43,16 @@ class ShardedCorpus:
     ``embs``/``mask`` (and ``pooled`` when present) are device arrays whose
     doc dim is sharded over every mesh axis; ``n_docs`` is the TRUE corpus
     size, ``docs_per_shard * n_shards`` the padded one.
+
+    ``fmt`` is the resident corpus format (``kernels.quant.CORPUS_FORMATS``).
+    For ``int8``/``residual``, ``embs`` is a ``QuantTokens`` pytree whose
+    payload/sidecar leaves shard exactly like a dense corpus (doc dim over
+    every axis; the residual codebook replicates) — the kernels dequantize
+    per VMEM block, so shard HBM holds compressed bytes only.
     """
 
-    embs: jax.Array                      # (C_pad, L, M) f32 | bf16
+    embs: jax.Array                      # (C_pad, L, M) f32 | bf16 |
+                                         #   QuantTokens (int8 + sidecars)
     mask: jax.Array                      # (C_pad, L) bool — pads all-False
     mesh: Mesh
     n_docs: int                          # genuine docs (C)
@@ -56,6 +64,7 @@ class ShardedCorpus:
     # ``repro.retrieval.corpus.CentroidRouter``; typed as object to keep
     # this module free of a corpus.py import cycle). Replicated arrays.
     router: Optional[object] = None
+    fmt: str = "bf16"                    # resident format (CORPUS_FORMATS)
 
     @property
     def padded_docs(self) -> int:
@@ -67,9 +76,30 @@ class ShardedCorpus:
         return jnp.asarray(self.valid_docs, jnp.int32)
 
 
+def corpus_embs_spec(mesh: Mesh, corpus_format: str = "bf16"):
+    """The shard_map/``NamedSharding`` spec for a corpus ``embs`` operand.
+
+    Dense formats get the plain ``corpus_specs(mesh)["embs"]`` PartitionSpec;
+    ``int8``/``residual`` get a ``QuantTokens`` OF PartitionSpecs whose tree
+    structure matches the resident pytree leaf-for-leaf (shard_map in_specs
+    must mirror operand structure). Callers building specs before they hold
+    the corpus pass the format string instead of inspecting arrays."""
+    specs = corpus_specs(mesh)
+    if corpus_format == "bf16":
+        return specs["embs"]
+    if corpus_format not in CORPUS_FORMATS:
+        raise ValueError(f"unknown corpus format {corpus_format!r}; "
+                         f"expected one of {CORPUS_FORMATS}")
+    return QuantTokens(
+        data=specs["embs"], scales=specs["scales"],
+        codes=specs["codes"] if corpus_format == "residual" else None,
+        codebook=specs["codebook"] if corpus_format == "residual" else None)
+
+
 def shard_corpus(embs, mask, mesh: Mesh, *, pooled=None, router=None,
                  n_centroids: int = 0, router_iters: int = 10,
-                 router_seed: int = 0) -> ShardedCorpus:
+                 router_seed: int = 0,
+                 corpus_format: str = "bf16") -> ShardedCorpus:
     """Pad the doc dim to the mesh's shard count and place every corpus
     array with its ``corpus_specs`` NamedSharding.
 
@@ -77,11 +107,26 @@ def shard_corpus(embs, mask, mesh: Mesh, *, pooled=None, router=None,
     HBM; every kernel op accumulates in f32); other dtypes normalize to
     f32.
 
+    ``corpus_format`` selects the resident encoding (``"bf16"`` keeps the
+    dense behavior above — source dtype passes through). ``"int8"``
+    quantizes each (doc, token) row symmetrically against a resident bf16
+    scale; ``"residual"`` additionally stores a centroid id per row and
+    int8-quantizes only the residual against the router codebook
+    (ColBERTv2-style), so the residual path REQUIRES a router —
+    ``n_centroids`` defaults to 8 when neither a router nor a count is
+    given. Quantization happens host-side on the padded arrays, so pad
+    rows encode with scale 0 and decode to exact zeros (int8) or
+    ``centroids[0]`` (residual); either way their all-False token mask
+    keeps them out of every max.
+
     ``n_centroids > 0`` additionally builds the shard-local stage-1
     centroid router (``repro.retrieval.corpus.build_router``) over the
     same contiguous-block placement, at shard time; a prebuilt ``router``
     may be passed instead. Either way its (tiny) arrays are placed
     replicated on the mesh."""
+    if corpus_format not in CORPUS_FORMATS:
+        raise ValueError(f"unknown corpus format {corpus_format!r}; "
+                         f"expected one of {CORPUS_FORMATS}")
     embs = np.asarray(embs)
     if embs.dtype != jnp.bfloat16:
         embs = embs.astype(np.float32)
@@ -104,6 +149,8 @@ def shard_corpus(embs, mask, mesh: Mesh, *, pooled=None, router=None,
         if pad:
             pooled = np.pad(pooled, ((0, pad), (0, 0)))
         pooled_dev = put(pooled, specs["pooled"])
+    if corpus_format == "residual" and router is None and not n_centroids:
+        n_centroids = 8  # the residual codebook IS the router's centroids
     if router is None and n_centroids:
         # late import: corpus.py is the facade ABOVE this module
         from repro.retrieval.corpus import build_router
@@ -111,6 +158,13 @@ def shard_corpus(embs, mask, mesh: Mesh, *, pooled=None, router=None,
                               docs_per_shard=c_loc,
                               n_centroids=n_centroids, n_iters=router_iters,
                               seed=router_seed, valid_docs=valid)
+    codebook = None
+    if corpus_format == "residual":
+        if router is None:
+            raise ValueError(
+                "corpus_format='residual' needs a centroid codebook: pass "
+                "a prebuilt router or n_centroids > 0")
+        codebook = np.asarray(router.centroids, np.float32)
     if router is not None:
         router = dataclasses.replace(
             router,
@@ -118,10 +172,23 @@ def shard_corpus(embs, mask, mesh: Mesh, *, pooled=None, router=None,
                           specs["centroids"]),
             shard_mass=put(np.asarray(router.shard_mass, np.float32),
                            specs["shard_mass"]))
+    if corpus_format == "bf16":
+        embs_dev = put(embs, specs["embs"])
+    else:
+        qt = quantize(np.asarray(embs, np.float32), corpus_format,
+                      codebook=codebook)
+        embs_dev = QuantTokens(
+            data=put(np.asarray(qt.data), specs["embs"]),
+            scales=put(np.asarray(qt.scales), specs["scales"]),
+            codes=None if qt.codes is None else
+            put(np.asarray(qt.codes), specs["codes"]),
+            codebook=None if qt.codebook is None else
+            put(np.asarray(qt.codebook), specs["codebook"]))
     return ShardedCorpus(
-        embs=put(embs, specs["embs"]), mask=put(mask, specs["mask"]),
+        embs=embs_dev, mask=put(mask, specs["mask"]),
         mesh=mesh, n_docs=C, n_shards=n_shards, docs_per_shard=c_loc,
-        valid_docs=valid, pooled=pooled_dev, router=router)
+        valid_docs=valid, pooled=pooled_dev, router=router,
+        fmt=corpus_format)
 
 
 def _routing_placement(cand_ids: np.ndarray, docs_per_shard: int,

@@ -48,6 +48,8 @@ from repro.dist.fault import (ChaosKill, DeadlineBatcher, FaultPlan,
                               apply_delay)
 from repro.kernels import tuning
 from repro.kernels.ops import autotune_op
+from repro.kernels.quant import (CORPUS_FORMATS, corpus_nbytes,
+                                 format_ordinal)
 from repro.retrieval.ann import generate_candidates
 from repro.retrieval.corpus import Corpus, build_corpus
 from repro.retrieval.service import (init_stream_state,
@@ -113,6 +115,17 @@ class EngineConfig:
     # shard_map steps — per-shard scorecards are the only cross-shard
     # traffic, and warmup()'s zero-recompile contract is unchanged.
     mesh_axes: Tuple[Tuple[str, int], ...] = ()
+    # Resident corpus format (kernels.quant.CORPUS_FORMATS): "bf16" keeps
+    # the corpus dense at its source dtype (the seed path, bit-identical
+    # parity oracle); "int8" re-encodes it as per-(doc,token)-row symmetric
+    # int8 + bf16 scales (~4x HBM reduction); "residual" stores a centroid
+    # id + int8 residual against the spherical-k-means router codebook.
+    # Dequantization happens INSIDE the scoring kernels — the compressed
+    # payload is what crosses every program boundary, and the audit's
+    # hlo-int8-residency rule asserts exactly that. Quantized engines
+    # require candidate-carrying requests (stage-1 ANN scans raw token
+    # rows) and are incompatible with stage1="local".
+    corpus_format: str = "bf16"
     # stage-1 ANN (requests without a candidate list)
     stage1_kprime: int = 8
     stage1_candidates: int = 0        # 0 => smallest candidate bucket
@@ -475,6 +488,17 @@ class RetrievalEngine:
         if self.cfg.stage1 not in ("host", "local"):
             raise ValueError(f"unknown stage1 placement {self.cfg.stage1!r} "
                              "(expected 'host' or 'local')")
+        if self.cfg.corpus_format not in CORPUS_FORMATS:
+            raise ValueError(
+                f"unknown corpus_format {self.cfg.corpus_format!r} "
+                f"(expected one of {sorted(CORPUS_FORMATS)})")
+        self._quantized = self.cfg.corpus_format != "bf16"
+        if self._quantized and self.cfg.stage1 == "local":
+            raise ValueError(
+                "stage1='local' routes candidates by scanning raw corpus "
+                "token rows inside the shard_map and cannot serve a "
+                f"{self.cfg.corpus_format!r} corpus; use stage1='host' "
+                "with candidate-carrying requests")
         mesh = None
         if self.cfg.mesh_axes:
             names = tuple(a for a, _ in self.cfg.mesh_axes)
@@ -491,7 +515,8 @@ class RetrievalEngine:
         self.corpus: Corpus = build_corpus(
             corpus_embs, corpus_mask, mesh=mesh,
             n_centroids=self.cfg.stage1_centroids if self._routed else 0,
-            router_seed=self.cfg.seed)
+            router_seed=self.cfg.seed,
+            corpus_format=self.cfg.corpus_format)
         self.corpus_embs = self.corpus.embs
         self.corpus_mask = self.corpus.mask
         self._router_args = self.corpus.router_arrays()
@@ -640,6 +665,7 @@ class RetrievalEngine:
                 S = self.sharded.n_shards
                 step = make_sharded_serving_step(
                     self.sharded.mesh, flavor, topk=cfg.max_k,
+                    corpus_format=cfg.corpus_format,
                     alpha_ef=cfg.alpha_ef, delta=cfg.delta,
                     block_docs=cfg.block_docs,
                     block_tokens=cfg.block_tokens,
@@ -747,6 +773,10 @@ class RetrievalEngine:
             exe = jax.jit(step, donate_argnums=(6,)).lower(*args).compile()
         elif key[0] == "stage1":
             _, tb = key
+            if self._quantized:
+                raise ValueError(
+                    "stage-1 ANN needs a dense corpus; quantized engines "
+                    "serve candidate-carrying requests only")
             nb, kp, support = self._stage1_n, cfg.stage1_kprime, cfg.support
 
             def stage1(ce, cm, q):
@@ -774,6 +804,11 @@ class RetrievalEngine:
         L, M = self.corpus_embs.shape[1], self.corpus_embs.shape[2]
         half = max(cfg.block_docs // 2, 1)
         G = max(cfg.block_tokens, 1)
+        # Mirror ops._fmt_dims: a quantized launch keys its tuning bucket
+        # with the format ordinal, so the tuned bucket IS the launched
+        # bucket; bf16 adds nothing (persisted tables stay valid).
+        fmt = ({} if not self._quantized
+               else {"FMT": format_ordinal(cfg.corpus_format)})
         out: List[Tuple[str, Dict[str, int]]] = []
         for tb in self.buckets.token_buckets:
             for nb in self.buckets.cand_buckets:
@@ -781,7 +816,7 @@ class RetrievalEngine:
                 # (route_batch packs n_local=nb slots per shard).
                 if self.flavor_for(nb) == "dense":
                     out.append(("maxsim_batch",
-                                dict(B=B, N=nb, T=tb, L=L, M=M)))
+                                dict(B=B, N=nb, T=tb, L=L, M=M, **fmt)))
                 else:
                     # Frontier reveal launch geometry — MUST mirror
                     # core.frontier's width math or the tuned bucket is
@@ -793,7 +828,8 @@ class RetrievalEngine:
                                  max(nb, 1))
                     rows = B * 2 * (half if half_w > half else half_w)
                     g = min(max(cfg.max_block_tokens, G), max(tb, 1))
-                    dims = dict(B=rows, G=g, L=L, M=M, D=B * nb, TQ=B * tb)
+                    dims = dict(B=rows, G=g, L=L, M=M, D=B * nb, TQ=B * tb,
+                                **fmt)
                     out.append(("fused_reveal", dims))
                     out.append(("gather_maxsim", dims))
         return out
@@ -810,8 +846,13 @@ class RetrievalEngine:
             if tuning.bucket_key(op, dims) in tuning.table():
                 continue
             # Time at the corpus dtype: a bf16 corpus moves half the bytes
-            # per tile, and the winning block_l can differ from f32's.
-            autotune_op(op, dims, dtype=self.corpus_embs.dtype)
+            # per tile, and the winning block_l can differ from f32's. A
+            # quantized bucket carries its FMT dim — autotune_op encodes
+            # the synthetic corpus into that format itself, so the dense
+            # dtype here covers the queries (and the pre-encode source).
+            dtype = (jnp.float32 if self._quantized
+                     else self.corpus_embs.dtype)
+            autotune_op(op, dims, dtype=dtype)
             measured += 1
         self.metrics.autotune_s += time.perf_counter() - t0
         self.metrics.autotune_buckets += measured
@@ -839,7 +880,11 @@ class RetrievalEngine:
                     tuning.bucket_key(op, dims)
                     for op, dims in self._autotune_dims()})
         for tb in self.buckets.token_buckets:
-            self._executable(("stage1", tb))
+            if not self._quantized:
+                # Stage-1 ANN traces over raw token rows; quantized engines
+                # reject candidate-less requests at submit, so the bucket
+                # is unreachable and compiling it would fail.
+                self._executable(("stage1", tb))
             if self._routed:
                 # Candidate-less batches dispatch to the one-shard_map
                 # routed pipeline; the host stage-1/step executables stay
@@ -860,7 +905,47 @@ class RetrievalEngine:
     # -- compile-contract audit -------------------------------------------
 
     _HLO_DTYPES = {"bfloat16": "bf16", "float16": "f16", "float32": "f32",
-                   "float64": "f64"}
+                   "float64": "f64", "int8": "s8"}
+
+    def _bucket_peak_bound(self, key: tuple) -> int:
+        """Expected peak temp-buffer bound for ONE bucket, derived from its
+        launch geometry and the corpus residency format (instead of the old
+        engine-wide 8x-corpus blanket): the gathered candidate working set
+        in resident-format bytes, the f32 reconstruction/similarity copies
+        the scorers materialize, and (stage-1 only) the full-index
+        similarity scan. Factors are deliberately generous — interpret-mode
+        kernels materialize more than a TPU launch — but the bound now
+        scales with the bucket, so a bucket that materializes another
+        bucket's (or the whole corpus's) working set still trips
+        ``hlo-peak-buffer``. ``cfg.audit_peak_bytes`` overrides."""
+        cfg = self.cfg
+        B = cfg.batch_size
+        rows, L, M = self.corpus_embs.shape
+        corpus_bytes = corpus_nbytes(self.corpus_embs)
+        if self.corpus.mesh is not None:
+            # Per-device SPMD program: shard-local corpus, shard-local temps.
+            shards = max(self.corpus.n_shards, 1)
+            rows //= shards
+            corpus_bytes //= shards
+        if key[0] == "step":
+            tb, nb = key[2], key[3]
+        elif key[0] == "stream":
+            tb, nb = key[1], key[2]
+        elif key[0] == "routed":
+            tb, nb = key[2], self._stage1_n
+        else:                                     # ("stage1", tb)
+            tb, nb = key[1], self._stage1_n
+        fmt = cfg.corpus_format
+        if fmt == "bf16":
+            row_bytes = L * M * self.corpus_embs.dtype.itemsize
+        else:
+            # int8 payload + bf16 scale plane (+ i32 centroid ids).
+            row_bytes = L * M + L * (2 + (4 if fmt == "residual" else 0))
+        gathered = B * nb * row_bytes             # resident-format gather
+        work = B * nb * L * max(M, tb) * 4        # f32 dequant/sim copies
+        if key[0] in ("stage1", "routed"):
+            work += B * tb * rows * L * 4         # full-index token kNN
+        return 8 * (gathered + work) + corpus_bytes + (256 << 20)
 
     def _audit_spec(self, key: tuple) -> AuditSpec:
         """The per-bucket compile contract ``audit()`` asserts.
@@ -873,16 +958,21 @@ class RetrievalEngine:
         corpus legitimately all-gathers the index (the documented
         exemption: candidate-less traffic belongs on the routed path), so
         that one key is unbudgeted. Everything off-mesh gets budget 0.
+
+        Boundary residency: a bf16 corpus arms the promotion rule; a
+        quantized corpus (``corpus_embs`` is a QuantTokens whose payload
+        dtype is int8) arms ``hlo-int8-residency`` — the compressed payload
+        must enter every executable as an s8 parameter, never widened.
         """
         cfg = self.cfg
         corpus_dtype = self._HLO_DTYPES.get(str(self.corpus_embs.dtype))
-        if cfg.audit_require_bf16:
+        if cfg.audit_require_bf16 and corpus_dtype != "s8":
             # Declare the contract dtype rather than the observed one: a
             # corpus already resident in f32 then trips the promotion rule
-            # on its own (corpus-sized f32) entry parameters.
+            # on its own (corpus-sized f32) entry parameters. A quantized
+            # corpus is already under the stricter int8 rule.
             corpus_dtype = "bf16"
         corpus_elems = int(np.prod(self.corpus_embs.shape))
-        corpus_bytes = corpus_elems * self.corpus_embs.dtype.itemsize
         meshed = self.corpus.mesh is not None
         if meshed:
             # Optimized HLO is per-device SPMD: entry parameters carry
@@ -895,7 +985,7 @@ class RetrievalEngine:
             budget = None
         else:
             budget = 0
-        peak = cfg.audit_peak_bytes or (8 * corpus_bytes + (256 << 20))
+        peak = cfg.audit_peak_bytes or self._bucket_peak_bound(key)
         return AuditSpec(collective_budget=budget, peak_bytes=peak,
                          corpus_dtype=corpus_dtype,
                          corpus_elems=corpus_elems)
@@ -935,6 +1025,13 @@ class RetrievalEngine:
         if q.ndim != 2 or q.shape[1] != self.corpus_embs.shape[2]:
             raise ValueError(f"query must be (T, {self.corpus_embs.shape[2]})")
         self.buckets.token_bucket(q.shape[0])          # validate fit
+        if request.cand_ids is None and self._quantized:
+            # Stage-1 ANN (retrieval.ann.generate_candidates) scans raw
+            # token rows; a compressed corpus only serves the rerank path.
+            raise ValueError(
+                "candidate-less requests need the engine's stage-1 ANN, "
+                f"which a {self.cfg.corpus_format!r} corpus cannot run — "
+                "provide cand_ids or serve with corpus_format='bf16'")
         if request.cand_ids is not None:
             self.buckets.cand_bucket(len(request.cand_ids))
             cand = np.asarray(request.cand_ids)

@@ -287,3 +287,63 @@ assert rec.shard_rounds is not None and sum(rec.shard_rounds) > 0
 print("ENGINE_BANDIT_OK")
     """, n_devices=4)
     assert "ENGINE_BANDIT_OK" in out
+
+
+def test_sharded_corpus_format_parity():
+    """ISSUE 10: a quantized (int8) corpus sharded 4 ways returns the
+    IDENTICAL top-K as the same-format 1-shard layout, for both serving
+    flavors — the compressed payload decodes to the same f32 rows on
+    every mesh, so sharding and quantization commute. Resident dtype and
+    bytes are pinned too: the int8 corpus must ship as an s8 payload at
+    >=3.5x less than the f32 dense bytes."""
+    out = run_in_subprocess(_SETUP + """
+from repro.kernels.quant import corpus_nbytes
+from repro.retrieval.service import make_sharded_serving_step
+
+a = np.full((B, N, T), -1.0, np.float32)      # valid unit-cosine support
+bsup = np.ones((B, N, T), np.float32)
+a_l4 = route_aligned(a, cand, cand_l4, sc.docs_per_shard)
+b_l4 = route_aligned(bsup, cand, cand_l4, sc.docs_per_shard)
+a_l1, b_l1 = a[:, None], bsup[:, None]
+bf16_bytes = {}
+
+for fmt in ("bf16", "int8"):
+    sc4 = shard_corpus(emb, msk, mesh4, corpus_format=fmt)
+    sc1 = shard_corpus(emb, msk, mesh1, corpus_format=fmt)
+    bf16_bytes.setdefault(fmt, corpus_nbytes(sc4.embs))
+    if fmt == "int8":
+        assert str(sc4.embs.dtype) == str(sc1.embs.dtype) == "int8"
+        # same padded doc count on both sides: 2x bf16 resident bytes is
+        # the f32-dense equivalent the >=3.5x compression gate is against
+        assert 2 * bf16_bytes["bf16"] / bf16_bytes["int8"] >= 3.5
+    for flavor, kw in (("dense", {}),
+                       ("bandit", dict(alpha_ef=1e9, block_docs=4,
+                                       block_tokens=4, max_rounds=-1))):
+        s4 = make_sharded_serving_step(mesh4, flavor, topk=5,
+                                       corpus_format=fmt, **kw)
+        s1 = make_sharded_serving_step(mesh1, flavor, topk=5,
+                                       corpus_format=fmt, **kw)
+        g4 = s4(sc4.embs, sc4.mask, q, jnp.asarray(cand_l4),
+                jnp.asarray(a_l4), jnp.asarray(b_l4),
+                sc4.valid_docs_device(), jnp.int32(0))
+        g1 = s1(sc1.embs, sc1.mask, q, jnp.asarray(cand_l1),
+                jnp.asarray(a_l1), jnp.asarray(b_l1),
+                sc1.valid_docs_device(), jnp.int32(0))
+        check_topk(g4[0], g4[1], g1[0], g1[1], f"{fmt}/{flavor}")
+
+# cross-format fidelity: int8 dense scores track bf16 dense closely
+d_bf = make_sharded_serving_step(mesh4, "dense", topk=5,
+                                 corpus_format="bf16")
+d_i8 = make_sharded_serving_step(mesh4, "dense", topk=5,
+                                 corpus_format="int8")
+sb = d_bf(shard_corpus(emb, msk, mesh4).embs, sc.mask, q,
+          jnp.asarray(cand_l4), jnp.asarray(a_l4), jnp.asarray(b_l4),
+          sc.valid_docs_device(), jnp.int32(0))
+si = d_i8(shard_corpus(emb, msk, mesh4, corpus_format="int8").embs,
+          sc.mask, q, jnp.asarray(cand_l4), jnp.asarray(a_l4),
+          jnp.asarray(b_l4), sc.valid_docs_device(), jnp.int32(0))
+np.testing.assert_allclose(np.sort(np.asarray(sb[0])),
+                           np.sort(np.asarray(si[0])), atol=0.2)
+print("FMT_PARITY_OK")
+    """, n_devices=4)
+    assert "FMT_PARITY_OK" in out
